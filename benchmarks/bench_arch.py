@@ -1,0 +1,101 @@
+"""Paper Table V + Sec III-C analogue — end-to-end HRL agent inference.
+
+FPS of the full E2HRL agent (Q-FC and Q-LSTM variants) per precision
+on this host's SIMD units, plus analytic GOP/frame, energy proxy, and
+the learner->actor sync payload (Q-Actor's communication win).
+
+Paper reference points: FC-HRL 1110 FPS fp32 -> Q-FC 2835 FPS (2.55x);
+LSTM-HRL 435 -> Q-LSTM 924 (2.12x); CPU 6.2 ms fp32, 2.6x int8.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, energy_proxy_mj, timeit
+from repro.configs.e2hrl import CONFIG, CONFIG_LSTM
+from repro.core.policy import get_policy
+from repro.core.quantizer import quantize_params, quantized_nbytes
+from repro.models import hrl
+from repro.nn.module import unbox
+
+BATCH = 512         # frames per call: amortized-steady-state serving
+
+# TPU v5e projection: the agent is tiny, so serving is weight+activation
+# bandwidth bound; per-precision the roofline FPS scales with
+# bytes-moved (4x fewer at int8) until the 2x int8 MXU compute cap.
+PEAK = {8: 394e12, 16: 197e12, 32: 197e12 / 8}
+HBM = 819e9
+
+
+def agent_macs(cfg) -> float:
+    """Analytic MACs per frame (conv + fc + subgoal + heads)."""
+    h, w, c = cfg.obs_shape
+    macs = 0.0
+    cin = c
+    for cout in cfg.conv_channels:
+        h, w = (h + 1) // 2, (w + 1) // 2
+        macs += h * w * cout * cin * cfg.conv_kernel ** 2
+        cin = cout
+    flat = h * w * cin
+    macs += flat * cfg.embed_dim
+    if cfg.subgoal_kind == "fc":
+        macs += cfg.embed_dim * cfg.subgoal_hidden \
+            + cfg.subgoal_hidden * cfg.subgoal_dim
+    else:
+        macs += 4 * (cfg.embed_dim + cfg.subgoal_hidden) \
+            * cfg.subgoal_hidden + cfg.subgoal_hidden * cfg.subgoal_dim
+    macs += (cfg.embed_dim + cfg.subgoal_dim) * (cfg.n_actions + 1)
+    return macs
+
+
+def run():
+    key = jax.random.PRNGKey(0)
+    for cfg, label in [(CONFIG, "Q-FC"), (CONFIG_LSTM, "Q-LSTM")]:
+        params_fp = unbox(hrl.init(key, cfg))
+        obs = jax.random.uniform(
+            key, (BATCH,) + ((4,) if cfg.subgoal_kind == "lstm"
+                             else ()) + cfg.obs_shape)
+        macs = agent_macs(cfg) * (4 if cfg.subgoal_kind == "lstm" else 1)
+
+        base_fps = None
+        for pol_name, bits in [("fxp32", 32), ("fxp16", 16), ("fxp8", 8)]:
+            policy = get_policy(pol_name)
+            params = (quantize_params(params_fp, policy)
+                      if policy.quantized_w else params_fp)
+
+            def step(p, o, pol=policy):
+                logits, value, _ = hrl.apply(p, o, cfg, pol)
+                return jnp.argmax(logits, -1)
+
+            f = jax.jit(step)
+            sec = timeit(f, params, obs)
+            fps = BATCH / sec
+            if bits == 32:
+                base_fps = fps
+            stored, fp32b = quantized_nbytes(params)
+            e = energy_proxy_mj(macs, bits, stored) / 1  # per frame
+            # TPU roofline projection per frame: weights + activations
+            # traffic at this precision vs the MXU rate
+            act_bytes = BATCH * 32 * 32 * 3 * (bits // 8)
+            t_mem = (stored + act_bytes) / HBM
+            t_cmp = 2 * macs * BATCH / PEAK[bits]
+            tpu_fps = BATCH / max(t_mem, t_cmp)
+            emit("arch", f"{label}_{pol_name}",
+                 fps=round(fps),
+                 ms_per_frame=round(1e3 * sec / BATCH, 3),
+                 gop_frame=round(2 * macs / 1e9, 4),
+                 gops=round(2 * macs * fps / 1e9, 2),
+                 weight_bytes=stored,
+                 energy_proxy_mj_frame=round(e, 4),
+                 speedup_vs_fxp32=round(fps / base_fps, 2),
+                 tpu_roofline_fps=f"{tpu_fps:.2e}")
+
+        # Q-Actor sync payload per weight broadcast
+        for bits in (32, 16, 8):
+            from repro.rl.actor_learner import pack_weights, sync_bytes
+            packed = pack_weights(params_fp, bits)
+            payload, fp32b = sync_bytes(packed)
+            emit("arch", f"{label}_sync_{bits}b",
+                 payload_bytes=payload,
+                 reduction_vs_fp32=round(fp32b / payload, 2))

@@ -1,0 +1,70 @@
+"""Beyond-paper table — the Q-MAC/V-ACT fabric on LM workloads.
+
+The paper's Sec. IV claims the compute blocks generalize to DNNs; here
+we measure the generalization on a real (reduced) LM: per-precision
+train-step and decode-step wall clock + PTQ weight footprint + int8 KV
+cache footprint, on the host CPU.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timeit
+from repro.configs.registry import get_arch
+from repro.core.policy import get_policy
+from repro.core.quantizer import quantize_params, quantized_nbytes
+from repro.launch.steps import make_train_step
+from repro.models.registry import model_for
+from repro.nn.module import unbox
+from repro.optim import adamw_init
+
+B, S = 4, 128
+
+
+def run():
+    cfg = get_arch("tinyllama-1.1b").reduced().replace(
+        d_model=256, d_ff=512, n_layers=4, vocab=1024)
+    model = model_for(cfg)
+    params = unbox(model.init(jax.random.PRNGKey(0), cfg))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                              cfg.vocab, dtype=jnp.int32)
+    batch = {"tokens": toks, "labels": toks}
+    opt = adamw_init(params)
+
+    base = None
+    for pol in ("fp32", "w8a8"):
+        policy = get_policy(pol)
+        step = jax.jit(make_train_step(cfg, None, policy))
+        sec = timeit(step, params, opt, batch, iters=5)
+        if base is None:
+            base = sec
+        emit("lm", f"train_{pol}", ms=round(sec * 1e3, 1),
+             tok_s=round(B * S / sec),
+             speedup=round(base / sec, 2))
+
+    # serving: PTQ + int8 KV decode
+    for pol in ("fp32", "w8a8kv8"):
+        policy = get_policy(pol)
+        p = quantize_params(params, policy) if policy.quantized_w \
+            else params
+        stored, fp32b = quantized_nbytes(p)
+        logits, caches = jax.jit(
+            lambda p, t, pol=policy: model.prefill(p, t, cfg, pol,
+                                                   pol.kv_bits))(p, toks)
+        kv_bytes = sum(l.size * l.dtype.itemsize
+                       for l in jax.tree.leaves(caches))
+
+        def dec(p, tok, caches, pol=policy):
+            return model.decode_step(p, tok, caches,
+                                     jnp.asarray(S, jnp.int32), cfg,
+                                     pol, pol.kv_bits)
+
+        f = jax.jit(dec)
+        tok = jnp.zeros((B, 1), jnp.int32)
+        sec = timeit(f, p, tok, caches, iters=5)
+        emit("lm", f"decode_{pol}",
+             ms_per_token=round(sec * 1e3, 2),
+             weight_mib=round(stored / 2**20, 2),
+             weight_vs_fp32=round(fp32b / stored, 2),
+             kv_cache_mib=round(kv_bytes / 2**20, 2))

@@ -1,0 +1,58 @@
+"""Paper Tables II & III analogue — Q-MAC per-precision throughput.
+
+The FPGA tables report LUT/FF/power per precision; the architecture-
+neutral content is the *precision->throughput/energy scaling law* of
+the multi-precision MAC fabric.  We measure:
+
+  * CPU wall-clock GOP/s of the quantized matmul per FxP mode (XLA
+    int8/int16/fp32 paths — the SIMD units the paper's CPU baseline
+    uses via Arm NEON are here AVX);
+  * bytes moved per op (the energy proxy driver);
+  * TPU-projected GOP/s from roofline terms (197/394 TOPS peaks);
+  * energy-efficiency proxy (GOPS/W-equivalent via pJ/op model).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import (PJ_PER_MAC, emit, energy_proxy_mj,
+                               timeit)
+from repro.core.policy import get_policy
+from repro.core.qmatmul import q_matmul
+
+M = N = K = 1024
+MACS = M * N * K
+
+
+def run():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (M, K))
+    w = jax.random.normal(key, (K, N))
+
+    results = {}
+    for name, bits in [("fxp8", 8), ("fxp16", 16), ("fxp32", 32)]:
+        policy = get_policy(name)
+        f = jax.jit(lambda x, w, p=policy: q_matmul(x, w, p))
+        sec = timeit(f, x, w)
+        gops = 2 * MACS / sec / 1e9
+        # weight bytes/op dominate at serving batch sizes
+        wbytes = K * N * (bits // 8)
+        abytes = (M * K + M * N) * 4
+        e_mj = energy_proxy_mj(MACS, bits, wbytes + abytes)
+        results[bits] = gops
+        emit("qmac", f"{name}",
+             cpu_gops=round(gops, 2),
+             sec_per_matmul=round(sec * 1e3, 3),
+             weight_bytes=wbytes,
+             pj_per_mac=PJ_PER_MAC[bits],
+             energy_mj=round(e_mj, 4),
+             tpu_peak_gops=394_000 if bits == 8 else
+             (197_000 if bits == 16 else 24_600))
+
+    # the paper's headline: throughput scaling vs the 32-bit baseline
+    emit("qmac", "scaling_vs_fxp32",
+         fxp8=round(results[8] / results[32], 2),
+         fxp16=round(results[16] / results[32], 2),
+         paper_simd_lanes="16/4/1",
+         paper_cpu_speedup="2.6x/1.4x (paper Sec III-C)")

@@ -1,0 +1,136 @@
+"""Paper Fig. 3a analogue — reward parity: quantized vs FP32 actors.
+
+PPO (the paper's training algorithm), A2C and DQN on pure-JAX CartPole
+with the actor's rollout policy at FP32 vs FxP8 (int8 weights AND
+activations + V-ACT activations).  The claim under test: Q8 actors
+reach the same reward, enabling the throughput/energy savings for free.
+
+Budgets are CPU-friendly; the criterion is parity (Q8 within ~15% of
+FP32 at equal step budget), not absolute SOTA returns.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.core.policy import get_policy
+from repro.nn.module import unbox
+from repro.optim import AdamWConfig, adamw_init, adamw_update, constant
+from repro.rl import PPOConfig, batch_from_traj, init_envs, rollout
+from repro.rl.actor_learner import pack_weights, unpack_weights
+from repro.rl.dqn import (DQNConfig, dqn_loss, egreedy, epsilon,
+                          replay_add, replay_init, replay_sample)
+from repro.rl.envs import get_env
+from repro.rl.nets import (mlp_ac_apply, mlp_ac_init, mlp_q_apply,
+                           mlp_q_init)
+from repro.rl.ppo import a2c_loss, minibatch_epochs, ppo_loss
+from repro.rl.rollout import episode_returns
+
+ENV = get_env("cartpole")
+N_ENVS, T = 32, 128
+
+
+def train_pg(algo: str, actor_policy, iters: int, seed: int = 0):
+    """PPO/A2C with (optionally quantized) rollout actors."""
+    key = jax.random.PRNGKey(seed)
+    params = unbox(mlp_ac_init(key, 4, ENV["n_actions"]))
+    opt = adamw_init(params)
+    ocfg = AdamWConfig(weight_decay=0.0, max_grad_norm=0.5)
+    pcfg = PPOConfig(epochs=4 if algo == "ppo" else 1,
+                     minibatches=4 if algo == "ppo" else 1)
+    sched = constant(3e-3)
+    loss_fn = ppo_loss if algo == "ppo" else a2c_loss
+    est, obs = init_envs(ENV, jax.random.PRNGKey(seed + 1), N_ENVS)
+    learner_apply = lambda p, o: mlp_ac_apply(p, o, None)
+
+    @jax.jit
+    def it(params, opt, est, obs, key):
+        k1, k2 = jax.random.split(key)
+        actor_params = unpack_weights(pack_weights(
+            params, 8 if actor_policy else 32))
+        actor_apply = lambda p, o: mlp_ac_apply(p, o, actor_policy)
+        res = rollout(actor_params, ENV, actor_apply, k1, est, obs, T)
+        batch = batch_from_traj(res.traj, res.last_value, pcfg)
+
+        def opt_step(p, s, g):
+            p, s, _ = adamw_update(g, s, p, sched, ocfg)
+            return p, s
+
+        params, opt, _ = minibatch_epochs(k2, params, opt, batch,
+                                          learner_apply, pcfg,
+                                          opt_step, loss_fn=loss_fn)
+        ret, _ = episode_returns(res.traj)
+        return params, opt, res.final_env, res.final_obs, ret
+
+    rets = []
+    for i in range(iters):
+        key, sub = jax.random.split(key)
+        params, opt, est, obs, ret = it(params, opt, est, obs, sub)
+        rets.append(float(ret))
+    tail = rets[-5:]
+    return sum(tail) / len(tail), rets
+
+
+def train_dqn(actor_policy, iters: int, seed: int = 0):
+    key = jax.random.PRNGKey(seed)
+    params = unbox(mlp_q_init(key, 4, ENV["n_actions"]))
+    target = params
+    opt = adamw_init(params)
+    ocfg = AdamWConfig(weight_decay=0.0)
+    cfg = DQNConfig(eps_decay_steps=iters // 2)
+    sched = constant(1e-3)
+    buf = replay_init(8192, (4,))
+    est, obs = init_envs(ENV, jax.random.PRNGKey(seed + 1), N_ENVS)
+    returns, acc, done_cnt = [], jnp.zeros(N_ENVS), 0
+
+    @jax.jit
+    def step(params, target, opt, buf, est, obs, i, key):
+        k1, k2 = jax.random.split(key)
+        ap = unpack_weights(pack_weights(params,
+                                         8 if actor_policy else 32))
+        q = mlp_q_apply(ap, obs, actor_policy)
+        a = egreedy(k1, q, epsilon(i, cfg))
+        est2, obs2, r, d = jax.vmap(ENV["step"])(est, a)
+        buf = replay_add(buf, obs, a, r, obs2, d)
+        batch = replay_sample(buf, k2, cfg.batch_size)
+        g = jax.grad(dqn_loss)(params, target,
+                               lambda p, o: mlp_q_apply(p, o, None),
+                               batch, cfg)
+        params, opt, _ = adamw_update(g, opt, params, sched, ocfg)
+        return params, opt, buf, est2, obs2, r, d
+
+    ep_returns = []
+    for i in range(iters):
+        key, sub = jax.random.split(key)
+        params, opt, buf, est, obs, r, d = step(
+            params, target, opt, buf, est, obs, jnp.asarray(i), sub)
+        acc = acc + r
+        finished = acc * d.astype(jnp.float32)
+        n = int(d.sum())
+        if n:
+            ep_returns.extend([float(x) for x in finished[d] if x > 0])
+        acc = acc * (1.0 - d.astype(jnp.float32))
+        if i % cfg.target_update_every == 0:
+            target = params
+    tail = ep_returns[-20:] or [0.0]
+    return sum(tail) / len(tail), ep_returns
+
+
+def run(fast: bool = True):
+    iters = 30 if fast else 80
+    fxp8 = get_policy("fxp8")
+    for algo in ("ppo", "a2c"):
+        fp32_ret, _ = train_pg(algo, None, iters)
+        q8_ret, _ = train_pg(algo, fxp8, iters)
+        emit("rewards", f"{algo}_cartpole",
+             fp32_return=round(fp32_ret, 1),
+             q8_return=round(q8_ret, 1),
+             parity=round(q8_ret / max(fp32_ret, 1e-9), 2))
+    dqn_iters = 1500 if fast else 4000
+    fp32_ret, _ = train_dqn(None, dqn_iters)
+    q8_ret, _ = train_dqn(fxp8, dqn_iters)
+    emit("rewards", "dqn_cartpole",
+         fp32_return=round(fp32_ret, 1),
+         q8_return=round(q8_ret, 1),
+         parity=round(q8_ret / max(fp32_ret, 1e-9), 2))

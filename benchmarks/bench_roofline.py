@@ -1,0 +1,38 @@
+"""§Roofline table emitter: reads the dry-run JSON (if present) and
+prints the per-cell roofline terms as a markdown table; used by
+EXPERIMENTS.md.  The dry-run itself runs out-of-process (it needs the
+512-device XLA flag before jax init)."""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import emit
+
+JSON_PATHS = ["dryrun_single_pod.json", "/root/repo/dryrun_single_pod.json"]
+
+
+def run():
+    path = next((p for p in JSON_PATHS if os.path.exists(p)), None)
+    if path is None:
+        emit("roofline", "missing",
+             note="run: PYTHONPATH=src python -m repro.launch.dryrun "
+                  "--arch all --shape all --json dryrun_single_pod.json")
+        return
+    with open(path) as f:
+        results = json.load(f)
+    ok = skip = 0
+    for r in results:
+        if r.get("status") != "ok":
+            skip += 1
+            continue
+        ok += 1
+        f_ = r["roofline"]
+        emit("roofline", f"{r['arch']}x{r['shape']}",
+             bound=f_["bound"],
+             t_compute=f"{f_['t_compute']:.2e}",
+             t_memory=f"{f_['t_memory']:.2e}",
+             t_collective=f"{f_['t_collective']:.2e}",
+             mfu_at_roofline=f"{100 * f_['mfu_at_roofline']:.1f}%",
+             hbm_gib=round(r["memory"]["total_bytes"] / 2**30, 1))
+    emit("roofline", "summary", ok=ok, skipped_or_failed=skip)

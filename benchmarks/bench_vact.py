@@ -1,0 +1,50 @@
+"""Paper Table IV analogue — V-ACT: one reconfigurable activation unit.
+
+Reported per (AF x precision): CORDIC iteration count (the paper's
+(3n/8+1) low-latency schedule), max error vs the fp oracle, CPU
+wall-clock, and the fused-vs-unfused HBM traffic that motivates fusing
+quantize->AF->requantize into one pass (the unit's architectural win).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.core.policy import cordic_iterations, get_policy
+from repro.core.vact import activation
+
+SHAPE = (256, 4096)
+
+
+def run():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, SHAPE) * 3.0
+
+    oracle = {"sigmoid": jax.nn.sigmoid, "tanh": jnp.tanh,
+              "relu": jax.nn.relu,
+              "softmax": lambda v: jax.nn.softmax(v, axis=-1)}
+
+    for pol_name in ("fxp8", "fxp16", "fxp32"):
+        policy = get_policy(pol_name).replace(act_backend="cordic")
+        iters = cordic_iterations(policy)
+        for kind in ("sigmoid", "tanh", "relu", "softmax"):
+            f = jax.jit(lambda v, k=kind, p=policy: activation(v, k, p))
+            sec = timeit(f, x)
+            ref = oracle[kind](x)
+            err = float(jnp.max(jnp.abs(f(x) - ref)))
+            emit("vact", f"{kind}_{pol_name}",
+                 cordic_iters=iters,
+                 max_err=round(err, 5),
+                 us=round(sec * 1e6, 1),
+                 gop_s=round(x.size / sec / 1e9, 2))
+
+    # fused quantized-activation traffic model: unfused writes the fp
+    # intermediate to HBM and reads it back; fused keeps it in VMEM
+    n = int(np.prod(SHAPE))
+    unfused = n * (4 + 4 + 4 + 1)      # read fp32, write fp32, read, write i8
+    fused = n * (4 + 1)                # read fp32, write int8
+    emit("vact", "fusion_traffic",
+         unfused_bytes=unfused, fused_bytes=fused,
+         saving=f"{unfused / fused:.1f}x")

@@ -1,0 +1,55 @@
+"""Shared benchmark plumbing: timing, CSV emit, derived metrics."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List
+
+import jax
+
+ROWS: List[Dict] = []
+
+
+def timeit(fn: Callable, *args, warmup: int = 2, iters: int = 10) -> float:
+    """Median wall-clock seconds per call (jit'd fn, blocked)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def emit(table: str, name: str, **fields):
+    row = {"table": table, "name": name, **fields}
+    ROWS.append(row)
+    kv = "  ".join(f"{k}={v}" for k, v in fields.items())
+    print(f"[{table}] {name}: {kv}")
+
+
+def dump_csv(path: str):
+    import csv
+    keys: List[str] = []
+    for r in ROWS:
+        for k in r:
+            if k not in keys:
+                keys.append(k)
+    with open(path, "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=keys)
+        w.writeheader()
+        w.writerows(ROWS)
+    print(f"wrote {len(ROWS)} rows -> {path}")
+
+
+# energy proxy: on modern silicon, data movement dominates; a standard
+# first-order model charges pJ per byte moved between levels and pJ per
+# MAC by operand width (Horowitz ISSCC'14 scaled to ~7nm-class nodes).
+PJ_PER_BYTE_HBM = 7.0
+PJ_PER_MAC = {8: 0.2, 16: 0.8, 32: 3.1}
+
+
+def energy_proxy_mj(macs: float, bits: int, hbm_bytes: float) -> float:
+    pj = macs * PJ_PER_MAC[bits] + hbm_bytes * PJ_PER_BYTE_HBM
+    return pj * 1e-9

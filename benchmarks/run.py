@@ -1,0 +1,53 @@
+"""Benchmark orchestrator — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only qmac,vact,...]
+                                            [--full] [--csv out.csv]
+
+  qmac     Table II/III  Q-MAC precision->throughput/energy scaling
+  vact     Table IV      V-ACT CORDIC accuracy/latency per AF+precision
+  arch     Table V       E2HRL agent FPS/energy per precision + sync
+  rewards  Fig. 3a       FP32 vs Q8 reward parity (PPO/A2C/DQN)
+  lm       Sec. IV       the fabric generalized to LM train/serve
+  roofline §Roofline     dry-run derived terms (needs dryrun JSON)
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+from benchmarks import (bench_arch, bench_lm, bench_qmac,
+                        bench_rewards, bench_roofline, bench_vact)
+from benchmarks.common import dump_csv
+
+SUITES = {
+    "qmac": lambda full: bench_qmac.run(),
+    "vact": lambda full: bench_vact.run(),
+    "arch": lambda full: bench_arch.run(),
+    "rewards": lambda full: bench_rewards.run(fast=not full),
+    "lm": lambda full: bench_lm.run(),
+    "roofline": lambda full: bench_roofline.run(),
+}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of "
+                         f"{sorted(SUITES)}")
+    ap.add_argument("--full", action="store_true",
+                    help="longer reward-parity budgets")
+    ap.add_argument("--csv", default="bench_results.csv")
+    args = ap.parse_args(argv)
+
+    names = (args.only.split(",") if args.only else list(SUITES))
+    for name in names:
+        t0 = time.time()
+        print(f"\n===== bench: {name} =====")
+        SUITES[name](args.full)
+        print(f"===== {name} done in {time.time() - t0:.0f}s =====")
+    if args.csv:
+        dump_csv(args.csv)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Q-Actor on CartPole: FP32 learner + int8 actors (paper Fig. 2/3a).
+
+Trains PPO twice — once with FP32 rollout actors, once with FxP8
+(int8 weights + activations + CORDIC activations) actors synced over
+an int8-compressed channel — and prints the reward curves side by
+side.  The expected outcome is parity (the paper's core claim), with
+a ~4x smaller learner->actor payload.
+
+    PYTHONPATH=src python examples/rl_cartpole_qactor.py [--iters 40]
+"""
+import argparse
+
+from repro.launch.rl_train import rl_train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--iters", type=int, default=40)
+    args = ap.parse_args()
+
+    print("=== FP32 actors ===")
+    _, hist_fp32 = rl_train("cartpole", "mlp", iters=args.iters,
+                            actor_policy=None, comm_bits=32,
+                            log_every=10)
+    print("\n=== FxP8 actors (int8 sync) ===")
+    _, hist_q8 = rl_train("cartpole", "mlp", iters=args.iters,
+                          actor_policy="fxp8", comm_bits=8,
+                          log_every=10)
+
+    k = max(len(hist_fp32) // 5, 1)
+    tail32 = sum(hist_fp32[-k:]) / k
+    tail8 = sum(hist_q8[-k:]) / k
+    print(f"\nfinal mean return: FP32 {tail32:.1f}  Q8 {tail8:.1f}  "
+          f"(parity {tail8 / max(tail32, 1e-9):.2f})")
+
+
+if __name__ == "__main__":
+    main()

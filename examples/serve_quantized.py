@@ -1,0 +1,33 @@
+"""Quantized batched serving across architecture families.
+
+Runs the serve driver (PTQ int8 weights + int8 KV/state caches) on a
+reduced config of each requested arch and reports footprint + latency.
+
+    PYTHONPATH=src python examples/serve_quantized.py \
+        [--archs tinyllama-1.1b,mamba2-2.7b] [--policy w8a8kv8]
+"""
+import argparse
+
+from repro.launch.serve import serve
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--archs",
+                    default="tinyllama-1.1b,mamba2-2.7b,"
+                            "recurrentgemma-9b")
+    ap.add_argument("--policy", default="w8a8kv8")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    args = ap.parse_args()
+
+    for arch in args.archs.split(","):
+        print(f"\n=== {arch} ({args.policy}) ===")
+        serve(arch, smoke=True, policy_name=args.policy,
+              batch=args.batch, prompt_len=args.prompt_len,
+              gen=args.gen)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from repro.checkpoint.checkpointer import restore, save
+from repro.checkpoint.manager import CheckpointManager

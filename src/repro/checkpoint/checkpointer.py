@@ -1,0 +1,129 @@
+"""Device-count-independent checkpointing (no orbax in this container).
+
+Format: one ``.npz`` holding every leaf (flattened pytree paths as keys)
+plus a JSON sidecar with the treedef, dtypes, and user metadata.  Writes
+are atomic (tmp file + os.replace) so a killed process never leaves a
+torn checkpoint — the fault-tolerance primitive everything else builds
+on.  Leaves are gathered to host before writing, so the file does not
+depend on the mesh shape; ``restore`` re-shards onto whatever mesh the
+restoring job runs (elastic restart across different device counts).
+
+QTensor leaves round-trip (payload + scale + bits are stored separately).
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.fxp import QTensor
+
+
+def _is_qtensor(x) -> bool:
+    return isinstance(x, QTensor)
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(
+        tree, is_leaf=_is_qtensor)
+    return flat, treedef
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                    for p in path)
+
+
+def save(path: str, tree: Any, metadata: Optional[Dict] = None) -> None:
+    """Atomically write ``tree`` to ``path`` (.npz + .json sidecar)."""
+    flat, _ = _flatten_with_paths(tree)
+    arrays: Dict[str, np.ndarray] = {}
+    leaf_meta: Dict[str, Dict] = {}
+    for p, leaf in flat:
+        key = _path_str(p)
+        if _is_qtensor(leaf):
+            arrays[key + "#q"] = np.asarray(leaf.qvalue)
+            arrays[key + "#s"] = np.asarray(leaf.scale)
+            leaf_meta[key] = {"kind": "qtensor", "bits": int(leaf.bits)}
+        else:
+            arr = np.asarray(leaf)
+            dtype = str(arr.dtype)
+            if arr.dtype.kind == "V" or dtype in ("bfloat16", "float8_e4m3fn",
+                                                  "float8_e5m2"):
+                # ml_dtypes aren't npz-native: store the raw bytes view
+                arr = arr.view(np.dtype(f"uint{arr.dtype.itemsize * 8}"))
+            arrays[key] = arr
+            leaf_meta[key] = {"kind": "array", "dtype": dtype}
+
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    dirname = os.path.dirname(path) or "."
+    fd, tmp = tempfile.mkstemp(dir=dirname, suffix=".tmp")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            np.savez(f, **arrays)
+        os.replace(tmp, path)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise
+
+    side = {"leaves": leaf_meta, "metadata": metadata or {}}
+    fd, tmp = tempfile.mkstemp(dir=dirname, suffix=".tmp")
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump(side, f)
+        os.replace(tmp, path + ".json")
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise
+
+
+def restore(path: str, like: Any,
+            shardings: Any = None) -> Tuple[Any, Dict]:
+    """Restore into the structure of ``like``.
+
+    ``shardings`` (optional) is a matching tree of NamedShardings — when
+    given, leaves are placed directly onto the (possibly different) mesh
+    with ``jax.device_put``, which is what makes restarts elastic.
+    Returns (tree, metadata).
+    """
+    with np.load(path) as zf:
+        data = {k: zf[k] for k in zf.files}
+    with open(path + ".json") as f:
+        side = json.load(f)
+
+    flat, treedef = _flatten_with_paths(like)
+    if shardings is not None:
+        sflat, _ = _flatten_with_paths(shardings)
+        sleaves = [l for _, l in sflat]
+    else:
+        sleaves = [None] * len(flat)
+
+    leaves = []
+    for (p, leaf), shard in zip(flat, sleaves):
+        key = _path_str(p)
+        meta = side["leaves"].get(key)
+        if meta is None:
+            raise KeyError(f"checkpoint missing leaf '{key}'")
+        if meta["kind"] == "qtensor":
+            q, s = data[key + "#q"], data[key + "#s"]
+            if shard is not None and isinstance(shard, QTensor):
+                q = jax.device_put(q, shard.qvalue)
+                s = jax.device_put(s, shard.scale)
+            leaves.append(QTensor(jnp.asarray(q), jnp.asarray(s),
+                                  meta["bits"]))
+        else:
+            v = data[key]
+            want = np.dtype(meta["dtype"])      # ml_dtypes registers names
+            if v.dtype != want:
+                v = v.view(want)
+            if shard is not None:
+                v = jax.device_put(v, shard)
+            leaves.append(jnp.asarray(v))
+    return jax.tree_util.tree_unflatten(treedef, leaves), side["metadata"]

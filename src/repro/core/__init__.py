@@ -1,0 +1,20 @@
+"""QForce-RL core: adaptive fixed-point quantization, Q-MAC matmul
+dispatch, V-ACT activations, and precision policies."""
+from repro.core.fxp import (QTensor, absmax_scale, dequantize, fake_quant,
+                            fxp_dtype, fxp_qmax, is_qtensor, quantize,
+                            quantize_eq1)
+from repro.core.policy import (BF16, FP32, FXP8, FXP16, FXP32, PRESETS, W8,
+                               W8A8, W8A8KV8, W8A8_BF16, QuantPolicy,
+                               cordic_iterations, get_policy)
+from repro.core.qmatmul import q_matmul, quantize_rowwise
+from repro.core.quantizer import (dequantize_params, quantize_params,
+                                  quantized_nbytes)
+from repro.core.vact import (activation, cordic_exp, cordic_sigmoid,
+                             cordic_softmax, cordic_tanh)
+
+__all__ = [
+    "QTensor", "QuantPolicy", "q_matmul", "quantize", "dequantize",
+    "fake_quant", "quantize_eq1", "activation", "quantize_params",
+    "dequantize_params", "get_policy", "FP32", "FXP8", "FXP16", "FXP32",
+    "W8", "W8A8", "W8A8KV8", "BF16", "W8A8_BF16",
+]

@@ -1,0 +1,216 @@
+"""Adaptive fixed-point (AdFxP) formats and uniform affine quantization.
+
+This is the numerical heart of QForce-RL: the paper's Q-MAC consumes
+adaptive fixed-point operands whose scale is derived from the dynamic
+range of the tensor (paper Eq. 1).  We implement:
+
+  * symmetric abs-max quantization (what AdFxP reduces to for zero-mean
+    weight tensors; the form QuaRL / Q-Actor use in practice),
+  * the paper's Eq. (1) affine variant (range = |min(x,0)| + |max(x,0)|),
+  * straight-through-estimator (STE) fake quantization for QAT,
+  * ``QTensor`` — a real quantized tensor (int payload + fp scale) used
+    for weight-only serving and int8 KV caches, registered as a pytree so
+    it flows through jit/pjit/scan and shows up in ``memory_analysis`` at
+    its true (4x smaller) byte size.
+
+Precisions follow the paper's FxP8/16/32 triple.  FxP32 is treated as the
+full-precision baseline (the paper uses it as such).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+# int dtype and symmetric max magnitude per FxP precision.
+_FXP_SPECS = {
+    8: (jnp.int8, 127.0),
+    16: (jnp.int16, 32767.0),
+    32: (jnp.int32, 2147483647.0),
+}
+
+
+def fxp_dtype(bits: int):
+    return _FXP_SPECS[bits][0]
+
+
+def fxp_qmax(bits: int) -> float:
+    return _FXP_SPECS[bits][1]
+
+
+def _reduce_axes(x_ndim: int, channel_axis: Optional[int]) -> Tuple[int, ...]:
+    """Axes to reduce when computing scales.
+
+    ``channel_axis=None`` -> per-tensor scale; otherwise per-channel along
+    that axis (the axis is kept, everything else reduced).
+    """
+    if channel_axis is None:
+        return tuple(range(x_ndim))
+    channel_axis = channel_axis % x_ndim
+    return tuple(i for i in range(x_ndim) if i != channel_axis)
+
+
+def absmax_scale(x: Array, bits: int, channel_axis: Optional[int] = None,
+                 eps: float = 1e-12) -> Array:
+    """Symmetric AdFxP scale: one LSB = absmax / qmax (keepdims)."""
+    axes = _reduce_axes(x.ndim, channel_axis)
+    amax = jnp.max(jnp.abs(x), axis=axes, keepdims=True)
+    qmax = fxp_qmax(bits)
+    return jnp.maximum(amax, eps) / qmax
+
+
+def quantize(x: Array, bits: int, channel_axis: Optional[int] = None,
+             scale: Optional[Array] = None) -> Tuple[Array, Array]:
+    """Symmetric quantization to intN.  Returns (q, scale)."""
+    if bits == 32:
+        # FxP32 baseline: pass-through (scale 1).  Keeping a real int32
+        # path would add nothing numerically (fp32 mantissa dominates).
+        return x, jnp.ones((1,) * x.ndim, x.dtype)
+    if scale is None:
+        scale = absmax_scale(x, bits, channel_axis)
+    dt, qmax = _FXP_SPECS[bits]
+    q = jnp.clip(jnp.round(x / scale), -qmax, qmax).astype(dt)
+    return q, scale
+
+
+def dequantize(q: Array, scale: Array, dtype=jnp.float32) -> Array:
+    return q.astype(dtype) * scale.astype(dtype)
+
+
+def quantize_eq1(w: Array, n: int = 8) -> Tuple[Array, Array]:
+    """The paper's Eq. (1) uniform affine quantizer.
+
+      Q_n(W) = round( W * 2^n / (|min(W,0)| + |max(W,0)|) )
+
+    Range is the total dynamic span |min|+|max|; this is an affine grid of
+    2^n steps across the observed range.  Returns (q, scale) with
+    scale = span / 2^n so that dequantize(q, scale) ~= W.
+    """
+    lo = jnp.abs(jnp.minimum(jnp.min(w), 0.0))
+    hi = jnp.abs(jnp.maximum(jnp.max(w), 0.0))
+    span = jnp.maximum(lo + hi, 1e-12)
+    scale = span / (2.0 ** n)
+    q = jnp.round(w / scale)
+    # clip to the signed grid implied by n+1 bits of headroom
+    q = jnp.clip(q, -(2.0 ** n), 2.0 ** n)
+    return q, scale
+
+
+# ---------------------------------------------------------------------------
+# Straight-through fake quantization (QAT)
+# ---------------------------------------------------------------------------
+
+@partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def fake_quant(x: Array, bits: int, channel_axis: Optional[int] = None) -> Array:
+    """Quantize-dequantize with a straight-through gradient."""
+    if bits == 32:
+        return x
+    q, s = quantize(x, bits, channel_axis)
+    return dequantize(q, s, x.dtype)
+
+
+def _fake_quant_fwd(x, bits, channel_axis):
+    return fake_quant(x, bits, channel_axis), None
+
+
+def _fake_quant_bwd(bits, channel_axis, res, g):
+    del bits, channel_axis, res
+    return (g,)
+
+
+fake_quant.defvjp(_fake_quant_fwd, _fake_quant_bwd)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1,))
+def fake_quant_rowwise(x: Array, bits: int) -> Array:
+    """Per-token (last-axis scale) fake quantization with STE.
+
+    Matches the grid of ``qmatmul.quantize_rowwise`` so the ref and
+    xla/pallas backends share identical quantization semantics.
+    """
+    if bits == 32:
+        return x
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    qmax = fxp_qmax(bits)
+    scale = jnp.maximum(amax, 1e-12) / qmax
+    q = jnp.clip(jnp.round(x / scale), -qmax, qmax)
+    return (q * scale).astype(x.dtype)
+
+
+def _fqr_fwd(x, bits):
+    return fake_quant_rowwise(x, bits), None
+
+
+def _fqr_bwd(bits, res, g):
+    del bits, res
+    return (g,)
+
+
+fake_quant_rowwise.defvjp(_fqr_fwd, _fqr_bwd)
+
+
+# ---------------------------------------------------------------------------
+# QTensor: a really-quantized tensor (int payload + scale)
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QTensor:
+    """int payload + broadcastable fp scale.  ``deq()`` restores fp."""
+
+    qvalue: Array
+    scale: Array
+    bits: int = 8
+
+    def tree_flatten(self):
+        return (self.qvalue, self.scale), (self.bits,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        q, s = children
+        return cls(q, s, aux[0])
+
+    @property
+    def shape(self):
+        return self.qvalue.shape
+
+    @property
+    def dtype(self):
+        return self.qvalue.dtype
+
+    @property
+    def ndim(self):
+        return self.qvalue.ndim
+
+    def deq(self, dtype=jnp.float32) -> Array:
+        return dequantize(self.qvalue, self.scale, dtype)
+
+    @classmethod
+    def quant(cls, x: Array, bits: int = 8,
+              channel_axis: Optional[int] = None) -> "QTensor":
+        q, s = quantize(x, bits, channel_axis)
+        return cls(q, s, bits)
+
+
+def is_qtensor(x: Any) -> bool:
+    return isinstance(x, QTensor)
+
+
+def nbytes_of(x: Union[Array, QTensor, jax.ShapeDtypeStruct]) -> int:
+    """Byte footprint (QTensor counts payload + scale)."""
+    if isinstance(x, QTensor):
+        return nbytes_of(x.qvalue) + nbytes_of(x.scale)
+    return int(np.prod(x.shape)) * x.dtype.itemsize
+
+
+def as_dense(w, dtype=None):
+    """Plain-array view of a maybe-QTensor weight (dequantize if needed)."""
+    if isinstance(w, QTensor):
+        return w.deq(dtype or jnp.float32)
+    return w.astype(dtype) if dtype is not None else w

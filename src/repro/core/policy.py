@@ -1,0 +1,96 @@
+"""QuantPolicy: the framework-wide precision dial.
+
+The paper's Q-MAC exposes precision as a runtime configuration
+(FxP8/16/32 -> 16/4/1 MACs per cycle).  In this framework the same dial
+is a policy object threaded through every matmul / activation / cache /
+collective.  A single policy choice re-targets an entire architecture
+(LM or RL agent) to a precision mode, which is exactly the deployment
+story of the paper's "parametrized efficient deployment".
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantPolicy:
+    """Per-role bit-widths + backend selection.
+
+    bits == 32 means "full precision / no quantization" for that role
+    (FxP32 is the paper's baseline and maps to fp32/bf16 on TPU).
+    """
+
+    name: str = "fp32"
+    w_bits: int = 32              # weight matmul operand
+    a_bits: int = 32              # activation matmul operand
+    kv_bits: int = 32             # KV / recurrent-state cache payload
+    grad_bits: int = 32           # DP gradient all-reduce payload
+    comm_bits: int = 32           # learner->actor weight sync payload
+    backend: str = "xla"          # one of {"ref", "xla", "pallas"}
+    act_backend: str = "native"   # one of {"native", "cordic"}
+    per_channel: bool = True      # per-out-channel weight scales
+    # dtype used for fp compute around the quantized core
+    compute_dtype: object = jnp.float32
+    # CORDIC iteration count override (None -> 3*bits/8 + 1 heuristic)
+    cordic_iters: Optional[int] = None
+
+    @property
+    def quantized_w(self) -> bool:
+        return self.w_bits < 32
+
+    @property
+    def quantized_a(self) -> bool:
+        return self.a_bits < 32
+
+    def with_backend(self, backend: str) -> "QuantPolicy":
+        return dataclasses.replace(self, backend=backend)
+
+    def replace(self, **kw) -> "QuantPolicy":
+        return dataclasses.replace(self, **kw)
+
+
+# --- presets -------------------------------------------------------------
+
+FP32 = QuantPolicy(name="fp32")
+# paper's three SIMD modes
+FXP8 = QuantPolicy(name="fxp8", w_bits=8, a_bits=8, kv_bits=8, comm_bits=8)
+FXP16 = QuantPolicy(name="fxp16", w_bits=16, a_bits=16, kv_bits=16,
+                    comm_bits=16)
+FXP32 = QuantPolicy(name="fxp32")  # baseline: full precision semantics
+# LM serving/training presets
+W8A8 = QuantPolicy(name="w8a8", w_bits=8, a_bits=8)
+W8 = QuantPolicy(name="w8", w_bits=8)                       # weight-only
+W8A8KV8 = QuantPolicy(name="w8a8kv8", w_bits=8, a_bits=8, kv_bits=8)
+BF16 = QuantPolicy(name="bf16", compute_dtype=jnp.bfloat16)
+W8A8_BF16 = QuantPolicy(name="w8a8_bf16", w_bits=8, a_bits=8,
+                        compute_dtype=jnp.bfloat16)
+# the full QForce deployment point: int8 weights/activations/KV/comms
+# around a bf16 MXU datapath — the TPU analogue of the paper's FxP8
+QFORCE8 = QuantPolicy(name="qforce8", w_bits=8, a_bits=8, kv_bits=8,
+                      comm_bits=8, compute_dtype=jnp.bfloat16)
+
+PRESETS = {p.name: p for p in
+           [FP32, FXP8, FXP16, FXP32, W8A8, W8, W8A8KV8, BF16,
+            W8A8_BF16, QFORCE8]}
+
+
+def get_policy(name: str) -> QuantPolicy:
+    if name not in PRESETS:
+        raise KeyError(f"unknown quant policy '{name}' "
+                       f"(available: {sorted(PRESETS)})")
+    return PRESETS[name]
+
+
+def cordic_iterations(policy: QuantPolicy, bits: Optional[int] = None) -> int:
+    """Paper: low-latency hybrid CORDIC converges in (3n/8 + 1) cycles.
+
+    n is the datapath width.  We floor at 6 iterations so that even the
+    FxP8 mode resolves tanh/sigmoid to ~2^-6, comparable to the int8 grid.
+    """
+    if policy.cordic_iters is not None:
+        return policy.cordic_iters
+    b = bits if bits is not None else max(policy.a_bits, 8)
+    return max(3 * b // 8 + 1, 6)

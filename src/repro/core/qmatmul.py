@@ -1,0 +1,224 @@
+"""q_matmul: every matmul in the framework goes through here.
+
+This is the software realization of the paper's Q-MAC: a precision-
+configurable multiply-accumulate engine.  Three backends with identical
+semantics (tests enforce agreement):
+
+  * ``ref``    — pure-jnp fake-quant oracle (golden semantics),
+  * ``xla``    — real int8 x int8 -> int32 ``lax.dot_general`` (this is
+                 what the multi-pod dry-run lowers; XLA maps it onto the
+                 MXU int8 path on TPU, i.e. the 2x-throughput mode),
+  * ``pallas`` — the Q-MAC Pallas kernel (kernels/qmac), VMEM-tiled.
+
+Gradients: straight-through (QAT standard) — the forward pass runs the
+quantized product, the backward pass differentiates the fp32 product.
+
+Weights may be passed as fp arrays (training / QAT) or as ``QTensor``
+(serving: int8 payload lives in HBM, 4x smaller — this is what makes the
+memory roofline term actually drop in the dry-run).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fxp import (QTensor, absmax_scale, dequantize, fake_quant,
+                            fake_quant_rowwise, fxp_dtype, fxp_qmax,
+                            quantize)
+from repro.core.policy import QuantPolicy
+
+Array = jax.Array
+
+
+def quantize_rowwise(x: Array, bits: int):
+    """Per-token (last-axis) symmetric quantization for activations.
+
+    Elementwise math stays in x.dtype (bf16 holds +-qmax exactly for
+    8-bit); only the scale is fp32.  Keeping the upcast out of the
+    elementwise path stops XLA from converting whole saved-activation
+    stacks to fp32 in the backward pass.
+    """
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax.astype(jnp.float32), 1e-12) / fxp_qmax(bits)
+    q = jnp.clip(jnp.round(x / scale.astype(x.dtype)),
+                 -fxp_qmax(bits), fxp_qmax(bits))
+    return q.astype(fxp_dtype(bits)), scale
+
+
+def _int_dot(qx: Array, qw: Array) -> Array:
+    """intN x intN -> int32 contraction of x's last dim with w's first."""
+    dn = (((qx.ndim - 1,), (0,)), ((), ()))
+    return jax.lax.dot_general(qx, qw, dn,
+                               preferred_element_type=jnp.int32)
+
+
+def _fp_dot(x: Array, w: Array, dtype) -> Array:
+    dn = (((x.ndim - 1,), (0,)), ((), ()))
+    return jax.lax.dot_general(x.astype(dtype), w.astype(dtype), dn)
+
+
+# ---------------------------------------------------------------------------
+# forward implementations per backend
+# ---------------------------------------------------------------------------
+
+def _fwd_quantized(policy: QuantPolicy, x: Array, w: Array) -> Array:
+    """Quantized forward product (both operands quantized, fp dequant)."""
+    cdt = policy.compute_dtype
+    w_ch = 1 if policy.per_channel else None
+    if policy.backend == "ref":
+        xq = fake_quant_rowwise(x, policy.a_bits) \
+            if policy.quantized_a else x
+        wq = fake_quant(w, policy.w_bits, w_ch) if policy.quantized_w else w
+        return _fp_dot(xq, wq, cdt)
+    if policy.backend in ("xla", "pallas"):
+        # integer accumulation path only at <=8 bits: 16-bit products
+        # would overflow int32 accumulators (the FPGA uses wider
+        # accumulators there; on TPU FxP16 maps to the bf16 MXU path).
+        if policy.quantized_a and policy.quantized_w \
+                and policy.a_bits <= 8 and policy.w_bits <= 8:
+            qx, sx = quantize_rowwise(x, policy.a_bits)
+            qw, sw = quantize(w, policy.w_bits, channel_axis=w_ch)
+            if policy.backend == "pallas" and policy.a_bits == 8 \
+                    and policy.w_bits == 8 and qx.ndim == 2:
+                from repro.kernels.qmac import ops as qmac_ops
+                acc = qmac_ops.qmac_i8(qx, qw)
+            else:
+                acc = _int_dot(qx, qw)
+            sw_bc = sw.reshape((1,) * (acc.ndim - 1) + (-1,)) \
+                if policy.per_channel else sw.reshape((1,) * acc.ndim)
+            return (acc.astype(jnp.float32) * sx * sw_bc).astype(cdt)
+        # weight-only (or 32-bit act): dequant weight, fp matmul
+        xq = fake_quant_rowwise(x, policy.a_bits) \
+            if policy.quantized_a else x
+        wq = fake_quant(w, policy.w_bits, w_ch) if policy.quantized_w else w
+        return _fp_dot(xq, wq, cdt)
+    raise ValueError(f"unknown backend {policy.backend!r}")
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _qmm(policy: QuantPolicy, x: Array, w: Array) -> Array:
+    return _fwd_quantized(policy, x, w)
+
+
+def _qmm_fwd(policy, x, w):
+    return _fwd_quantized(policy, x, w), (x, w)
+
+
+def _qmm_bwd(policy, res, g):
+    x, w = res
+    cdt = policy.compute_dtype
+    g = g.astype(cdt)
+    # dx = g @ w^T  (contract g's last dim with w's last dim)
+    dx = jax.lax.dot_general(
+        g, w.astype(cdt), (((g.ndim - 1,), (1,)), ((), ())))
+    # dw = x^T @ g  (contract all batch dims)
+    bdims = tuple(range(x.ndim - 1))
+    dw = jax.lax.dot_general(
+        x.astype(cdt), g, ((bdims, bdims), ((), ())))
+    return dx.astype(x.dtype), dw.astype(w.dtype)
+
+
+_qmm.defvjp(_qmm_fwd, _qmm_bwd)
+
+
+def _serve_quantized(policy: QuantPolicy, x: Array, w: QTensor) -> Array:
+    """Forward with a pre-quantized (QTensor) weight — serving path."""
+    cdt = policy.compute_dtype
+    if policy.quantized_a and w.bits <= 8 and policy.a_bits <= 8:
+        qx, sx = quantize_rowwise(x, policy.a_bits)
+        if policy.backend == "pallas" and policy.a_bits == 8 \
+                and w.bits == 8 and qx.ndim == 2:
+            from repro.kernels.qmac import ops as qmac_ops
+            acc = qmac_ops.qmac_i8(qx, qw=w.qvalue)
+        else:
+            acc = _int_dot(qx, w.qvalue)
+        sw = w.scale.reshape((1,) * (acc.ndim - 1) + (-1,)) \
+            if w.scale.size > 1 else w.scale.reshape((1,) * acc.ndim)
+        return (acc.astype(jnp.float32) * sx * sw).astype(cdt)
+    # weight-only serving: dequantize into compute dtype, fp matmul.
+    return _fp_dot(x, w.deq(cdt), cdt)
+
+
+def q_matmul(x: Array, w: Union[Array, QTensor],
+             policy: Optional[QuantPolicy] = None) -> Array:
+    """Contract ``x``'s last axis with ``w``'s first axis under ``policy``.
+
+    The single entry point for every dense product in the framework.
+    """
+    if policy is None:
+        policy = QuantPolicy()
+    if isinstance(w, QTensor):
+        return _serve_quantized(policy, x, w)
+    if not (policy.quantized_w or policy.quantized_a):
+        return _fp_dot(x, w, policy.compute_dtype)
+    return _qmm(policy, x, w)
+
+
+# ---------------------------------------------------------------------------
+# batched (per-expert) variant for MoE: x [E, C, K] @ w [E, K, N]
+# ---------------------------------------------------------------------------
+
+def _fwd_bmm(policy: QuantPolicy, x: Array, w: Array) -> Array:
+    cdt = policy.compute_dtype
+    dn = (((2,), (1,)), ((0,), (0,)))
+    if (policy.quantized_a and policy.quantized_w
+            and policy.a_bits <= 8 and policy.w_bits <= 8
+            and policy.backend in ("xla", "pallas")):
+        qx, sx = quantize_rowwise(x, policy.a_bits)          # [E,C,1]
+        # per-(expert, out-channel) weight scales
+        amax = jnp.max(jnp.abs(w), axis=1, keepdims=True)     # [E,1,N]
+        sw = jnp.maximum(amax, 1e-12) / fxp_qmax(policy.w_bits)
+        qw = jnp.clip(jnp.round(w / sw), -fxp_qmax(policy.w_bits),
+                      fxp_qmax(policy.w_bits)).astype(
+                          fxp_dtype(policy.w_bits))
+        acc = jax.lax.dot_general(qx, qw, dn,
+                                  preferred_element_type=jnp.int32)
+        return (acc.astype(jnp.float32) * sx * sw).astype(cdt)
+    xq = fake_quant_rowwise(x, policy.a_bits) if policy.quantized_a else x
+    wq = fake_quant(w, policy.w_bits, 2) if policy.quantized_w else w
+    return jax.lax.dot_general(xq.astype(cdt), wq.astype(cdt), dn)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _qbmm(policy: QuantPolicy, x: Array, w: Array) -> Array:
+    return _fwd_bmm(policy, x, w)
+
+
+def _qbmm_fwd(policy, x, w):
+    return _fwd_bmm(policy, x, w), (x, w)
+
+
+def _qbmm_bwd(policy, res, g):
+    x, w = res
+    cdt = policy.compute_dtype
+    g = g.astype(cdt)
+    dx = jax.lax.dot_general(                        # g[E,C,N] wT -> [E,C,K]
+        g, w.astype(cdt), (((2,), (2,)), ((0,), (0,))))
+    dw = jax.lax.dot_general(                        # xT g -> [E,K,N]
+        x.astype(cdt), g, (((1,), (1,)), ((0,), (0,))))
+    return dx.astype(x.dtype), dw.astype(w.dtype)
+
+
+_qbmm.defvjp(_qbmm_fwd, _qbmm_bwd)
+
+
+def q_batched_matmul(x: Array, w: Union[Array, QTensor],
+                     policy: Optional[QuantPolicy] = None) -> Array:
+    """Per-expert contraction: x [E, C, K] @ w [E, K, N] -> [E, C, N]."""
+    if policy is None:
+        policy = QuantPolicy()
+    if isinstance(w, QTensor):
+        # serving: dequantize per-expert weights into compute dtype
+        wf = w.deq(policy.compute_dtype)
+        return _fwd_bmm(policy.replace(w_bits=32), x, wf) \
+            if policy.quantized_a else jax.lax.dot_general(
+                x.astype(policy.compute_dtype), wf,
+                (((2,), (1,)), ((0,), (0,))))
+    if not (policy.quantized_w or policy.quantized_a):
+        return jax.lax.dot_general(
+            x.astype(policy.compute_dtype), w.astype(policy.compute_dtype),
+            (((2,), (1,)), ((0,), (0,))))
+    return _qbmm(policy, x, w)

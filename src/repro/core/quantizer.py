@@ -1,0 +1,110 @@
+"""Tree-level quantization: PTQ of whole parameter pytrees + calibration.
+
+``quantize_params`` converts the matmul weights of a trained (or freshly
+initialized) model into ``QTensor``s — this is the step the paper's
+deployment flow performs when the learner's FxP32 policy is shipped to
+the quantized actors / the FPGA engine, and the step an LM serving
+config performs to halve/quarter HBM traffic.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fxp import QTensor, quantize
+from repro.core.policy import QuantPolicy
+
+Array = jax.Array
+
+# parameter leaf names that hold matmul weights (framework convention:
+# nn/ layers always call their matmul weights "w" and their embedding
+# tables "emb")
+_WEIGHT_KEYS = ("w", "w_in", "w_out", "w_gate", "w_up", "w_down",
+                "wq", "wk", "wv", "wo", "w_x", "w_h", "emb")
+
+
+def _path_leaf_name(path) -> str:
+    last = path[-1]
+    if isinstance(last, jax.tree_util.DictKey):
+        return str(last.key)
+    return str(last)
+
+
+def default_weight_predicate(path, leaf) -> bool:
+    if not isinstance(leaf, jnp.ndarray) or leaf.ndim < 2:
+        return False
+    return _path_leaf_name(path) in _WEIGHT_KEYS
+
+
+def quantize_params(params, policy: QuantPolicy,
+                    predicate: Optional[Callable] = None):
+    """PTQ: replace matmul weights with QTensors (int payload + scales).
+
+    Per-channel scales go on the last axis (output features).  Stacked
+    (scan-over-layers) weights [L, in, out] get per-(layer, channel)
+    scales automatically because ``channel_axis`` counts from the end.
+    """
+    if predicate is None:
+        predicate = default_weight_predicate
+    if not policy.quantized_w:
+        return params
+
+    def convert(path, leaf):
+        if predicate(path, leaf):
+            ch = (leaf.ndim - 1) if policy.per_channel else None
+            # for stacked layers keep a scale per layer as well:
+            # reduce only the contraction axis (ndim-2)
+            if policy.per_channel and leaf.ndim >= 3:
+                amax = jnp.max(jnp.abs(leaf), axis=-2, keepdims=True)
+                from repro.core.fxp import fxp_qmax, fxp_dtype
+                scale = jnp.maximum(amax, 1e-12) / fxp_qmax(policy.w_bits)
+                q = jnp.clip(jnp.round(leaf / scale),
+                             -fxp_qmax(policy.w_bits),
+                             fxp_qmax(policy.w_bits)).astype(
+                                 fxp_dtype(policy.w_bits))
+                return QTensor(q, scale, policy.w_bits)
+            q, s = quantize(leaf, policy.w_bits, channel_axis=ch)
+            return QTensor(q, s, policy.w_bits)
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(convert, params)
+
+
+def dequantize_params(params):
+    """Inverse of quantize_params (lossy, for round-trip testing)."""
+    return jax.tree.map(
+        lambda l: l.deq() if isinstance(l, QTensor) else l,
+        params, is_leaf=lambda l: isinstance(l, QTensor))
+
+
+def quantized_nbytes(params) -> Tuple[int, int]:
+    """(bytes as stored, bytes if everything were fp32) for a pytree."""
+    stored = 0
+    fp32 = 0
+    for leaf in jax.tree.leaves(
+            params, is_leaf=lambda l: isinstance(l, QTensor)):
+        if isinstance(leaf, QTensor):
+            stored += leaf.qvalue.size * leaf.qvalue.dtype.itemsize
+            stored += leaf.scale.size * leaf.scale.dtype.itemsize
+            fp32 += leaf.qvalue.size * 4
+        else:
+            stored += leaf.size * leaf.dtype.itemsize
+            fp32 += leaf.size * 4
+    return stored, fp32
+
+
+class EmaCalibrator:
+    """Running abs-max EMA for static activation scales (QAT helper)."""
+
+    def __init__(self, momentum: float = 0.99):
+        self.momentum = momentum
+
+    def init(self) -> Array:
+        return jnp.zeros(())
+
+    def update(self, state: Array, x: Array) -> Array:
+        amax = jnp.max(jnp.abs(x))
+        return jnp.where(state == 0, amax,
+                         self.momentum * state + (1 - self.momentum) * amax)

@@ -1,0 +1,163 @@
+"""V-ACT: versatile CORDIC-based activation functions (paper Sec. III-B).
+
+The paper evaluates Sigmoid / Tanh / ReLU / Softmax on a single
+reconfigurable low-latency hyperbolic-CORDIC datapath at FxP8/16/32.
+The TPU adaptation (see DESIGN.md) keeps the *algorithm* — shift-add
+hyperbolic CORDIC with the low-latency iteration schedule, (3n/8 + 1)
+iterations — as the paper-faithful numerical path, and exposes a
+"native" path (jax.nn) that is what a production TPU deployment would
+use on the VPU.  Both are selectable via ``QuantPolicy.act_backend``.
+
+Decomposition used (identical to the hardware datapath):
+
+    e^x      = 2^m * (cosh r + sinh r),  m = floor(x/ln2), r = x - m ln2
+    sigmoid  = 1 / (1 + e^{-x})
+    tanh     = 2 sigmoid(2x) - 1
+    softmax  = e^{x - max} / sum e^{x - max}
+
+cosh/sinh come from hyperbolic CORDIC rotations; the 2^m factor is a
+pure exponent shift (free on the FPGA, an ldexp here).  The hyperbolic
+iteration schedule repeats i = 4 and i = 13 to guarantee convergence.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.fxp import fake_quant
+from repro.core.policy import QuantPolicy, cordic_iterations
+
+Array = jax.Array
+
+LN2 = math.log(2.0)
+
+# Hyperbolic CORDIC convergence requires repeating iterations 4, 13, 40...
+_REPEAT = (4, 13, 40)
+_MAX_ITERS = 24
+
+
+def hyperbolic_schedule(n_iters: int) -> Sequence[int]:
+    """Shift indices i (starting at 1) with the standard repeats."""
+    seq = []
+    i = 1
+    while len(seq) < n_iters:
+        seq.append(i)
+        if i in _REPEAT and (len(seq) < n_iters):
+            seq.append(i)           # repeated iteration
+        i += 1
+    return tuple(seq[:n_iters])
+
+
+def cordic_gain(schedule: Sequence[int]) -> float:
+    g = 1.0
+    for i in schedule:
+        g *= math.sqrt(1.0 - 2.0 ** (-2 * i))
+    return g
+
+
+_ATANH = tuple(math.atanh(2.0 ** (-i)) for i in range(1, _MAX_ITERS + 2))
+
+
+def cordic_sinh_cosh(z: Array, n_iters: int):
+    """Vectorized hyperbolic CORDIC (rotation mode).
+
+    Valid for |z| <= sum(atanh(2^-i)) ~= 1.1182 over the schedule; the
+    exp() range reduction below guarantees z in [0, ln2).
+    Returns (sinh z, cosh z).
+    """
+    sched = hyperbolic_schedule(n_iters)
+    gain = cordic_gain(sched)
+    x = jnp.full_like(z, 1.0 / gain)  # pre-scale: removes the K factor
+    y = jnp.zeros_like(z)
+    zz = z
+    for i in sched:
+        d = jnp.where(zz >= 0, 1.0, -1.0)
+        e = _ATANH[i - 1]
+        shift = 2.0 ** (-i)
+        x, y = x + d * y * shift, y + d * x * shift
+        zz = zz - d * e
+    return y, x
+
+
+def cordic_exp(x: Array, n_iters: int) -> Array:
+    """e^x via range reduction + hyperbolic CORDIC.
+
+    m = floor(x / ln2) is a shift count on the FPGA; r in [0, ln2).
+    """
+    x = x.astype(jnp.float32)
+    m = jnp.floor(x / LN2)
+    r = x - m * LN2
+    s, c = cordic_sinh_cosh(r, n_iters)
+    e_r = s + c
+    # clamp the exponent so 2^m stays finite in fp32
+    m = jnp.clip(m, -126, 126).astype(jnp.int32)
+    return jnp.ldexp(e_r, m)
+
+
+def cordic_sigmoid(x: Array, n_iters: int) -> Array:
+    e = cordic_exp(-jnp.abs(x), n_iters)          # e^{-|x|} in (0, 1]
+    pos = 1.0 / (1.0 + e)                          # for x >= 0
+    return jnp.where(x >= 0, pos, 1.0 - pos)
+
+
+def cordic_tanh(x: Array, n_iters: int) -> Array:
+    return 2.0 * cordic_sigmoid(2.0 * x, n_iters) - 1.0
+
+
+def cordic_softmax(x: Array, n_iters: int, axis: int = -1) -> Array:
+    m = jax.lax.stop_gradient(jnp.max(x, axis=axis, keepdims=True))
+    e = cordic_exp(x - m, n_iters)
+    return e / jnp.sum(e, axis=axis, keepdims=True)
+
+
+# ---------------------------------------------------------------------------
+# Dispatch
+# ---------------------------------------------------------------------------
+
+_NATIVE = {
+    "relu": jax.nn.relu,
+    "sigmoid": jax.nn.sigmoid,
+    "tanh": jnp.tanh,
+    "softmax": jax.nn.softmax,
+    "gelu": jax.nn.gelu,
+    "silu": jax.nn.silu,
+    "identity": lambda x: x,
+}
+
+# activation kinds V-ACT implements natively in hardware
+VACT_KINDS = ("relu", "sigmoid", "tanh", "softmax")
+
+
+def activation(x: Array, kind: str, policy: Optional[QuantPolicy] = None,
+               axis: int = -1) -> Array:
+    """Evaluate an activation under the policy's act_backend.
+
+    When the policy quantizes activations (a_bits < 32) the output is
+    fake-quantized — this models V-ACT's fused requantize stage (the
+    FPGA unit emits FxP directly; fusing avoids an HBM round trip).
+    """
+    if policy is None or policy.act_backend == "native" or kind not in VACT_KINDS:
+        if kind == "softmax":
+            out = jax.nn.softmax(x, axis=axis)
+        else:
+            out = _NATIVE[kind](x)
+    else:
+        n = cordic_iterations(policy)
+        if kind == "relu":
+            out = jax.nn.relu(x)     # ReLU is a mux on the FPGA too
+        elif kind == "sigmoid":
+            out = cordic_sigmoid(x, n)
+        elif kind == "tanh":
+            out = cordic_tanh(x, n)
+        elif kind == "softmax":
+            out = cordic_softmax(x, n, axis=axis)
+        else:  # pragma: no cover
+            raise KeyError(kind)
+    if policy is not None and policy.quantized_a and kind != "softmax":
+        out = fake_quant(out, policy.a_bits)
+    return out.astype(x.dtype)

@@ -1,0 +1,2 @@
+from repro.data.sharded_loader import place
+from repro.data.synthetic import DataConfig, batch_at, iterate

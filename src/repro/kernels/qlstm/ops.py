@@ -1,0 +1,49 @@
+"""Public wrapper for the fused Q-LSTM cell kernel."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.qlstm import qlstm as _k
+from repro.kernels.qlstm import ref as _ref
+
+# VMEM budget guard for the full-stripe blocking (per-core VMEM ~ 8 MiB;
+# leave generous headroom for double buffering).
+_VMEM_BUDGET_BYTES = 4 * 1024 * 1024
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def qlstm_cell(qx, sx, qh, sh, qw, sw, qu, su, b, c, *,
+               n_iters: int = 13, interpret: Optional[bool] = None):
+    """Fused quantized LSTM step; pads batch to a tile multiple."""
+    if interpret is None:
+        interpret = _interpret_default()
+    B, Din = qx.shape
+    H = c.shape[-1]
+    footprint = (Din * 4 * H) + (H * 4 * H) + 4 * (4 * H) * 4
+    if footprint > _VMEM_BUDGET_BYTES:
+        raise ValueError(
+            f"qlstm full-stripe blocking needs {footprint} B of VMEM "
+            f"(> {_VMEM_BUDGET_BYTES}); tile H or fall back to qmac+vact")
+    bb = 8
+    pb = (-B) % bb
+    if pb:
+        pad = lambda a: jnp.pad(a, ((0, pb), (0, 0)))
+        qx, qh, c = pad(qx), pad(qh), pad(c)
+    sx = jnp.asarray(sx, jnp.float32).reshape(1, 1)
+    sh = jnp.asarray(sh, jnp.float32).reshape(1, 1)
+    sw = jnp.asarray(sw, jnp.float32).reshape(1, 4 * H)
+    su = jnp.asarray(su, jnp.float32).reshape(1, 4 * H)
+    b = jnp.asarray(b, jnp.float32).reshape(1, 4 * H)
+    h_new, c_new = _k.qlstm_cell_kernel(qx, sx, qh, sh, qw, sw, qu, su,
+                                        b, c, n_iters=n_iters, bb=bb,
+                                        interpret=interpret)
+    return h_new[:B], c_new[:B]
+
+
+ref_qlstm_cell = _ref.qlstm_cell

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the fused Q-LSTM cell."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.vact import cordic_sigmoid, cordic_tanh
+
+
+def qlstm_cell(qx, sx, qh, sh, qw, sw, qu, su, b, c, n_iters: int):
+    """One quantized LSTM step (paper Sec. III: Q-LSTM block).
+
+    qx:[B,Din]i8  qh:[B,H]i8  qw:[Din,4H]i8  qu:[H,4H]i8
+    sx/sh: scalars; sw/su: [1,4H] per-channel; b: [4H]; c: [B,H] fp32.
+    Gate order i|f|g|o.  Returns (h', c') fp32.
+    """
+    acc_x = jax.lax.dot_general(qx, qw, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.int32)
+    acc_h = jax.lax.dot_general(qh, qu, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.int32)
+    gates = (acc_x.astype(jnp.float32) * sx * sw
+             + acc_h.astype(jnp.float32) * sh * su + b)
+    H = c.shape[-1]
+    i = cordic_sigmoid(gates[:, 0 * H:1 * H], n_iters)
+    f = cordic_sigmoid(gates[:, 1 * H:2 * H], n_iters)
+    g = cordic_tanh(gates[:, 2 * H:3 * H], n_iters)
+    o = cordic_sigmoid(gates[:, 3 * H:4 * H], n_iters)
+    c_new = f * c + i * g
+    h_new = cordic_tanh(c_new, n_iters) * o
+    return h_new, c_new

@@ -1,0 +1,69 @@
+"""jit'd public wrappers for the Q-MAC kernel (padding + backend glue)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.qmac import qmac as _k
+from repro.kernels.qmac import ref as _ref
+
+
+def _pad_to(x, m0, m1):
+    p0 = (-x.shape[0]) % m0
+    p1 = (-x.shape[1]) % m1
+    if p0 or p1:
+        x = jnp.pad(x, ((0, p0), (0, p1)))
+    return x
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def qmac_i8(qx: jax.Array, qw: jax.Array, *, bm=None, bn=None, bk=None,
+            interpret=None) -> jax.Array:
+    """int8 [M,K] x int8 [K,N] -> int32 [M,N], any M/K/N (auto-padded)."""
+    if interpret is None:
+        interpret = _interpret_default()
+    m, k = qx.shape
+    _, n = qw.shape
+    bm = bm or min(_k.DEFAULT_BM, _round_block(m))
+    bn = bn or min(_k.DEFAULT_BN, _round_block(n))
+    bk = bk or min(_k.DEFAULT_BK, _round_block(k))
+    qxp = _pad_to(qx, bm, bk)
+    qwp = _pad_to(qw, bk, bn)
+    out = _k.qmac_i8_kernel(qxp, qwp, bm=bm, bn=bn, bk=bk,
+                            interpret=interpret)
+    return out[:m, :n]
+
+
+def qmac_i8_deq(qx, sx, qw, sw, *, bm=None, bn=None, bk=None,
+                interpret=None) -> jax.Array:
+    """Fused dequantizing int8 matmul -> fp32."""
+    if interpret is None:
+        interpret = _interpret_default()
+    m, k = qx.shape
+    _, n = qw.shape
+    bm = bm or min(_k.DEFAULT_BM, _round_block(m))
+    bn = bn or min(_k.DEFAULT_BN, _round_block(n))
+    bk = bk or min(_k.DEFAULT_BK, _round_block(k))
+    qxp = _pad_to(qx, bm, bk)
+    qwp = _pad_to(qw, bk, bn)
+    sxp = _pad_to(sx.astype(jnp.float32), bm, 1)
+    swp = _pad_to(sw.astype(jnp.float32), 1, bn)
+    out = _k.qmac_i8_deq_kernel(qxp, sxp, qwp, swp, bm=bm, bn=bn, bk=bk,
+                                interpret=interpret)
+    return out[:m, :n]
+
+
+def _round_block(dim: int) -> int:
+    """Largest power-of-two block <= dim (min 8) for small test shapes."""
+    b = 8
+    while b * 2 <= min(dim, 128):
+        b *= 2
+    return b
+
+
+# re-export oracle for test convenience
+ref_qmac_i8 = _ref.qmac_i8
+ref_qmac_i8_deq = _ref.qmac_i8_deq

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the Q-MAC kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def qmac_i8(qx: jax.Array, qw: jax.Array) -> jax.Array:
+    """int8 x int8 -> int32 matmul oracle. qx: [M, K], qw: [K, N]."""
+    return jax.lax.dot_general(
+        qx, qw, (((qx.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+
+
+def qmac_i8_deq(qx: jax.Array, sx: jax.Array, qw: jax.Array,
+                sw: jax.Array) -> jax.Array:
+    """Fused dequantize: (qx·qw) * sx * sw -> fp32.
+
+    sx: [M, 1] per-row (per-token) scales; sw: [1, N] per-channel scales.
+    """
+    acc = qmac_i8(qx, qw).astype(jnp.float32)
+    return acc * sx * sw

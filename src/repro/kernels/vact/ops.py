@@ -1,0 +1,75 @@
+"""Public wrappers for V-ACT: shape-agnostic, auto-padded, backend glue."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.vact import vact as _k
+from repro.kernels.vact import ref as _ref
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _as2d(x):
+    if x.ndim == 1:
+        return x[None, :], x.shape
+    return x.reshape(-1, x.shape[-1]), x.shape
+
+
+def _pad2d(x, bm, bn, value=0.0):
+    p0 = (-x.shape[0]) % bm
+    p1 = (-x.shape[1]) % bn
+    if p0 or p1:
+        x = jnp.pad(x, ((0, p0), (0, p1)), constant_values=value)
+    return x
+
+
+def _blk(dim, cap):
+    b = 8
+    while b * 2 <= min(dim, cap):
+        b *= 2
+    return b
+
+
+def vact(x: jax.Array, kind: str, n_iters: int,
+         interpret: Optional[bool] = None) -> jax.Array:
+    """CORDIC activation on any-shaped input (last axis = features)."""
+    if interpret is None:
+        interpret = _interpret_default()
+    x2, shape = _as2d(x.astype(jnp.float32))
+    if kind == "softmax":
+        bm = _blk(x2.shape[0], _k.DEFAULT_BM)
+        # pad rows only; columns must stay exact for the reduction
+        xp = _pad2d(x2, bm, x2.shape[1])
+        out = _k.vact_softmax_kernel(xp, n_iters=n_iters, bm=bm,
+                                     interpret=interpret)
+    else:
+        bm = _blk(x2.shape[0], _k.DEFAULT_BM)
+        bn = _blk(x2.shape[1], _k.DEFAULT_BN)
+        xp = _pad2d(x2, bm, bn)
+        out = _k.vact_ew_kernel(xp, kind=kind, n_iters=n_iters, bm=bm,
+                                bn=bn, interpret=interpret)
+    return out[: x2.shape[0], : x2.shape[1]].reshape(shape)
+
+
+def vact_q8(qx: jax.Array, sx: jax.Array, kind: str, n_iters: int,
+            interpret: Optional[bool] = None) -> jax.Array:
+    """Fused int8->int8 activation (output scale 1/127)."""
+    if interpret is None:
+        interpret = _interpret_default()
+    x2, shape = _as2d(qx)
+    bm = _blk(x2.shape[0], _k.DEFAULT_BM)
+    bn = _blk(x2.shape[1], _k.DEFAULT_BN)
+    xp = _pad2d(x2, bm, bn)
+    s = jnp.asarray(sx, jnp.float32).reshape(1, 1)
+    out = _k.vact_ew_q8_kernel(xp, s, kind=kind, n_iters=n_iters,
+                               bm=bm, bn=bn, interpret=interpret)
+    return out[: x2.shape[0], : x2.shape[1]].reshape(shape)
+
+
+ref_vact = _ref.vact
+ref_vact_q8 = _ref.vact_q8

@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the V-ACT kernel: the core CORDIC math itself."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.vact import (cordic_exp, cordic_sigmoid, cordic_softmax,
+                             cordic_tanh)
+
+
+def vact(x: jax.Array, kind: str, n_iters: int) -> jax.Array:
+    if kind == "relu":
+        return jax.nn.relu(x)
+    if kind == "sigmoid":
+        return cordic_sigmoid(x, n_iters)
+    if kind == "tanh":
+        return cordic_tanh(x, n_iters)
+    if kind == "softmax":
+        return cordic_softmax(x, n_iters, axis=-1)
+    raise KeyError(kind)
+
+
+def vact_q8(qx: jax.Array, sx: jax.Array, kind: str, n_iters: int):
+    """Fused int8-in / int8-out oracle.
+
+    Output scale is static: sigmoid/tanh land in [-1, 1] so one LSB is
+    1/127 — exactly the paper's 'V-ACT emits FxP directly' datapath.
+    """
+    x = qx.astype(jnp.float32) * sx
+    y = vact(x, kind, n_iters)
+    qy = jnp.clip(jnp.round(y * 127.0), -127, 127).astype(jnp.int8)
+    return qy

@@ -1,0 +1,134 @@
+"""V-ACT Pallas TPU kernel: fused quantized CORDIC activation unit.
+
+One kernel body evaluates ReLU / Sigmoid / Tanh (elementwise) or Softmax
+(row-wise) on a VMEM tile using the low-latency hyperbolic CORDIC
+schedule from the paper ((3n/8 + 1) iterations, repeats at i = 4, 13).
+The iteration loop is statically unrolled — on the FPGA these are
+physical pipeline stages; here they are (shift-mul, add) stages the
+Mosaic compiler schedules on the VPU.
+
+The fused int8 variants dequantize on load and requantize on store, so
+a quantized network's activation never round-trips HBM in fp32 — the
+TPU analogue of V-ACT sitting inline in the FxP datapath.
+
+NOTE vs core/vact.py: inside the kernel we use exp2(m) rather than
+ldexp (Mosaic-friendly); numerics are identical in fp32 for |m| <= 126.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.vact import LN2, _ATANH, cordic_gain, hyperbolic_schedule
+
+DEFAULT_BM = 256
+DEFAULT_BN = 128
+
+
+def _cordic_exp_tile(x, n_iters: int):
+    """e^x on a tile: range-reduce, CORDIC sinh/cosh, exponent scale."""
+    m = jnp.floor(x / LN2)
+    r = x - m * LN2
+    sched = hyperbolic_schedule(n_iters)
+    gain = cordic_gain(sched)
+    cx = jnp.full_like(r, 1.0 / gain)
+    cy = jnp.zeros_like(r)
+    zz = r
+    for i in sched:                      # static unroll: pipeline stages
+        d = jnp.where(zz >= 0, 1.0, -1.0).astype(r.dtype)
+        shift = jnp.asarray(2.0 ** (-i), r.dtype)
+        cx, cy = cx + d * cy * shift, cy + d * cx * shift
+        zz = zz - d * jnp.asarray(_ATANH[i - 1], r.dtype)
+    e_r = cx + cy
+    m = jnp.clip(m, -126.0, 126.0)
+    return e_r * jnp.exp2(m)
+
+
+def _sigmoid_tile(x, n_iters):
+    e = _cordic_exp_tile(-jnp.abs(x), n_iters)
+    pos = 1.0 / (1.0 + e)
+    return jnp.where(x >= 0, pos, 1.0 - pos)
+
+
+def _apply_kind(x, kind: str, n_iters: int):
+    if kind == "relu":
+        return jnp.maximum(x, 0.0)
+    if kind == "sigmoid":
+        return _sigmoid_tile(x, n_iters)
+    if kind == "tanh":
+        return 2.0 * _sigmoid_tile(2.0 * x, n_iters) - 1.0
+    raise KeyError(kind)
+
+
+def _ew_kernel(x_ref, o_ref, *, kind, n_iters):
+    o_ref[...] = _apply_kind(x_ref[...].astype(jnp.float32), kind, n_iters)
+
+
+def _ew_q8_kernel(qx_ref, sx_ref, qo_ref, *, kind, n_iters):
+    x = qx_ref[...].astype(jnp.float32) * sx_ref[0, 0]
+    y = _apply_kind(x, kind, n_iters)
+    qo_ref[...] = jnp.clip(jnp.round(y * 127.0), -127, 127).astype(jnp.int8)
+
+
+def _softmax_kernel(x_ref, o_ref, *, n_iters):
+    x = x_ref[...].astype(jnp.float32)
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = _cordic_exp_tile(x - m, n_iters)
+    o_ref[...] = e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("kind", "n_iters", "bm", "bn",
+                                    "interpret"))
+def vact_ew_kernel(x, *, kind, n_iters, bm=DEFAULT_BM, bn=DEFAULT_BN,
+                   interpret=False):
+    m, n = x.shape
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        functools.partial(_ew_kernel, kind=kind, n_iters=n_iters),
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, bn), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("kind", "n_iters", "bm", "bn",
+                                    "interpret"))
+def vact_ew_q8_kernel(qx, sx, *, kind, n_iters, bm=DEFAULT_BM,
+                      bn=DEFAULT_BN, interpret=False):
+    """int8 in -> int8 out (scale 1/127), fused (de/re)quantization."""
+    m, n = qx.shape
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        functools.partial(_ew_q8_kernel, kind=kind, n_iters=n_iters),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int8),
+        interpret=interpret,
+    )(qx, sx)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_iters", "bm", "interpret"))
+def vact_softmax_kernel(x, *, n_iters, bm=DEFAULT_BM, interpret=False):
+    """Row softmax; each block holds full rows (n must fit VMEM)."""
+    m, n = x.shape
+    grid = (m // bm,)
+    return pl.pallas_call(
+        functools.partial(_softmax_kernel, n_iters=n_iters),
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x)

@@ -1,0 +1,4 @@
+# NOTE: dryrun.py must be imported/run as __main__ FIRST in a fresh
+# process (it sets XLA_FLAGS before jax init); do not import it here.
+from repro.launch.mesh import (describe, make_host_mesh,
+                               make_production_mesh)

@@ -1,0 +1,131 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    # The CPU backend hoists whole-stack dtype converts out of the
+    # backward while-loop (LICM), inflating the apparent live-buffer
+    # size by O(L * activations); TPU buffer assignment does not pay
+    # this, so disable the pass for a faithful memory estimate.
+    "--xla_disable_hlo_passes=while-loop-invariant-code-motion")
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production meshes, print memory/cost analysis, emit roofline terms.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-72b \
+        --shape train_4k [--multi-pod] [--policy w8a8_bf16] [--json out]
+
+The two XLA_FLAGS lines above MUST stay the first statements: jax locks
+the device count at first backend init.
+"""
+import argparse      # noqa: E402
+import json          # noqa: E402
+import sys           # noqa: E402
+import time          # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs.registry import ARCHS, get_arch          # noqa: E402
+from repro.configs.shapes import SHAPES, shape_applicable   # noqa: E402
+from repro.core.policy import get_policy                    # noqa: E402
+from repro.launch import hlo_analysis                       # noqa: E402
+from repro.launch.mesh import describe, make_production_mesh  # noqa: E402
+from repro.launch.roofline import roofline_terms            # noqa: E402
+from repro.launch.steps import lower_cell                   # noqa: E402
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             policy_name: str = "qforce8",
+             dtype=jnp.float32, verbose: bool = True) -> dict:
+    cfg = get_arch(arch)
+    shape = SHAPES[shape_name]
+    skip = shape_applicable(cfg, shape)
+    if skip:
+        return {"arch": arch, "shape": shape_name, "status": skip}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    policy = get_policy(policy_name)
+    t0 = time.time()
+    lowered, meta = lower_cell(cfg, shape, mesh, policy, dtype)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = hlo_analysis.memory_stats(compiled)
+    hlo = compiled.as_text()
+    cost = hlo_analysis.cost_terms(compiled, hlo)
+    roof = roofline_terms(cfg, shape, mesh, cost)
+    result = {
+        "arch": arch, "shape": shape_name, "status": "ok",
+        "mesh": dict(zip(mesh.axis_names,
+                         (int(s) for s in mesh.devices.shape))),
+        "step": meta["step"], "policy": policy_name,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": mem, "cost": cost, "roofline": roof,
+        "hlo_ops": hlo_analysis.op_histogram(hlo),
+    }
+    if verbose:
+        print(f"== {arch} x {shape_name} on {describe(mesh)} "
+              f"[{meta['step']}, {policy_name}] ==")
+        print(f"   lower {t_lower:.1f}s  compile {t_compile:.1f}s")
+        print(f"   memory/device: "
+              f"args {mem['argument_size_in_bytes']/2**30:.2f} GiB  "
+              f"temps {mem['temp_size_in_bytes']/2**30:.2f} GiB  "
+              f"total {mem['total_bytes']/2**30:.2f} GiB")
+        print(f"   HLO flops/device {cost['flops']:.3e}  "
+              f"bytes/device {cost['bytes']:.3e}  "
+              f"collective bytes/device {cost['collective_bytes']:.3e}")
+        print(f"   roofline: compute {roof['t_compute']:.2e}s  "
+              f"memory {roof['t_memory']:.2e}s  "
+              f"collective {roof['t_collective']:.2e}s  "
+              f"-> bound: {roof['bound']}  "
+              f"(model-flops util ceiling "
+              f"{100 * roof['useful_flops_frac']:.0f}%)")
+    return result
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all",
+                    help=f"one of {sorted(ARCHS)} or 'all'")
+    ap.add_argument("--shape", default="all",
+                    help=f"one of {sorted(SHAPES)} or 'all'")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--policy", default="qforce8")
+    ap.add_argument("--dtype", default="float32",
+                    choices=["float32", "bfloat16"])
+    ap.add_argument("--json", default=None, help="write results here")
+    args = ap.parse_args(argv)
+
+    archs = sorted(ARCHS) if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    dtype = jnp.float32 if args.dtype == "float32" else jnp.bfloat16
+
+    results, failures = [], 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                try:
+                    results.append(run_cell(arch, shape, mp,
+                                            args.policy, dtype))
+                except Exception as e:   # a failure here is a real bug
+                    failures += 1
+                    results.append({"arch": arch, "shape": shape,
+                                    "multi_pod": mp, "status": "FAIL",
+                                    "error": repr(e)[:500]})
+                    print(f"!! FAIL {arch} x {shape} "
+                          f"(multi_pod={mp}): {e}", file=sys.stderr)
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=1)
+    ok = sum(1 for r in results if r["status"] == "ok")
+    skipped = sum(1 for r in results if r["status"].startswith("skip"))
+    print(f"\n{ok} ok / {skipped} skipped / {failures} FAILED")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

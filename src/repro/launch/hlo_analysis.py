@@ -1,0 +1,392 @@
+"""HLO cost model: flops / bytes / collective traffic with while-loop
+trip-count scaling.
+
+Why not ``compiled.cost_analysis()``: XLA's aggregate counts each
+``while`` body ONCE, so any scan-over-layers model (all of ours) is
+undercounted by ~n_layers x.  We parse the optimized HLO text into a
+computation graph and walk it recursively, multiplying loop bodies by
+their trip counts (recovered from the loop-condition constants).
+
+Counted:
+  flops            dot/convolution FLOPs with fp operands (2*out*K)
+  int_ops          same for integer dots (the int8 MXU path, 2x peak)
+  bytes            operand+output bytes of fusions/dots/copies/DUS
+                   (XLA's own bytes-accessed convention)
+  collectives      bytes by kind, all-reduce counted 2x (ring RS+AG)
+
+SECURITY note: this is a text parser for compiler output we generate
+ourselves; it is a measurement tool, not a validator.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16,
+}
+_INT_TYPES = {"s4", "u4", "s8", "u8", "s16", "u16", "s32", "u32"}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter",
+                  "all-to-all", "collective-permute")
+
+# op line inside a computation:  %name = <shape> opcode(...) , attrs
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*((?:\(.*?\)|[\w\[\],{}\/*\s]+?))"
+    r"\s*([\w\-]+)\((.*)$")
+_PARAM_DECL_RE = re.compile(r"([\w.\-]+):\s*(\([^=]*?\)|[\w\[\],{}]+)")
+
+
+def _shape_elems_bytes(shape_str: str) -> Tuple[float, float]:
+    """(total elements, total bytes) over all leaf shapes in the str."""
+    elems = 0.0
+    total = 0.0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        total += n * _DTYPE_BYTES[dt]
+    return elems, total
+
+
+def _leaf_dims(shape_str: str) -> List[int]:
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+def _leaf_dtype(shape_str: str) -> Optional[str]:
+    m = _SHAPE_RE.search(shape_str)
+    return m.group(1) if m else None
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    opcode: str
+    out_shape: str
+    rest: str            # operand list + attributes (raw tail)
+    operands: List[str]  # %-refs
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: List[Op]
+    shapes: Dict[str, str]          # symbol -> shape string
+    params: List[str] = dataclasses.field(default_factory=list)
+
+
+def parse_module(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            ls = line.strip()
+            # computation header: "%name (params) -> type {"
+            if ls.endswith("{") and "->" in ls and "(" in ls:
+                name = ls.split("(", 1)[0].strip()
+                name = name.replace("ENTRY", "").strip().lstrip("%")
+                if not name:
+                    continue
+                cur = Computation(name, [], {})
+                hdr = ls[ls.find("(") + 1: ls.rfind("->")]
+                for pm in _PARAM_DECL_RE.finditer(hdr):
+                    cur.shapes[pm.group(1)] = pm.group(2)
+                    cur.params.append(pm.group(1))
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        name, shape, opcode, rest = m.groups()
+        operands = re.findall(r"%([\w.\-]+)", rest.split(
+            ", metadata=")[0].split(", calls=")[0].split(
+            ", condition=")[0].split(", body=")[0].split(
+            ", to_apply=")[0])
+        op = Op(name, opcode, shape.strip(), rest, operands)
+        cur.shapes[name] = op.out_shape
+        cur.ops.append(op)
+    return comps
+
+
+def _trip_count(cond: Computation) -> int:
+    """Loop bound from the condition computation: the largest integer
+    constant that is compared against (scan bounds are exact)."""
+    best = 1
+    for op in cond.ops:
+        if op.opcode == "constant":
+            m = re.search(r"constant\((\d+)\)", "constant(" + op.rest)
+            if m:
+                best = max(best, int(m.group(1)))
+    return best
+
+
+_SKIP_BYTES = {"parameter", "constant", "get-tuple-element", "tuple",
+               "bitcast", "after-all", "partition-id", "replica-id",
+               "reshape", "broadcast", "iota", "transpose",
+               # control flow: cost comes from the bodies, not the op
+               "while", "conditional", "call"}
+
+
+def _dot_flops(op: Op, comp: Computation) -> Tuple[float, bool]:
+    """(flops, is_integer) for a dot; 2 * prod(out) * K."""
+    out_elems, _ = _shape_elems_bytes(op.out_shape)
+    k = 1.0
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rest)
+    lhs_ref = op.operands[0] if op.operands else None
+    lhs_shape = comp.shapes.get(lhs_ref, "") if lhs_ref else ""
+    dims = _leaf_dims(lhs_shape)
+    if m and dims:
+        for d in m.group(1).split(","):
+            if d and int(d) < len(dims):
+                k *= dims[int(d)]
+    is_int = _leaf_dtype(op.out_shape) in _INT_TYPES
+    return 2.0 * out_elems * k, is_int
+
+
+def _conv_flops(op: Op, comp: Computation) -> float:
+    out_elems, _ = _shape_elems_bytes(op.out_shape)
+    # kernel elements from rhs operand shape (excluding out-features)
+    if len(op.operands) > 1:
+        kdims = _leaf_dims(comp.shapes.get(op.operands[1], ""))
+        if kdims:
+            import math
+            return 2.0 * out_elems * (math.prod(kdims[:-1]))
+    return 0.0
+
+
+class CostModel:
+    def __init__(self, text: str):
+        self.comps = parse_module(text)
+        self.entry = None
+        for name in self.comps:
+            if ".entry" in name or name.startswith("main") \
+                    or "ENTRY" in name:
+                self.entry = name
+        # jax entry computation is usually 'main.N'
+        if self.entry is None:
+            # fall back: the computation that nobody calls
+            called = set()
+            for c in self.comps.values():
+                for op in c.ops:
+                    for attr in ("calls=", "body=", "condition=",
+                                 "to_apply="):
+                        for m in re.finditer(
+                                attr + r"%([\w.\-]+)", op.rest):
+                            called.add(m.group(1))
+            for name in self.comps:
+                if name not in called:
+                    self.entry = name
+        self._memo: Dict[str, Dict[str, float]] = {}
+
+    def _called(self, op: Op, attr: str) -> Optional[str]:
+        m = re.search(attr + r"%([\w.\-]+)", op.rest)
+        return m.group(1) if m else None
+
+    def _op_bytes(self, op: Op, comp: Computation) -> float:
+        """Bytes accessed by one op, XLA-convention: slicing ops touch
+        the slice, not the base buffer.
+
+        For fusions, each operand is charged the bytes its *uses inside
+        the fused computation* actually touch: a parameter consumed only
+        by dynamic-slice / dynamic-update-slice (the scan-stacked
+        weights/activations pattern) costs the slice size, not the full
+        [L, ...] stack — otherwise an 80-layer scan would be charged
+        80x its true traffic.
+        """
+        _, ob = _shape_elems_bytes(op.out_shape)
+        oc = op.opcode
+        if oc == "dynamic-slice" or oc == "gather":
+            return 2.0 * ob
+        if oc == "dynamic-update-slice":
+            ub = _shape_elems_bytes(
+                comp.shapes.get(op.operands[1], ""))[1] \
+                if len(op.operands) > 1 else 0.0
+            return 2.0 * ub + ob * 0.0      # base is aliased in place
+        ib = 0.0
+        callee = self.comps.get(self._called(op, "calls=") or "") \
+            if oc == "fusion" else None
+        if callee is not None and callee.ops \
+                and callee.ops[-1].opcode == "dynamic-update-slice":
+            # fusion whose root is a DUS into a big (aliased) buffer:
+            # the write is update-sized, not buffer-sized
+            root = callee.ops[-1]
+            ob = _shape_elems_bytes(
+                callee.shapes.get(root.operands[1], ""))[1] \
+                if len(root.operands) > 1 else ob
+        for i, ref in enumerate(op.operands):
+            s = comp.shapes.get(ref)
+            if not s:
+                continue
+            full = _shape_elems_bytes(s)[1]
+            if callee is not None and i < len(callee.params):
+                pname = callee.params[i]
+                uses = [o for o in callee.ops
+                        if pname in o.operands]
+                if uses and all(o.opcode in ("dynamic-slice",
+                                             "dynamic-update-slice")
+                                for o in uses):
+                    touched = 0.0
+                    for o in uses:
+                        if o.opcode == "dynamic-slice":
+                            touched += _shape_elems_bytes(
+                                o.out_shape)[1]
+                        else:
+                            touched += _shape_elems_bytes(
+                                callee.shapes.get(o.operands[1], "")
+                            )[1] if len(o.operands) > 1 else 0.0
+                    full = min(full, touched)
+            ib += full
+        return ib + ob
+
+    def cost_of(self, comp_name: str) -> Dict[str, float]:
+        if comp_name in self._memo:
+            return self._memo[comp_name]
+        comp = self.comps.get(comp_name)
+        zero = {"flops": 0.0, "int_ops": 0.0, "bytes": 0.0,
+                **{k: 0.0 for k in COLLECTIVE_OPS}}
+        if comp is None:
+            return zero
+        total = dict(zero)
+        self._memo[comp_name] = total       # break cycles
+        for op in comp.ops:
+            oc = op.opcode
+            if oc == "while":
+                body = self._called(op, "body=")
+                cond = self._called(op, "condition=")
+                trips = _trip_count(self.comps[cond]) \
+                    if cond in self.comps else 1
+                sub = self.cost_of(body) if body else zero
+                csub = self.cost_of(cond) if cond else zero
+                for k in total:
+                    total[k] += trips * (sub[k] + csub[k])
+                continue
+            if oc in ("fusion", "call", "custom-call", "map",
+                      "reduce", "reduce-window", "sort", "scatter",
+                      "select-and-scatter"):
+                callee = self._called(op, "calls=") or \
+                    self._called(op, "to_apply=")
+                if callee:
+                    sub = self.cost_of(callee)
+                    for k in total:
+                        # a fusion's interior never materializes: its
+                        # traffic is the op's own boundary bytes below
+                        if k == "bytes" and oc == "fusion":
+                            continue
+                        total[k] += sub[k]
+            if oc == "conditional":
+                # count the most expensive branch
+                branches = re.findall(r"%([\w.\-]+)", op.rest)
+                best = zero
+                for b in branches:
+                    if b in self.comps:
+                        c = self.cost_of(b)
+                        if c["flops"] + c["bytes"] > \
+                                best["flops"] + best["bytes"]:
+                            best = c
+                for k in total:
+                    total[k] += best[k]
+                continue
+
+            base = oc.replace("-start", "")
+            if base in COLLECTIVE_OPS and not oc.endswith("-done"):
+                _, b = _shape_elems_bytes(op.out_shape)
+                if base == "all-reduce":
+                    b *= 2.0        # ring: reduce-scatter + all-gather
+                if base == "all-gather":
+                    pass            # output-sized traffic
+                total[base] += b
+                total["bytes"] += 0.0
+                continue
+
+            if oc == "dot":
+                f, is_int = _dot_flops(op, comp)
+                total["int_ops" if is_int else "flops"] += f
+            elif oc == "convolution":
+                total["flops"] += _conv_flops(op, comp)
+
+            if oc not in _SKIP_BYTES:
+                total["bytes"] += self._op_bytes(op, comp)
+        self._memo[comp_name] = total
+        return total
+
+    def totals(self) -> Dict[str, float]:
+        t = self.cost_of(self.entry) if self.entry else {}
+        t = dict(t)
+        t["collective_bytes"] = sum(t.get(k, 0.0)
+                                    for k in COLLECTIVE_OPS)
+        return t
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Trip-count-aware collective traffic by kind."""
+    cm = CostModel(hlo_text)
+    t = cm.totals()
+    out = {k: t.get(k, 0.0) for k in COLLECTIVE_OPS}
+    out["total"] = t.get("collective_bytes", 0.0)
+    return out
+
+
+def op_histogram(hlo_text: str, ops=("fusion", "all-gather", "all-reduce",
+                                     "reduce-scatter", "all-to-all",
+                                     "collective-permute", "custom-call",
+                                     "while", "dot", "convolution",
+                                     "dynamic-update-slice")) -> Dict[str, int]:
+    hist = {}
+    for op in ops:
+        hist[op] = len(re.findall(rf"= [^=]*\b{re.escape(op)}\(",
+                                  hlo_text))
+    return hist
+
+
+def cost_terms(compiled, hlo_text: Optional[str] = None) -> Dict[str, float]:
+    """Trip-count-corrected {flops, int_ops, bytes, collective_bytes}
+    from a compiled executable, with XLA's own (uncorrected) aggregate
+    kept for reference."""
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    cm = CostModel(text)
+    t = cm.totals()
+    xla = compiled.cost_analysis()
+    if isinstance(xla, list):
+        xla = xla[0]
+    return {
+        "flops": t.get("flops", 0.0),
+        "int_ops": t.get("int_ops", 0.0),
+        "bytes": t.get("bytes", 0.0),
+        "collective_bytes": t.get("collective_bytes", 0.0),
+        "collectives": {k: t.get(k, 0.0) for k in COLLECTIVE_OPS},
+        "xla_flops_1trip": float(xla.get("flops", 0.0)),
+        "xla_bytes_1trip": float(xla.get("bytes accessed", 0.0)),
+    }
+
+
+def memory_stats(compiled) -> Dict[str, float]:
+    ma = compiled.memory_analysis()
+    keys = ("argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "generated_code_size_in_bytes",
+            "alias_size_in_bytes")
+    out = {}
+    for k in keys:
+        out[k] = float(getattr(ma, k, 0.0))
+    out["total_bytes"] = (out["argument_size_in_bytes"]
+                          + out["output_size_in_bytes"]
+                          + out["temp_size_in_bytes"]
+                          - out["alias_size_in_bytes"])
+    return out

@@ -1,0 +1,23 @@
+"""Production mesh construction (function, not module constant — importing
+this module never touches jax device state)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Whatever this host has (1 CPU device in the container) — used by
+    the runnable examples and the smoke training loop."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"))
+
+
+def describe(mesh) -> str:
+    return (f"mesh {dict(zip(mesh.axis_names, mesh.devices.shape))} "
+            f"({mesh.devices.size} devices)")

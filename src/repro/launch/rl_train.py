@@ -1,0 +1,158 @@
+"""Q-Actor RL training driver: quantized actors + full-precision
+learner + int8 weight sync (the paper's Fig. 2 system).
+
+    PYTHONPATH=src python -m repro.launch.rl_train --env cartpole \
+        --iters 40 --actor-policy fxp8 [--agent hrl] [--two-stage]
+
+The actor fleet is a vectorized batch of environments; each "actor" is
+a slice running under a (possibly stale, possibly quantized) copy of
+the learner weights.  The learner updates with PPO.  Checkpoints make
+the loop restart-safe.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointManager
+from repro.configs.e2hrl import HRLConfig
+from repro.core.policy import get_policy
+from repro.models import hrl
+from repro.nn.module import unbox
+from repro.optim import AdamWConfig, adamw_init, adamw_update, constant
+from repro.rl import PPOConfig, batch_from_traj, init_envs, rollout
+from repro.rl.actor_learner import (ActorLearnerConfig, VersionBuffer,
+                                    pack_weights, sync_bytes,
+                                    unpack_weights)
+from repro.rl.envs import get_env
+from repro.rl.nets import mlp_ac_apply, mlp_ac_init
+from repro.rl.ppo import minibatch_epochs, stage_mask
+from repro.rl.rollout import episode_returns
+
+
+def make_agent(agent: str, env: dict, key, policy_name: Optional[str]):
+    if agent == "mlp":
+        params = unbox(mlp_ac_init(key, env["obs_shape"][0],
+                                   env["n_actions"]))
+        apply_fn = mlp_ac_apply
+        return params, apply_fn
+    cfg = HRLConfig(n_actions=env["n_actions"])
+    params = unbox(hrl.init(key, cfg))
+
+    def apply_fn(p, obs, policy=None):
+        logits, value, _ = hrl.apply(p, obs, cfg, policy)
+        return logits, value
+
+    return params, apply_fn
+
+
+def rl_train(env_name: str = "cartpole", agent: str = "mlp",
+             iters: int = 40, n_envs: int = 32, rollout_len: int = 128,
+             actor_policy: Optional[str] = "fxp8", lr: float = 3e-3,
+             comm_bits: int = 8, max_lag: int = 1, seed: int = 0,
+             two_stage: bool = False, ckpt_dir: Optional[str] = None,
+             log_every: int = 5, verbose: bool = True):
+    env = get_env(env_name)
+    key = jax.random.PRNGKey(seed)
+    params, apply_fn = make_agent(agent, env, key, actor_policy)
+    a_policy = get_policy(actor_policy) if actor_policy else None
+
+    opt = adamw_init(params)
+    ocfg = AdamWConfig(weight_decay=0.0, max_grad_norm=0.5)
+    pcfg = PPOConfig()
+    sched = constant(lr)
+    start = 0
+    mgr = None
+    if ckpt_dir:
+        mgr = CheckpointManager(ckpt_dir, keep=2, save_every=10)
+        if mgr.latest_step() is not None:
+            (params, opt), md = mgr.restore((params, opt))
+            start = int(md.get("step", 0))
+            if verbose:
+                print(f"resumed from iter {start}")
+
+    est, obs = init_envs(env, jax.random.PRNGKey(seed + 1), n_envs)
+    versions = VersionBuffer(max_lag)
+    learner_apply = lambda p, o: apply_fn(p, o, None)
+
+    total_sync_payload = 0
+
+    @jax.jit
+    def iteration(params, opt, est, obs, packed, key):
+        k1, k2 = jax.random.split(key)
+        actor_params = unpack_weights(packed)
+        actor_apply = lambda p, o: apply_fn(p, o, a_policy)
+        res = rollout(actor_params, env, actor_apply, k1, est, obs,
+                      rollout_len)
+        batch = batch_from_traj(res.traj, res.last_value, pcfg)
+
+        def opt_step(p, s, g):
+            p, s, _ = adamw_update(g, s, p, sched, ocfg)
+            return p, s
+
+        gmask = None
+        params, opt, stats = minibatch_epochs(
+            k2, params, opt, batch, learner_apply, pcfg, opt_step,
+            grad_mask=gmask)
+        ret, n_ep = episode_returns(res.traj)
+        return params, opt, res.final_env, res.final_obs, ret, n_ep
+
+    history = []
+    t0 = time.time()
+    stage_list = (["action", "subgoal"] if two_stage and agent == "hrl"
+                  else [None])
+    for stage in stage_list:
+        for it in range(start, iters):
+            # learner -> actors: quantized weight sync (staleness-aware)
+            packed = pack_weights(params, comm_bits)
+            versions.push(packed)
+            stale = versions.stale(max_lag - 1)
+            payload, fp32_eq = sync_bytes(stale)
+            total_sync_payload += payload
+            key, sub = jax.random.split(key)
+            params, opt, est, obs, ret, n_ep = iteration(
+                params, opt, est, obs, stale, sub)
+            history.append(float(ret))
+            if verbose and (it % log_every == 0 or it == iters - 1):
+                sfx = f" [stage={stage}]" if stage else ""
+                print(f"iter {it:4d}  return {float(ret):8.2f}  "
+                      f"episodes {int(n_ep):4d}  "
+                      f"sync {payload / 2**20:.2f} MiB "
+                      f"(fp32 {fp32_eq / 2**20:.2f}){sfx}")
+            if mgr and mgr.should_save(it):
+                mgr.save(it, (params, opt))
+    if verbose:
+        print(f"done in {time.time() - t0:.0f}s; "
+              f"total sync payload {total_sync_payload / 2**20:.1f} MiB")
+    return params, history
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--env", default="cartpole",
+                    choices=["cartpole", "keydoor"])
+    ap.add_argument("--agent", default="mlp", choices=["mlp", "hrl"])
+    ap.add_argument("--iters", type=int, default=40)
+    ap.add_argument("--n-envs", type=int, default=32)
+    ap.add_argument("--rollout-len", type=int, default=128)
+    ap.add_argument("--actor-policy", default="fxp8")
+    ap.add_argument("--fp32-actors", action="store_true")
+    ap.add_argument("--comm-bits", type=int, default=8)
+    ap.add_argument("--max-lag", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--two-stage", action="store_true")
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args(argv)
+    rl_train(args.env, args.agent, args.iters, args.n_envs,
+             args.rollout_len,
+             None if args.fp32_actors else args.actor_policy,
+             args.lr, args.comm_bits, args.max_lag,
+             two_stage=args.two_stage, ckpt_dir=args.ckpt_dir)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,92 @@
+"""Roofline terms for TPU v5e from compiled-HLO statistics.
+
+    compute term    = HLO_FLOPs / (peak FLOP/s)          [per device]
+    memory term     = HLO_bytes / HBM bandwidth          [per device]
+    collective term = collective_bytes / link bandwidth  [per device]
+
+cost_analysis() reports per-device (post-SPMD-partitioning) numbers, so
+no further division by chip count is needed.  MODEL_FLOPS = 6*N*D
+(dense) or 6*N_active*D (MoE) gives the useful-work ceiling; the ratio
+against HLO FLOPs exposes remat/redundant compute.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+from repro.configs.base import (ArchConfig, active_param_count,
+                                param_count)
+from repro.configs.shapes import ShapeConfig
+
+# TPU v5e hardware constants (per chip / per link)
+PEAK_BF16 = 197e12           # FLOP/s
+PEAK_INT8 = 394e12           # OP/s (2x bf16)
+PEAK_FP32 = PEAK_BF16 / 8    # MXU fp32 rate ~1/8 bf16
+HBM_BW = 819e9               # B/s
+ICI_BW = 50e9                # B/s per link (given)
+
+
+def model_flops(cfg: ArchConfig, shape: ShapeConfig) -> float:
+    """6*N*D for train; 2*N*D for a forward-only step (prefill);
+    2*N*D_new for decode (D = tokens processed by the step)."""
+    n = active_param_count(cfg) if cfg.is_moe else param_count(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    # decode: one token per sequence per step
+    return 2.0 * n * shape.global_batch
+
+
+def roofline_terms(cfg: ArchConfig, shape: ShapeConfig, mesh,
+                   cost: Dict, peak_flops: float = PEAK_BF16,
+                   peak_int8: float = PEAK_INT8,
+                   hbm_bw: float = HBM_BW,
+                   ici_bw: float = ICI_BW) -> Dict:
+    chips = mesh.devices.size
+    # fp ops at the bf16 MXU rate; int8 dots at the 2x int8 rate
+    t_compute = (cost["flops"] / peak_flops
+                 + cost.get("int_ops", 0.0) / peak_int8)
+    t_memory = cost["bytes"] / hbm_bw
+    t_collective = cost["collective_bytes"] / ici_bw
+    bound = max((("compute", t_compute), ("memory", t_memory),
+                 ("collective", t_collective)), key=lambda kv: kv[1])[0]
+    mf = model_flops(cfg, shape)
+    hlo_total = (cost["flops"] + cost.get("int_ops", 0.0)) * chips
+    useful = mf / hlo_total if hlo_total else 0.0
+    t_bound = max(t_compute, t_memory, t_collective)
+    # model-flops utilization IF the roofline bound were achieved
+    mfu_ceiling = (mf / (chips * peak_flops)) / t_bound if t_bound else 0
+    return {
+        "t_compute": t_compute,
+        "t_memory": t_memory,
+        "t_collective": t_collective,
+        "bound": bound,
+        "t_step": t_bound,
+        "model_flops": mf,
+        "hlo_flops_total": hlo_total,
+        "useful_flops_frac": min(useful, 1.0),
+        "mfu_at_roofline": mfu_ceiling,
+        "chips": chips,
+    }
+
+
+def summarize(results) -> str:
+    """Markdown table from a list of run_cell() dicts."""
+    rows = ["| arch | shape | step | bound | t_comp (s) | t_mem (s) | "
+            "t_coll (s) | t_step (s) | MFU@roof | useful/HLO |",
+            "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in results:
+        if r.get("status") != "ok":
+            rows.append(f"| {r['arch']} | {r['shape']} | - | "
+                        f"{r['status']} | | | | | | |")
+            continue
+        f = r["roofline"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['step']} | {f['bound']} "
+            f"| {f['t_compute']:.2e} | {f['t_memory']:.2e} "
+            f"| {f['t_collective']:.2e} | {f['t_step']:.2e} "
+            f"| {100 * f['mfu_at_roofline']:.1f}% "
+            f"| {100 * f['useful_flops_frac']:.1f}% |")
+    return "\n".join(rows)

@@ -1,0 +1,303 @@
+"""Step builders shared by the dry-run, the launchers and the roofline.
+
+Everything here is *abstract-first*: ``abstract_params`` /
+``abstract_caches`` build ShapeDtypeStruct trees via eval_shape (no
+allocation), and the matching NamedSharding trees come from the
+logical-axis rules — the dry-run contract.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.configs.shapes import ShapeConfig
+from repro.core.policy import QuantPolicy
+from repro.distributed.sharding import (batch_spec, data_axes,
+                                        make_shardings, mesh_rules)
+from repro.models.registry import input_specs, model_for, sharding_rules
+from repro.nn.module import axes_of, unbox
+from repro.optim import (AdamWConfig, adamw_init, adamw_update,
+                         warmup_cosine)
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# abstract state + shardings
+# ---------------------------------------------------------------------------
+
+def abstract_params(cfg: ArchConfig, mesh: Mesh,
+                    dtype=jnp.float32,
+                    weight_ptq: Optional[QuantPolicy] = None,
+                    serve: bool = False) -> Tuple[Any, Any]:
+    """(ShapeDtypeStruct param tree, NamedSharding tree).
+
+    ``weight_ptq``: serve-path semantics — weights stored as int8
+    QTensors (payload + scales), exactly what a deployed engine loads.
+    """
+    model = model_for(cfg)
+    boxed = jax.eval_shape(
+        functools.partial(model.init, cfg=cfg, dtype=dtype),
+        jax.random.PRNGKey(0))
+    axes = axes_of(boxed)
+    if weight_ptq is not None and weight_ptq.quantized_w:
+        from repro.core.quantizer import quantize_params
+        params = jax.eval_shape(
+            lambda t: quantize_params(t, weight_ptq), unbox(boxed))
+    else:
+        params = unbox(boxed)
+    rules = sharding_rules(cfg, mesh.shape.get("model", 1),
+                           serve=serve)
+    shardings = make_shardings(params, axes, mesh, rules)
+    return params, shardings
+
+
+def abstract_opt_state(abs_params, param_shardings, mesh: Mesh):
+    opt = jax.eval_shape(adamw_init, abs_params)
+    shard = {
+        "mu": param_shardings,
+        "nu": param_shardings,
+        "count": NamedSharding(mesh, P()),
+    }
+    return opt, shard
+
+
+def abstract_caches(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh,
+                    kv_bits: int = 32, dtype=jnp.float32):
+    """(ShapeDtypeStruct cache tree, NamedSharding tree) for decode."""
+    model = model_for(cfg)
+    caches = jax.eval_shape(
+        lambda: model.init_caches(cfg, shape.global_batch, shape.seq_len,
+                                  kv_bits, dtype))
+    shardings = cache_shardings(caches, cfg, shape.global_batch, mesh)
+    return caches, shardings
+
+
+def cache_shardings(caches, cfg: ArchConfig, batch: int, mesh: Mesh):
+    """Sharding rules for serving state, by leaf name:
+
+      k/v[_scale]  [.., B, cap, n_kv, hd]  batch->data, kv->model if div
+      pos          [.., B, cap]            batch->data
+      ssm          [.., B, H, hd, N]       batch->data, heads->model
+      conv         [.., B, w, C]           batch->data, C->model if div
+      rglru        [.., B, W]              batch->data, W->model if div
+    """
+    model_n = mesh.shape.get("model", 1)
+    dax = data_axes(mesh)
+    n_data = 1
+    for a in (dax or ()):
+        n_data *= mesh.shape[a]
+    # global_batch=1 (long_500k) cannot shard the batch dim
+    dax = dax if (dax and batch % n_data == 0) else None
+
+    def spec(path, leaf):
+        name = str(getattr(path[-1], "key", path[-1]))
+        nd = leaf.ndim
+        ax: list = [None] * nd
+        if name in ("k", "v", "k_scale", "v_scale"):
+            ax[nd - 4] = dax
+            if cfg.n_kv_heads and cfg.n_kv_heads % model_n == 0:
+                ax[nd - 2] = "model"
+            elif leaf.shape[nd - 3] % model_n == 0:
+                # kv_heads don't divide (GQA kv=8 vs TP=16, whisper
+                # kv=20): shard the SEQUENCE dim — flash-decoding
+                # layout.  Each device scores its slice of the context;
+                # the softmax/output reductions over the sharded dim
+                # lower to tiny stat-sized collectives instead of
+                # gathering the KV cache itself (which costs ~GBs/layer)
+                ax[nd - 3] = "model"
+        elif name == "pos":
+            ax[nd - 2] = dax
+            if leaf.shape[nd - 1] % model_n == 0 and \
+                    not (cfg.n_kv_heads and
+                         cfg.n_kv_heads % model_n == 0):
+                ax[nd - 1] = "model"
+        elif name == "ssm":
+            ax[nd - 4] = dax
+            if leaf.shape[nd - 3] % model_n == 0:
+                ax[nd - 3] = "model"
+        elif name == "conv":
+            ax[nd - 3] = dax
+            if leaf.shape[nd - 1] % model_n == 0:
+                ax[nd - 1] = "model"
+        elif name == "rglru":
+            ax[nd - 2] = dax
+            if leaf.shape[nd - 1] % model_n == 0:
+                ax[nd - 1] = "model"
+        return NamedSharding(mesh, P(*ax))
+
+    return jax.tree_util.tree_map_with_path(spec, caches)
+
+
+def batch_shardings(specs: Dict, mesh: Mesh):
+    return {k: NamedSharding(mesh, batch_spec(mesh, v.ndim - 1,
+                                              batch_size=v.shape[0]))
+            for k, v in specs.items()}
+
+
+# ---------------------------------------------------------------------------
+# step functions
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ArchConfig, mesh: Optional[Mesh],
+                    policy: Optional[QuantPolicy],
+                    ocfg: AdamWConfig = AdamWConfig(),
+                    schedule: Optional[Callable] = None) -> Callable:
+    model = model_for(cfg)
+    rules = sharding_rules(cfg, mesh.shape.get("model", 1)) if mesh \
+        else {}
+    sched = schedule or warmup_cosine(3e-4, 100, 10_000)
+
+    def _compute_cast(params):
+        """fp32 masters -> bf16 compute copies, ONCE per step and
+        outside the layer scan: FSDP weight all-gathers and the dw
+        partial-sum reductions then move bf16, not f32 (2x collective
+        bytes).  Cotangents convert back to f32 at this boundary."""
+        if policy is None or policy.compute_dtype != jnp.bfloat16:
+            return params
+        return jax.tree.map(
+            lambda p: p.astype(jnp.bfloat16)
+            if (hasattr(p, "dtype") and p.dtype == jnp.float32
+                and p.ndim >= 2) else p, params)
+
+    def train_step(params, opt_state, batch):
+        with mesh_rules(mesh, rules):
+            k = max(cfg.microbatches, 1)
+            if k > 1:
+                from repro.distributed.sharding import constrain
+
+                def split(x):
+                    assert x.shape[0] % k == 0, (x.shape, k)
+                    return x.reshape((k, x.shape[0] // k) + x.shape[1:])
+
+                mb = jax.tree.map(split, batch)
+                mb = jax.tree.map(
+                    lambda x: constrain(
+                        x, (None, "batch") + (None,) * (x.ndim - 2)),
+                    mb)
+
+                def acc(carry, b):
+                    l_acc, g_acc = carry
+                    l, g = jax.value_and_grad(
+                        lambda p: model.loss_fn(_compute_cast(p), b,
+                                                cfg, policy))(params)
+                    g = jax.tree.map(
+                        lambda a, gi: a + gi.astype(jnp.float32),
+                        g_acc, g)
+                    return (l_acc + l, g), None
+
+                zeros = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params)
+                (loss, grads), _ = jax.lax.scan(
+                    acc, (jnp.zeros(()), zeros), mb)
+                loss = loss / k
+                grads = jax.tree.map(lambda g: g / k, grads)
+            else:
+                loss, grads = jax.value_and_grad(
+                    lambda p: model.loss_fn(_compute_cast(p), batch,
+                                            cfg, policy))(params)
+        params, opt_state, stats = adamw_update(grads, opt_state,
+                                                params, sched, ocfg)
+        return params, opt_state, dict(loss=loss, **stats)
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, mesh: Optional[Mesh],
+                      policy: Optional[QuantPolicy],
+                      kv_bits: int = 32) -> Callable:
+    model = model_for(cfg)
+    rules = sharding_rules(cfg, mesh.shape.get("model", 1)) if mesh \
+        else {}
+
+    def prefill_step(params, batch):
+        with mesh_rules(mesh, rules):
+            if cfg.is_encdec:
+                return model.prefill(params, batch, cfg, policy,
+                                     kv_bits)
+            return model.prefill(params, batch["tokens"], cfg, policy,
+                                 kv_bits)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig, mesh: Optional[Mesh],
+                     policy: Optional[QuantPolicy],
+                     kv_bits: int = 32) -> Callable:
+    model = model_for(cfg)
+    rules = sharding_rules(cfg, mesh.shape.get("model", 1),
+                           serve=True) if mesh else {}
+
+    def decode_step(params, caches, token, index):
+        with mesh_rules(mesh, rules):
+            logits, caches = model.decode_step(params, token, caches,
+                                               index, cfg, policy,
+                                               kv_bits)
+        return logits, caches
+
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# lowering helper: one (arch x shape x mesh) cell -> jax.stages.Lowered
+# ---------------------------------------------------------------------------
+
+def lower_cell(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh,
+               policy: Optional[QuantPolicy] = None,
+               dtype=jnp.float32, donate: bool = True):
+    """Build and lower the step this cell specifies; returns (lowered,
+    meta dict).  No device allocation happens here."""
+    specs = input_specs(cfg, shape)
+    in_batch_shard = batch_shardings(specs, mesh)
+    # serve steps load PTQ'd int8 weights (QTensor payload + scales);
+    # train keeps fp32 masters
+    serve = shape.kind != "train"
+    ptq = policy if (serve and policy
+                     and policy.quantized_w) else None
+    # pure-TP weights only for latency-bound decode; prefill keeps the
+    # FSDP layout (weight gathers amortize over the full sequence)
+    abs_params, p_shard = abstract_params(
+        cfg, mesh, dtype, weight_ptq=ptq,
+        serve=(shape.kind == "decode"))
+    kv_bits = policy.kv_bits if policy else 32
+
+    if shape.kind == "train":
+        # <=8k seq: direct (unchunked) attention — the chunk-map's
+        # saved q-stack interacts badly with SP sharding in backward
+        # (measured: chunking costs +28% collective bytes); the
+        # [B,H,S,S] score transient fits under microbatching here
+        if shape.seq_len <= 8192 and cfg.microbatches >= 2:
+            cfg = cfg.replace(q_chunk=None)
+        step = make_train_step(cfg, mesh, policy)
+        abs_opt, o_shard = abstract_opt_state(abs_params, p_shard, mesh)
+        jitted = jax.jit(
+            step,
+            in_shardings=(p_shard, o_shard, in_batch_shard),
+            donate_argnums=(0, 1) if donate else ())
+        lowered = jitted.lower(abs_params, abs_opt, specs)
+        meta = {"step": "train_step", "inputs": specs}
+    elif shape.kind == "prefill":
+        step = make_prefill_step(cfg, mesh, policy, kv_bits)
+        jitted = jax.jit(step, in_shardings=(p_shard, in_batch_shard))
+        lowered = jitted.lower(abs_params, specs)
+        meta = {"step": "prefill_step", "inputs": specs}
+    else:  # decode
+        step = make_decode_step(cfg, mesh, policy, kv_bits)
+        abs_caches, c_shard = abstract_caches(cfg, shape, mesh, kv_bits,
+                                              dtype)
+        idx = jax.ShapeDtypeStruct((), jnp.int32)
+        jitted = jax.jit(
+            step,
+            in_shardings=(p_shard, c_shard,
+                          in_batch_shard["token"],
+                          NamedSharding(mesh, P())),
+            donate_argnums=(1,) if donate else ())
+        lowered = jitted.lower(abs_params, abs_caches, specs["token"],
+                               idx)
+        meta = {"step": "serve_step", "inputs": specs}
+    return lowered, meta

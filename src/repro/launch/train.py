@@ -1,0 +1,109 @@
+"""Fault-tolerant LM training driver.
+
+    PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
+        --steps 50 --smoke [--policy w8a8] [--ckpt-dir /tmp/ck]
+
+``--smoke`` runs the reduced config on the host mesh (the container's
+CPU); the full configs are dry-run-only per the assignment.  The loop
+is restart-safe: auto-resume from the newest checkpoint, atomic saves,
+and a data pipeline that is a pure function of the step index.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import get_arch
+from repro.core.policy import get_policy
+from repro.checkpoint import CheckpointManager
+from repro.data import DataConfig, batch_at, place
+from repro.distributed.sharding import make_shardings
+from repro.launch.mesh import describe, make_host_mesh
+from repro.launch.steps import (abstract_opt_state, abstract_params,
+                                batch_shardings, make_train_step)
+from repro.models.registry import input_specs, model_for
+from repro.nn.module import axes_of, unbox
+from repro.optim import AdamWConfig, adamw_init, warmup_cosine
+
+
+def train(arch: str, steps: int = 50, smoke: bool = True,
+          policy_name: Optional[str] = "w8a8", seq_len: int = 128,
+          batch: int = 8, ckpt_dir: Optional[str] = None,
+          save_every: int = 20, lr: float = 3e-4,
+          log_every: int = 10, seed: int = 0):
+    cfg = get_arch(arch)
+    if smoke:
+        cfg = cfg.reduced()
+    policy = get_policy(policy_name) if policy_name else None
+    mesh = make_host_mesh()
+    model = model_for(cfg)
+    print(f"training {cfg.name} on {describe(mesh)} "
+          f"policy={policy_name}")
+
+    # init (or resume)
+    boxed = model.init(jax.random.PRNGKey(seed), cfg)
+    params = unbox(boxed)
+    p_shard = make_shardings(params, axes_of(boxed), mesh)
+    opt_state = adamw_init(params)
+    start_step = 0
+    mgr = None
+    if ckpt_dir:
+        mgr = CheckpointManager(ckpt_dir, keep=3, save_every=save_every)
+        if mgr.latest_step() is not None:
+            (params, opt_state), start_step = mgr.restore(
+                (params, opt_state))[0], mgr.latest_step()
+            print(f"resumed from step {start_step}")
+
+    dcfg = DataConfig(vocab=cfg.vocab, seq_len=seq_len,
+                      global_batch=batch, seed=seed)
+    sched = warmup_cosine(lr, max(steps // 10, 1), steps)
+    step_fn = make_train_step(cfg, mesh, policy,
+                              AdamWConfig(weight_decay=0.0),
+                              schedule=sched)
+    jit_step = jax.jit(step_fn, donate_argnums=(0, 1))
+
+    t0 = time.time()
+    tokens_per_batch = seq_len * batch
+    losses = []
+    for step in range(start_step, steps):
+        data = place(batch_at(dcfg, step), mesh)
+        params, opt_state, stats = jit_step(params, opt_state, data)
+        if step % log_every == 0 or step == steps - 1:
+            loss = float(stats["loss"])
+            losses.append(loss)
+            dt = time.time() - t0
+            print(f"step {step:5d}  loss {loss:8.4f}  "
+                  f"gnorm {float(stats['grad_norm']):7.3f}  "
+                  f"{(step - start_step + 1) * tokens_per_batch / max(dt, 1e-9):8.0f} tok/s")
+        if mgr and mgr.should_save(step):
+            mgr.save(step, (params, opt_state))
+    if mgr:
+        mgr.save(steps, (params, opt_state))
+    return params, losses
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--policy", default="w8a8")
+    ap.add_argument("--fp32", action="store_true",
+                    help="disable quantization (baseline)")
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--save-every", type=int, default=20)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    args = ap.parse_args(argv)
+    train(args.arch, args.steps, args.smoke,
+          None if args.fp32 else args.policy, args.seq_len, args.batch,
+          args.ckpt_dir, args.save_every, args.lr)
+
+
+if __name__ == "__main__":
+    main()

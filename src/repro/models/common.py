@@ -1,0 +1,111 @@
+"""Shared model plumbing: stacked (scanned) layer init, losses, specs."""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.nn.module import Param, is_param
+
+Array = jax.Array
+
+
+def stack_init(block_init_fn: Callable, key: Array, n: int):
+    """vmap a block init over n layer keys; leaves get leading 'layers'
+    axis in both value and logical axes."""
+    keys = jax.random.split(key, n)
+    boxed = jax.vmap(block_init_fn)(keys)
+
+    def fix(p: Param) -> Param:
+        axes = p.axes if p.axes is not None \
+            else (None,) * (p.value.ndim - 1)
+        return Param(p.value, ("layers",) + tuple(axes))
+
+    return jax.tree.map(fix, boxed, is_leaf=is_param)
+
+
+def cross_entropy(logits: Array, labels: Array,
+                  mask: Optional[Array] = None) -> Array:
+    """Mean next-token CE.  logits fp32 [B, S, V]; labels int [B, S].
+
+    Computed without gathering the full softmax: logsumexp minus the
+    label logit (works with vocab-sharded logits: the reductions lower
+    to all-reduces over the model axis).
+    """
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    lab = jnp.take_along_axis(logits, labels[..., None],
+                              axis=-1)[..., 0]
+    nll = lse - lab
+    if mask is not None:
+        nll = nll * mask
+        return nll.sum() / jnp.maximum(mask.sum(), 1)
+    return nll.mean()
+
+
+
+def chunked_ce(head_fn, x, labels, mask=None, chunk: int = 1024):
+    """Fused chunked head+CE: the [B, S, vocab] logits tensor is never
+    materialized — the head matmul and the CE reduction run per token
+    chunk under remat (backward recomputes each chunk's logits).  Cuts
+    the loss-head transient from O(S*V) to O(chunk*V) bytes, which for
+    a 152k vocab at 4k seq is the largest single buffer in the step.
+    """
+    B, S, D = x.shape
+    x = constrain(x, ("batch", None, None))        # gather seq under SP
+    if chunk is None or S <= chunk or S % chunk != 0:
+        return cross_entropy(head_fn(x), labels, mask)
+    n = S // chunk
+    xs = jnp.moveaxis(x.reshape(B, n, chunk, D), 1, 0)
+    ls = jnp.moveaxis(labels.reshape(B, n, chunk), 1, 0)
+    ms = jnp.moveaxis(mask.reshape(B, n, chunk), 1, 0) \
+        if mask is not None else jnp.ones((n, B, chunk), jnp.float32)
+
+    @jax.checkpoint
+    def body(carry, xs_c):
+        x_c, l_c, m_c = xs_c
+        logits = head_fn(x_c).astype(jnp.float32)
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        lab = jnp.take_along_axis(logits, l_c[..., None],
+                                  axis=-1)[..., 0]
+        nll = (lse - lab) * m_c
+        tot, cnt = carry
+        return (tot + nll.sum(), cnt + m_c.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.zeros(()), jnp.zeros(())),
+                                 (xs, ls, ms))
+    return tot / jnp.maximum(cnt, 1)
+
+
+def sinusoidal_positions(length: int, d_model: int) -> Array:
+    """Whisper-style sinusoidal position embeddings [length, d_model]."""
+    pos = jnp.arange(length, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d_model // 2, dtype=jnp.float32)[None, :]
+    inv = jnp.exp(-dim * (jnp.log(10000.0) / (d_model // 2 - 1)))
+    ang = pos * inv
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def logits_from_hidden(x, head, tie_emb, policy, n_valid=None):
+    """Final projection, fp32 logits, vocab-sharded.
+
+    Under SP the hidden state arrives sequence-sharded; gather it first
+    (claiming "seq" here would steal the mesh axis from "vocab" and
+    leave full-vocab logits unsharded — far worse)."""
+    from repro.core.qmatmul import q_matmul
+    from repro.nn.linear import embedding_attend
+    x = constrain(x, ("batch", None, None))
+    if tie_emb is not None:
+        logits = embedding_attend(tie_emb, x, policy)
+    else:
+        logits = q_matmul(x, head, policy)
+    logits = logits.astype(jnp.float32)
+    if n_valid is not None and n_valid < logits.shape[-1]:
+        # mask padded vocab columns (see configs.base.pad_vocab)
+        pad_mask = jnp.where(jnp.arange(logits.shape[-1]) < n_valid,
+                             0.0, -1e9)
+        logits = logits + pad_mask
+    logits = constrain(logits, ("batch", None, "vocab"))
+    return logits

@@ -1,0 +1,140 @@
+"""The paper's agent: quantized hierarchical RL network (E2HRL / Fig 4-5).
+
+Pipeline (paper Sec. III):
+  obs image -> 3x Q-Conv (stride 2 replaces pooling, ReLU)
+            -> flatten -> Q-FC -> 32-d image embedding
+            -> sub-goal module (Q-FC "FC-HRL" or Q-LSTM "LSTM-HRL")
+            -> concat(embedding, sub-goal) -> Q-FC -> Softmax action
+
+Two-stage PPO (paper): train the action module first, freeze it, then
+fine-tune the sub-goal module — the param tree is split accordingly
+("action" vs "subgoal" subtrees; rl/ppo.py masks gradients by stage).
+A value head (not in the FPGA datapath, needed by PPO) reads the same
+concat features.
+
+Every matmul is a Q-MAC (q_matmul); softmax/sigmoid/tanh are V-ACT
+(cordic backend when the policy says so).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.e2hrl import HRLConfig
+from repro.core.policy import QuantPolicy
+from repro.core.vact import activation
+from repro.nn.conv import conv2d_init, qconv_block
+from repro.nn.linear import linear_apply, linear_init
+from repro.nn.lstm import lstm_apply, lstm_init
+from repro.nn.module import KeySeq
+from repro.core.qmatmul import q_matmul
+
+Array = jax.Array
+
+
+def _flat_dim(cfg: HRLConfig) -> int:
+    h, w, _ = cfg.obs_shape
+    for _ in cfg.conv_channels:
+        h = (h + 1) // 2
+        w = (w + 1) // 2
+    return h * w * cfg.conv_channels[-1]
+
+
+def init(key, cfg: HRLConfig, dtype=jnp.float32):
+    ks = KeySeq(key)
+    convs = []
+    c_in = cfg.obs_shape[-1]
+    for c_out in cfg.conv_channels:
+        convs.append(conv2d_init(ks(), c_in, c_out, cfg.conv_kernel,
+                                 dtype))
+        c_in = c_out
+    params = {
+        "stem": {
+            "convs": convs,
+            "fc": linear_init(ks(), _flat_dim(cfg), cfg.embed_dim,
+                              axes=(None, None), dtype=dtype),
+        },
+        "subgoal": {},
+        "action": {
+            "fc": linear_init(ks(), cfg.embed_dim + cfg.subgoal_dim,
+                              cfg.n_actions, axes=(None, None),
+                              dtype=dtype),
+        },
+    }
+    if cfg.subgoal_kind == "fc":
+        params["subgoal"] = {
+            "fc1": linear_init(ks(), cfg.embed_dim, cfg.subgoal_hidden,
+                               axes=(None, None), dtype=dtype),
+            "fc2": linear_init(ks(), cfg.subgoal_hidden, cfg.subgoal_dim,
+                               axes=(None, None), dtype=dtype),
+        }
+    else:
+        params["subgoal"] = {
+            "lstm": lstm_init(ks(), cfg.embed_dim, cfg.subgoal_hidden,
+                              dtype),
+            "out": linear_init(ks(), cfg.subgoal_hidden, cfg.subgoal_dim,
+                               axes=(None, None), dtype=dtype),
+        }
+    if cfg.value_head:
+        params["value"] = linear_init(
+            ks(), cfg.embed_dim + cfg.subgoal_dim, 1, axes=(None, None),
+            dtype=dtype)
+    return params
+
+
+def embed(params, obs: Array, cfg: HRLConfig,
+          policy: Optional[QuantPolicy] = None) -> Array:
+    """obs: [B, H, W, C] in [0, 1] -> [B, embed_dim] (ReLU'd)."""
+    x = obs
+    for pc in params["stem"]["convs"]:
+        x = qconv_block(pc, x, stride=2, policy=policy)
+    x = x.reshape(x.shape[0], -1)
+    x = linear_apply(params["stem"]["fc"], x, policy)
+    return activation(x, "relu", policy)
+
+
+def subgoal(params, e: Array, cfg: HRLConfig,
+            policy: Optional[QuantPolicy] = None,
+            lstm_state: Optional[Tuple] = None):
+    """e: [B, embed_dim] (fc) or [B, K, embed_dim] (lstm window)."""
+    p = params["subgoal"]
+    if cfg.subgoal_kind == "fc":
+        h = activation(linear_apply(p["fc1"], e, policy), "relu", policy)
+        g = activation(linear_apply(p["fc2"], h, policy), "tanh", policy)
+        return g, None
+    hs, state = lstm_apply(p["lstm"], e, policy, lstm_state)
+    g = activation(linear_apply(p["out"], hs[:, -1], policy), "tanh",
+                   policy)
+    return g, state
+
+
+def apply(params, obs: Array, cfg: HRLConfig,
+          policy: Optional[QuantPolicy] = None,
+          lstm_state: Optional[Tuple] = None):
+    """Full agent.  obs: [B,H,W,C] (fc) or [B,K,H,W,C] (lstm window).
+
+    Returns (action_logits [B, A], value [B], new_lstm_state).
+    """
+    if cfg.subgoal_kind == "lstm":
+        B, K = obs.shape[:2]
+        e_seq = embed(params, obs.reshape((B * K,) + obs.shape[2:]), cfg,
+                      policy).reshape(B, K, -1)
+        e = e_seq[:, -1]
+        g, state = subgoal(params, e_seq, cfg, policy, lstm_state)
+    else:
+        e = embed(params, obs, cfg, policy)
+        g, state = subgoal(params, e, cfg, policy)
+    feat = jnp.concatenate([e, g], axis=-1)
+    logits = linear_apply(params["action"]["fc"], feat, policy)
+    value = None
+    if cfg.value_head:
+        value = linear_apply(params["value"], feat, policy)[..., 0]
+    return logits, value, state
+
+
+def action_probs(logits: Array,
+                 policy: Optional[QuantPolicy] = None) -> Array:
+    """Softmax action head — V-ACT's softmax mode under quantization."""
+    return activation(logits, "softmax", policy)

@@ -1,0 +1,130 @@
+"""Mamba2 LM (attention-free SSD stack)."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, pad_vocab
+from repro.core.policy import QuantPolicy
+from repro.models.common import (chunked_ce, cross_entropy,
+                                 logits_from_hidden, stack_init)
+from repro.nn.linear import embedding_apply, embedding_init, linear_init
+from repro.nn.module import KeySeq
+from repro.nn.norm import rmsnorm_apply, rmsnorm_init
+from repro.nn.ssm import (SSMConfig, ssm_apply, ssm_init, ssm_init_state)
+
+Array = jax.Array
+
+
+def ssm_config(cfg: ArchConfig) -> SSMConfig:
+    return SSMConfig(
+        d_model=cfg.d_model, d_inner=cfg.ssm_expand * cfg.d_model,
+        head_dim=cfg.ssm_head_dim, d_state=cfg.ssm_state,
+        n_groups=1, chunk=cfg.ssm_chunk)
+
+
+def _block_init(key, cfg: ArchConfig, dtype):
+    ks = KeySeq(key)
+    return {
+        "ln": rmsnorm_init(ks(), cfg.d_model, dtype),
+        "ssm": ssm_init(ks(), ssm_config(cfg), dtype),
+    }
+
+
+def init(key, cfg: ArchConfig, dtype=jnp.float32):
+    ks = KeySeq(key)
+    return {
+        "embed": embedding_init(ks(), pad_vocab(cfg.vocab), cfg.d_model,
+                                axes=("vocab", "d_model"), dtype=dtype),
+        "blocks": stack_init(lambda k: _block_init(k, cfg, dtype), ks(),
+                             cfg.n_layers),
+        "ln_f": rmsnorm_init(ks(), cfg.d_model, dtype),
+        "lm_head": linear_init(ks(), cfg.d_model, pad_vocab(cfg.vocab),
+                               axes=("d_model", "vocab"), bias=False,
+                               dtype=dtype),
+    }
+
+
+def forward(params, tokens: Array, cfg: ArchConfig,
+            policy: Optional[QuantPolicy] = None,
+            return_hidden: bool = False) -> Array:
+    scfg = ssm_config(cfg)
+    x = embedding_apply(params["embed"], tokens, policy)
+    x = x.astype(policy.compute_dtype if policy else jnp.float32)
+
+    def body(p, h):
+        return h + ssm_apply(p["ssm"], rmsnorm_apply(p["ln"], h), scfg,
+                             policy)
+
+    if cfg.remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(lambda h, p: (body(p, h), None), x,
+                        params["blocks"])
+    x = rmsnorm_apply(params["ln_f"], x)
+    if return_hidden:
+        return x
+    return logits_from_hidden(x, params["lm_head"]["w"], None,
+                              policy, n_valid=cfg.vocab)
+
+
+def loss_fn(params, batch, cfg: ArchConfig,
+            policy: Optional[QuantPolicy] = None) -> Array:
+    x = forward(params, batch["tokens"], cfg, policy,
+                return_hidden=True)
+    head = lambda h: logits_from_hidden(h, params["lm_head"]["w"], None,
+                                        policy, n_valid=cfg.vocab)
+    return chunked_ce(head, x, batch["labels"], batch.get("mask"))
+
+
+def init_caches(cfg: ArchConfig, batch: int, max_len: int,
+                kv_bits: int = 32, dtype=jnp.float32):
+    """Constant-size recurrent state per layer (no KV growth)."""
+    del max_len, kv_bits
+    one = ssm_init_state(batch, ssm_config(cfg))
+    return jax.tree.map(
+        lambda l: jnp.broadcast_to(l[None], (cfg.n_layers,) + l.shape),
+        one)
+
+
+def prefill(params, tokens: Array, cfg: ArchConfig,
+            policy: Optional[QuantPolicy] = None, kv_bits: int = 32):
+    """Prefill via the chunked SSD path; emits real final states."""
+    del kv_bits
+    scfg = ssm_config(cfg)
+    x = embedding_apply(params["embed"], tokens, policy)
+    x = x.astype(policy.compute_dtype if policy else jnp.float32)
+
+    def step(h, p):
+        out, state = ssm_apply(p["ssm"], rmsnorm_apply(p["ln"], h), scfg,
+                               policy, return_state=True)
+        return h + out, state
+
+    x, caches = jax.lax.scan(step, x, params["blocks"])
+    x = rmsnorm_apply(params["ln_f"], x[:, -1:])
+    logits = logits_from_hidden(x, params["lm_head"]["w"], None,
+                              policy, n_valid=cfg.vocab)
+    return logits[:, 0], caches
+
+
+def decode_step(params, token: Array, caches, index, cfg: ArchConfig,
+                policy: Optional[QuantPolicy] = None, kv_bits: int = 32):
+    del index, kv_bits
+    scfg = ssm_config(cfg)
+    x = embedding_apply(params["embed"], token, policy)
+    x = x.astype(policy.compute_dtype if policy else jnp.float32)
+
+    def step(h, xs):
+        p, state = xs
+        out, state = ssm_apply(p["ssm"], rmsnorm_apply(p["ln"], h), scfg,
+                               policy, state=state)
+        return h + out, state
+
+    x, caches = jax.lax.scan(step, x, (params["blocks"], caches))
+    x = rmsnorm_apply(params["ln_f"], x)
+    logits = logits_from_hidden(x, params["lm_head"]["w"], None,
+                              policy, n_valid=cfg.vocab)
+    return logits[:, 0], caches

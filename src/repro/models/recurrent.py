@@ -1,0 +1,262 @@
+"""RecurrentGemma-style hybrid LM: (R, R, A) super-blocks.
+
+R = RG-LRU recurrent block, A = local (sliding-window) attention; each
+followed by a GeGLU MLP.  The layer stack scans over *super-blocks*
+(the repeating pattern) so HLO stays O(1) in depth; remainder layers
+(38 = 12x3 + 2) are unrolled explicitly.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, pad_vocab
+from repro.core.policy import QuantPolicy
+from repro.models.common import (chunked_ce, cross_entropy, logits_from_hidden,
+                                 stack_init)
+from repro.nn.attention import (AttnConfig, attention_apply,
+                                attention_decode, attention_init,
+                                init_cache)
+from repro.nn.linear import embedding_apply, embedding_init, linear_init
+from repro.nn.mlp import swiglu_apply, swiglu_init
+from repro.nn.module import KeySeq
+from repro.nn.norm import rmsnorm_apply, rmsnorm_init
+from repro.nn.rglru import (recurrent_block_apply, recurrent_block_init,
+                            recurrent_block_init_state)
+
+Array = jax.Array
+
+
+def attn_config(cfg: ArchConfig) -> AttnConfig:
+    return AttnConfig(
+        d_model=cfg.d_model, n_heads=cfg.n_heads,
+        n_kv_heads=cfg.n_kv_heads, head_dim=cfg.hd, causal=True,
+        window=cfg.local_window, rope=True, rope_theta=cfg.rope_theta,
+        q_chunk=cfg.q_chunk)
+
+
+def _layout(cfg: ArchConfig):
+    pat = cfg.block_pattern or ("R",)
+    n_super = cfg.n_layers // len(pat)
+    tail = tuple(pat[i] for i in range(cfg.n_layers % len(pat)))
+    return pat, n_super, tail
+
+
+def _sub_init(key, kind: str, cfg: ArchConfig, dtype):
+    ks = KeySeq(key)
+    p = {"ln1": rmsnorm_init(ks(), cfg.d_model, dtype),
+         "ln2": rmsnorm_init(ks(), cfg.d_model, dtype),
+         "mlp": swiglu_init(ks(), cfg.d_model, cfg.d_ff, dtype)}
+    if kind == "R":
+        p["rec"] = recurrent_block_init(ks(), cfg.d_model, cfg.lru_width,
+                                        dtype=dtype)
+    else:
+        p["attn"] = attention_init(ks(), attn_config(cfg), dtype)
+    return p
+
+
+def _super_init(key, cfg: ArchConfig, dtype):
+    pat, _, _ = _layout(cfg)
+    ks = KeySeq(key)
+    return {f"b{i}_{kind}": _sub_init(ks(), kind, cfg, dtype)
+            for i, kind in enumerate(pat)}
+
+
+def _sub_apply(p, x, kind, cfg, policy, positions):
+    h = rmsnorm_apply(p["ln1"], x)
+    if kind == "R":
+        x = x + recurrent_block_apply(p["rec"], h, policy)
+    else:
+        x = x + attention_apply(p["attn"], h, attn_config(cfg), policy,
+                                positions=positions)
+    h = rmsnorm_apply(p["ln2"], x)
+    return x + swiglu_apply(p["mlp"], h, policy, act=cfg.act)
+
+
+def _sub_decode(p, x, kind, cfg, policy, cache, index, kv_bits):
+    h = rmsnorm_apply(p["ln1"], x)
+    if kind == "R":
+        out, cache = recurrent_block_apply(p["rec"], h, policy,
+                                           state=cache)
+        x = x + out
+    else:
+        out, cache = attention_decode(p["attn"], h, attn_config(cfg),
+                                      cache, index, policy,
+                                      kv_bits=kv_bits)
+        x = x + out
+    h = rmsnorm_apply(p["ln2"], x)
+    return x + swiglu_apply(p["mlp"], h, policy, act=cfg.act), cache
+
+
+def init(key, cfg: ArchConfig, dtype=jnp.float32):
+    pat, n_super, tail = _layout(cfg)
+    ks = KeySeq(key)
+    params = {
+        "embed": embedding_init(ks(), pad_vocab(cfg.vocab), cfg.d_model,
+                                axes=("vocab", "d_model"), dtype=dtype),
+        "supers": stack_init(lambda k: _super_init(k, cfg, dtype), ks(),
+                             n_super),
+        "ln_f": rmsnorm_init(ks(), cfg.d_model, dtype),
+        "lm_head": linear_init(ks(), cfg.d_model, pad_vocab(cfg.vocab),
+                               axes=("d_model", "vocab"), bias=False,
+                               dtype=dtype),
+    }
+    if tail:
+        params["tail"] = [_sub_init(ks(), kind, cfg, dtype)
+                          for kind in tail]
+    return params
+
+
+def forward(params, tokens: Array, cfg: ArchConfig,
+            policy: Optional[QuantPolicy] = None,
+            return_hidden: bool = False) -> Array:
+    pat, n_super, tail = _layout(cfg)
+    B, S = tokens.shape
+    x = embedding_apply(params["embed"], tokens, policy)
+    x = x.astype(policy.compute_dtype if policy else jnp.float32)
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    def super_body(p, h):
+        for i, kind in enumerate(pat):
+            h = _sub_apply(p[f"b{i}_{kind}"], h, kind, cfg, policy,
+                           positions)
+        return h
+
+    if cfg.remat:
+        super_body = jax.checkpoint(
+            super_body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(lambda h, p: (super_body(p, h), None), x,
+                        params["supers"])
+    for p, kind in zip(params.get("tail", []), tail):
+        x = _sub_apply(p, x, kind, cfg, policy, positions)
+    x = rmsnorm_apply(params["ln_f"], x)
+    if return_hidden:
+        return x
+    return logits_from_hidden(x, params["lm_head"]["w"], None,
+                              policy, n_valid=cfg.vocab)
+
+
+def loss_fn(params, batch, cfg: ArchConfig,
+            policy: Optional[QuantPolicy] = None) -> Array:
+    x = forward(params, batch["tokens"], cfg, policy,
+                return_hidden=True)
+    head = lambda h: logits_from_hidden(h, params["lm_head"]["w"], None,
+                                        policy, n_valid=cfg.vocab)
+    return chunked_ce(head, x, batch["labels"], batch.get("mask"))
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def _sub_cache(kind, cfg, batch, max_len, kv_bits, dtype):
+    if kind == "R":
+        return recurrent_block_init_state(batch, cfg.lru_width)
+    cap = min(cfg.local_window, max_len)
+    return init_cache(batch, cap, cfg.n_kv_heads, cfg.hd, kv_bits,
+                      dtype, ring=cap < max_len)
+
+
+def init_caches(cfg: ArchConfig, batch: int, max_len: int,
+                kv_bits: int = 32, dtype=jnp.float32):
+    pat, n_super, tail = _layout(cfg)
+    one = {f"b{i}_{kind}": _sub_cache(kind, cfg, batch, max_len,
+                                      kv_bits, dtype)
+           for i, kind in enumerate(pat)}
+    stacked = jax.tree.map(
+        lambda l: jnp.broadcast_to(l[None], (n_super,) + l.shape), one)
+    caches = {"supers": stacked}
+    if tail:
+        caches["tail"] = [_sub_cache(kind, cfg, batch, max_len, kv_bits,
+                                     dtype) for kind in tail]
+    return caches
+
+
+def prefill(params, tokens: Array, cfg: ArchConfig,
+            policy: Optional[QuantPolicy] = None, kv_bits: int = 32):
+    """Prefill by running the full forward then decoding is resumed via
+    sequential state (recurrent) / full-length caches (attention)."""
+    pat, n_super, tail = _layout(cfg)
+    B, S = tokens.shape
+    x = embedding_apply(params["embed"], tokens, policy)
+    x = x.astype(policy.compute_dtype if policy else jnp.float32)
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    def sub_prefill(p, h, kind):
+        hh = rmsnorm_apply(p["ln1"], h)
+        if kind == "R":
+            gate_in = hh
+            from repro.nn.linear import linear_apply
+            from repro.core.vact import activation
+            from repro.nn.conv import causal_conv1d_apply
+            from repro.nn.rglru import rglru_apply
+            gate = activation(linear_apply(p["rec"]["lin_y"], gate_in,
+                                           policy), "gelu", policy)
+            u = linear_apply(p["rec"]["lin_x"], gate_in, policy)
+            u_conv = causal_conv1d_apply(p["rec"]["conv"], u)
+            hs, last = rglru_apply(p["rec"]["rglru"], u_conv, policy)
+            out = linear_apply(p["rec"]["lin_out"], hs * gate, policy)
+            w = p["rec"]["conv"]["w"].shape[0] - 1
+            conv_state = u[:, S - w:S].astype(jnp.float32)
+            cache = {"conv": conv_state, "rglru": last}
+            h = h + out
+        else:
+            out, cache = attention_apply(
+                p["attn"], hh, attn_config(cfg), policy,
+                positions=positions, return_cache=True, kv_bits=kv_bits)
+            h = h + out
+        hh = rmsnorm_apply(p["ln2"], h)
+        return h + swiglu_apply(p["mlp"], hh, policy, act=cfg.act), cache
+
+    def super_step(h, p):
+        caches = {}
+        for i, kind in enumerate(pat):
+            h, caches[f"b{i}_{kind}"] = sub_prefill(p[f"b{i}_{kind}"], h,
+                                                    kind)
+        return h, caches
+
+    x, super_caches = jax.lax.scan(super_step, x, params["supers"])
+    caches = {"supers": super_caches}
+    if tail:
+        tail_caches = []
+        for p, kind in zip(params["tail"], tail):
+            x, c = sub_prefill(p, x, kind)
+            tail_caches.append(c)
+        caches["tail"] = tail_caches
+    x = rmsnorm_apply(params["ln_f"], x[:, -1:])
+    logits = logits_from_hidden(x, params["lm_head"]["w"], None,
+                              policy, n_valid=cfg.vocab)
+    return logits[:, 0], caches
+
+
+def decode_step(params, token: Array, caches, index, cfg: ArchConfig,
+                policy: Optional[QuantPolicy] = None, kv_bits: int = 32):
+    pat, n_super, tail = _layout(cfg)
+    x = embedding_apply(params["embed"], token, policy)
+    x = x.astype(policy.compute_dtype if policy else jnp.float32)
+
+    def super_step(h, xs):
+        p, cache = xs
+        new = {}
+        for i, kind in enumerate(pat):
+            key = f"b{i}_{kind}"
+            h, new[key] = _sub_decode(p[key], h, kind, cfg, policy,
+                                      cache[key], index, kv_bits)
+        return h, new
+
+    x, super_caches = jax.lax.scan(super_step, x,
+                                   (params["supers"], caches["supers"]))
+    out_caches = {"supers": super_caches}
+    if tail:
+        tail_caches = []
+        for p, kind, c in zip(params["tail"], tail, caches["tail"]):
+            x, c = _sub_decode(p, x, kind, cfg, policy, c, index, kv_bits)
+            tail_caches.append(c)
+        out_caches["tail"] = tail_caches
+    x = rmsnorm_apply(params["ln_f"], x)
+    logits = logits_from_hidden(x, params["lm_head"]["w"], None,
+                              policy, n_valid=cfg.vocab)
+    return logits[:, 0], out_caches

@@ -1,0 +1,91 @@
+"""Family registry: resolve an ArchConfig to its model module + specs.
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for every
+input of the lowered step — weak-type-correct, shardable, no device
+allocation (dry-run contract).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.configs.shapes import ShapeConfig
+from repro.models import encdec, mamba, recurrent, transformer
+
+FAMILIES = {
+    "dense": transformer,
+    "moe": transformer,
+    "encdec": encdec,
+    "hybrid": recurrent,
+    "ssm": mamba,
+}
+
+
+def model_for(cfg: ArchConfig):
+    return FAMILIES[cfg.family]
+
+
+def sharding_rules(cfg: ArchConfig, model_axis: int = 16,
+                   serve: bool = False) -> Dict:
+    """Per-arch logical->mesh overrides (see DESIGN.md §4).
+
+    ``serve=True``: no optimizer state exists and steps are
+    latency-bound, so weights drop the FSDP ("d_model" over data)
+    sharding — pure TP, no per-step weight all-gathers."""
+    rules: Dict[str, Any] = {}
+    if serve:
+        rules["d_model"] = None
+    # KV heads shard on the model axis only when the head count divides
+    if cfg.n_kv_heads and cfg.n_kv_heads % model_axis == 0:
+        rules["kv_heads"] = "model"
+    if cfg.seq_shard:
+        rules["seq"] = "model"       # sequence parallelism (see base.py)
+    # MoE: expert-parallel when experts divide the axis, else
+    # TP-within-expert (d_ff_expert already -> "model" in BASE_RULES)
+    if cfg.is_moe:
+        if cfg.n_experts % model_axis == 0:
+            rules["experts"] = "model"
+            rules["d_ff_expert"] = None
+        else:
+            rules["experts"] = None
+            rules["d_ff_expert"] = "model"
+    return rules
+
+
+def _token_batch(shape: ShapeConfig, seq: int, batch: int):
+    tokens = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+    labels = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+    return {"tokens": tokens, "labels": labels}
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Abstract inputs for the step that this (arch, shape) cell lowers.
+
+    train  -> loss/grad step inputs {tokens, labels} (+frames for encdec)
+    prefill-> {tokens} (+frames)
+    decode -> {token [B,1]}; caches are built separately (they are state,
+              not inputs — see launch/dryrun.py)
+    """
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        if cfg.is_encdec:
+            return {
+                "frames": jax.ShapeDtypeStruct((B, S, cfg.d_model),
+                                               jnp.float32),
+                "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+                "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+            }
+        return _token_batch(shape, S, B)
+    if shape.kind == "prefill":
+        if cfg.is_encdec:
+            return {
+                "frames": jax.ShapeDtypeStruct((B, S, cfg.d_model),
+                                               jnp.float32),
+                "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+            }
+        return {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    # decode: one new token against a seq_len-deep cache
+    return {"token": jax.ShapeDtypeStruct((B, 1), jnp.int32)}

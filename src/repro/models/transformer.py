@@ -1,0 +1,222 @@
+"""Decoder-only LM family: dense (qwen2/stablelm/phi3/tinyllama/
+chameleon) and MoE (mixtral TP-in-expert, qwen3-moe expert-parallel).
+
+Layers are scanned (stacked params, jax.lax.scan) with optional remat —
+this keeps HLO size O(1) in depth, which matters when lowering 80-layer
+models for 512 devices.  Every matmul routes through q_matmul.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, pad_vocab
+from repro.core.policy import QuantPolicy
+from repro.distributed.sharding import constrain
+from repro.models.common import (chunked_ce, cross_entropy,
+                                 logits_from_hidden, stack_init)
+from repro.nn.attention import (AttnConfig, attention_apply,
+                                attention_decode, attention_init,
+                                init_cache)
+from repro.nn.linear import embedding_init, embedding_apply, linear_init
+from repro.nn.mlp import swiglu_apply, swiglu_init
+from repro.nn.moe import moe_apply, moe_init
+from repro.nn.module import KeySeq
+from repro.nn.norm import rmsnorm_apply, rmsnorm_init
+
+Array = jax.Array
+
+
+def attn_config(cfg: ArchConfig) -> AttnConfig:
+    return AttnConfig(
+        d_model=cfg.d_model, n_heads=cfg.n_heads,
+        n_kv_heads=cfg.n_kv_heads, head_dim=cfg.hd, causal=True,
+        window=cfg.window, rope=cfg.rope, rope_theta=cfg.rope_theta,
+        qkv_bias=cfg.qkv_bias, qk_norm=cfg.qk_norm,
+        q_chunk=cfg.q_chunk)
+
+
+def _block_init(key, cfg: ArchConfig, dtype):
+    ks = KeySeq(key)
+    p = {
+        "ln1": rmsnorm_init(ks(), cfg.d_model, dtype),
+        "attn": attention_init(ks(), attn_config(cfg), dtype),
+        "ln2": rmsnorm_init(ks(), cfg.d_model, dtype),
+    }
+    if cfg.is_moe:
+        p["moe"] = moe_init(ks(), cfg.d_model, cfg.d_ff, cfg.n_experts,
+                            dtype)
+    else:
+        p["mlp"] = swiglu_init(ks(), cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+def _block_apply(p, x, cfg: ArchConfig, policy, positions):
+    # carry layout: under SP ("seq"->"model") the residual stream and
+    # therefore the scan-saved activations live sequence-sharded; the
+    # gathers below are the Megatron-SP g/ḡ boundaries (all-gather on
+    # entry, reduce-scatter via the output constraint's transpose).
+    x = constrain(x, ("batch", "seq", None))
+    h = rmsnorm_apply(p["ln1"], x)
+    h = constrain(h, ("batch", None, None))       # SP: gather seq
+    a = attention_apply(p["attn"], h, attn_config(cfg), policy,
+                        positions=positions)
+    x = x + constrain(a, ("batch", "seq", None))
+    h = rmsnorm_apply(p["ln2"], x)
+    h = constrain(h, ("batch", None, None))       # SP: gather seq
+    if cfg.is_moe:
+        m = moe_apply(p["moe"], h, top_k=cfg.top_k, policy=policy,
+                      capacity_factor=cfg.capacity_factor, act=cfg.act)
+    else:
+        m = swiglu_apply(p["mlp"], h, policy, act=cfg.act)
+    return x + constrain(m, ("batch", "seq", None))
+
+
+def _block_prefill(p, x, cfg, policy, positions, kv_bits):
+    h = rmsnorm_apply(p["ln1"], x)
+    a, cache = attention_apply(p["attn"], h, attn_config(cfg), policy,
+                               positions=positions, return_cache=True,
+                               kv_bits=kv_bits)
+    x = x + a
+    h = rmsnorm_apply(p["ln2"], x)
+    if cfg.is_moe:
+        m = moe_apply(p["moe"], h, top_k=cfg.top_k, policy=policy,
+                      capacity_factor=cfg.capacity_factor, act=cfg.act)
+    else:
+        m = swiglu_apply(p["mlp"], h, policy, act=cfg.act)
+    return x + m, cache
+
+
+def _block_decode(p, x, cfg, policy, cache, index, kv_bits):
+    h = rmsnorm_apply(p["ln1"], x)
+    a, cache = attention_decode(p["attn"], h, attn_config(cfg), cache,
+                                index, policy, kv_bits=kv_bits)
+    x = x + a
+    h = rmsnorm_apply(p["ln2"], x)
+    if cfg.is_moe:
+        m = moe_apply(p["moe"], h, top_k=cfg.top_k, policy=policy,
+                      capacity_factor=cfg.capacity_factor, act=cfg.act)
+    else:
+        m = swiglu_apply(p["mlp"], h, policy, act=cfg.act)
+    return x + m, cache
+
+
+# ---------------------------------------------------------------------------
+# model init / forward
+# ---------------------------------------------------------------------------
+
+def init(key, cfg: ArchConfig, dtype=jnp.float32):
+    ks = KeySeq(key)
+    v_pad = pad_vocab(cfg.vocab)
+    params = {
+        "embed": embedding_init(ks(), v_pad, cfg.d_model,
+                                axes=("vocab", "d_model"), dtype=dtype),
+        "blocks": stack_init(
+            lambda k: _block_init(k, cfg, dtype), ks(), cfg.n_layers),
+        "ln_f": rmsnorm_init(ks(), cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = linear_init(
+            ks(), cfg.d_model, v_pad, axes=("d_model", "vocab"),
+            bias=False, dtype=dtype)
+    return params
+
+
+def _head(params, x, cfg, policy):
+    tie = params["embed"] if cfg.tie_embeddings else None
+    head = None if cfg.tie_embeddings else params["lm_head"]["w"]
+    return logits_from_hidden(x, head, tie, policy, n_valid=cfg.vocab)
+
+
+def forward(params, tokens: Array, cfg: ArchConfig,
+            policy: Optional[QuantPolicy] = None,
+            return_hidden: bool = False) -> Array:
+    """Training/scoring forward: tokens [B, S] -> fp32 logits [B,S,V]."""
+    B, S = tokens.shape
+    x = embedding_apply(params["embed"], tokens, policy)
+    x = x.astype(policy.compute_dtype if policy else jnp.float32)
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    body = functools.partial(_block_apply, cfg=cfg, policy=policy,
+                             positions=positions)
+    if cfg.remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(lambda h, p: (body(p, h), None),
+                            x, params["blocks"])
+    else:
+        for i in range(cfg.n_layers):
+            x = body(jax.tree.map(lambda l: l[i], params["blocks"]), x)
+
+    x = rmsnorm_apply(params["ln_f"], x)
+    if return_hidden:
+        return x
+    return _head(params, x, cfg, policy)
+
+
+def loss_fn(params, batch, cfg: ArchConfig,
+            policy: Optional[QuantPolicy] = None) -> Array:
+    x = forward(params, batch["tokens"], cfg, policy,
+                return_hidden=True)
+    return chunked_ce(lambda h: _head(params, h, cfg, policy), x,
+                      batch["labels"], batch.get("mask"))
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def init_caches(cfg: ArchConfig, batch: int, max_len: int,
+                kv_bits: int = 32, dtype=jnp.float32):
+    """Stacked per-layer KV caches [L, ...].
+
+    Sliding-window archs get ring buffers of size min(window, max_len):
+    this is what makes long_500k decoding O(window) in memory.
+    """
+    cap = max_len if cfg.window is None else min(cfg.window, max_len)
+    ring = cfg.window is not None and cap < max_len
+    one = init_cache(batch, cap, cfg.n_kv_heads, cfg.hd, kv_bits, dtype,
+                     ring=ring)
+    return jax.tree.map(
+        lambda l: jnp.broadcast_to(l[None], (cfg.n_layers,) + l.shape),
+        one)
+
+
+def prefill(params, tokens: Array, cfg: ArchConfig,
+            policy: Optional[QuantPolicy] = None, kv_bits: int = 32):
+    """Prefill: returns (last-position logits [B, V], caches)."""
+    B, S = tokens.shape
+    x = embedding_apply(params["embed"], tokens, policy)
+    x = x.astype(policy.compute_dtype if policy else jnp.float32)
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    def step(h, layer_params):
+        out, cache = _block_prefill(layer_params, h, cfg, policy,
+                                    positions, kv_bits)
+        return out, cache
+
+    x, caches = jax.lax.scan(step, x, params["blocks"])
+    x = rmsnorm_apply(params["ln_f"], x[:, -1:])
+    return _head(params, x, cfg, policy)[:, 0], caches
+
+
+def decode_step(params, token: Array, caches, index, cfg: ArchConfig,
+                policy: Optional[QuantPolicy] = None, kv_bits: int = 32):
+    """One decode step: token [B, 1] int32 -> (logits [B, V], caches)."""
+    x = embedding_apply(params["embed"], token, policy)
+    x = x.astype(policy.compute_dtype if policy else jnp.float32)
+
+    def step(h, xs):
+        layer_params, cache = xs
+        out, cache = _block_decode(layer_params, h, cfg, policy, cache,
+                                   index, kv_bits)
+        return out, cache
+
+    x, caches = jax.lax.scan(step, x, (params["blocks"], caches))
+    x = rmsnorm_apply(params["ln_f"], x)
+    return _head(params, x, cfg, policy)[:, 0], caches

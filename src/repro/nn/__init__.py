@@ -1,0 +1,3 @@
+"""Quantization-aware functional NN layers (no flax; see module.py)."""
+from repro.nn.module import (KeySeq, Param, axes_of, count_params, is_param,
+                             param, rebox, unbox)

@@ -1,0 +1,361 @@
+"""Multi-head / grouped-query attention with quantized projections and
+(optionally) an int8-quantized KV cache.
+
+All four projections route through q_matmul (the Q-MAC path).  The KV
+cache supports ``kv_bits=8``: payloads are stored int8 with per
+(token, head) scales — for 32k-context decode this halves/quarters the
+dominant HBM term (see EXPERIMENTS.md §Perf), the direct LM analogue of
+the paper's quantized-actor inference.
+
+Supports: causal, bidirectional (encoder), sliding-window (SWA),
+cross-attention (enc-dec), GQA/MQA, qk-norm, QKV biases, RoPE.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fxp import fxp_dtype, fxp_qmax
+from repro.core.policy import QuantPolicy
+from repro.nn.linear import linear_apply, linear_init
+from repro.nn.module import KeySeq, lecun_init, ones_init, param
+from repro.nn.norm import rmsnorm_apply
+from repro.nn.rotary import apply_rope
+
+Array = jax.Array
+NEG_INF = -1e9
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    causal: bool = True
+    window: Optional[int] = None        # sliding-window size (SWA)
+    rope: bool = True
+    rope_theta: float = 10000.0
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    cross: bool = False                 # cross-attention (enc-dec)
+    # q-chunked (flash-style) attention: bounds the live score block to
+    # [B, H, q_chunk, T] instead of [B, H, S, T].  Non-divisible or
+    # small S falls back to the direct path.
+    q_chunk: int = 512
+
+
+def attention_init(key, cfg: AttnConfig, dtype=jnp.float32):
+    ks = KeySeq(key)
+    H, Hk, D, dm = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, cfg.d_model
+    p = {
+        "wq": linear_init(ks(), dm, H * D, axes=("d_model", "heads"),
+                          bias=cfg.qkv_bias, dtype=dtype),
+        # kv projection: logical axis "kv_heads" — sharding rules decide
+        # whether it maps to the model axis (divisible) or is replicated
+        "wk": linear_init(ks(), dm, Hk * D, axes=("d_model", "kv_heads"),
+                          bias=cfg.qkv_bias, dtype=dtype),
+        "wv": linear_init(ks(), dm, Hk * D, axes=("d_model", "kv_heads"),
+                          bias=cfg.qkv_bias, dtype=dtype),
+        "wo": linear_init(ks(), H * D, dm, axes=("heads", "d_model"),
+                          bias=False, dtype=dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = {"scale": param(ks(), (D,), (None,), ones_init(),
+                                      dtype)}
+        p["k_norm"] = {"scale": param(ks(), (D,), (None,), ones_init(),
+                                      dtype)}
+    return p
+
+
+# ---------------------------------------------------------------------------
+# KV cache (optionally int8)
+# ---------------------------------------------------------------------------
+
+def init_cache(batch: int, max_len: int, n_kv: int, head_dim: int,
+               kv_bits: int = 32, dtype=jnp.float32, ring: bool = False):
+    """Allocate a fixed-capacity KV cache for one layer.
+
+    ``ring=True`` makes it a circular buffer of ``max_len`` slots (used
+    for sliding-window attention where max_len == window << sequence):
+    a per-slot absolute-position array drives masking.  This is what
+    keeps the long_500k decode cells sub-quadratic in memory.
+    """
+    if kv_bits < 32:
+        dt = fxp_dtype(kv_bits)
+        cache = {
+            "k": jnp.zeros((batch, max_len, n_kv, head_dim), dt),
+            "v": jnp.zeros((batch, max_len, n_kv, head_dim), dt),
+            "k_scale": jnp.zeros((batch, max_len, n_kv, 1), jnp.float32),
+            "v_scale": jnp.zeros((batch, max_len, n_kv, 1), jnp.float32),
+        }
+    else:
+        cache = {
+            "k": jnp.zeros((batch, max_len, n_kv, head_dim), dtype),
+            "v": jnp.zeros((batch, max_len, n_kv, head_dim), dtype),
+        }
+    if ring:
+        cache["pos"] = jnp.full((batch, max_len), -1, jnp.int32)
+    return cache
+
+
+def _quant_kv(x: Array, bits: int):
+    qmax = fxp_qmax(bits)
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-12) / qmax
+    q = jnp.clip(jnp.round(x / scale), -qmax, qmax).astype(fxp_dtype(bits))
+    return q, scale.astype(jnp.float32)
+
+
+def cache_update(cache, k_new: Array, v_new: Array, index,
+                 kv_bits: int = 32):
+    """Write k/v for positions [index, index+S) (decode: S == 1)."""
+    if "pos" in cache:
+        return _ring_update(cache, k_new, v_new, index, kv_bits)
+    if kv_bits < 32:
+        qk, sk = _quant_kv(k_new, kv_bits)
+        qv, sv = _quant_kv(v_new, kv_bits)
+        return {
+            "k": jax.lax.dynamic_update_slice_in_dim(cache["k"], qk,
+                                                     index, axis=1),
+            "v": jax.lax.dynamic_update_slice_in_dim(cache["v"], qv,
+                                                     index, axis=1),
+            "k_scale": jax.lax.dynamic_update_slice_in_dim(
+                cache["k_scale"], sk, index, axis=1),
+            "v_scale": jax.lax.dynamic_update_slice_in_dim(
+                cache["v_scale"], sv, index, axis=1),
+        }
+    return {
+        "k": jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k_new.astype(cache["k"].dtype), index, axis=1),
+        "v": jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v_new.astype(cache["v"].dtype), index, axis=1),
+    }
+
+
+def _ring_update(cache, k_new: Array, v_new: Array, index,
+                 kv_bits: int = 32):
+    """Circular-buffer write: position p lands in slot p % capacity."""
+    B, S = k_new.shape[0], k_new.shape[1]
+    cap = cache["k"].shape[1]
+    pos = index + jnp.arange(S)
+    slots = jnp.mod(pos, cap)                      # [S]
+    out = dict(cache)
+    if kv_bits < 32:
+        qk, sk = _quant_kv(k_new, kv_bits)
+        qv, sv = _quant_kv(v_new, kv_bits)
+        out["k"] = cache["k"].at[:, slots].set(qk)
+        out["v"] = cache["v"].at[:, slots].set(qv)
+        out["k_scale"] = cache["k_scale"].at[:, slots].set(sk)
+        out["v_scale"] = cache["v_scale"].at[:, slots].set(sv)
+    else:
+        out["k"] = cache["k"].at[:, slots].set(
+            k_new.astype(cache["k"].dtype))
+        out["v"] = cache["v"].at[:, slots].set(
+            v_new.astype(cache["v"].dtype))
+    out["pos"] = cache["pos"].at[:, slots].set(
+        jnp.broadcast_to(pos[None, :], (B, S)).astype(jnp.int32))
+    return out
+
+
+def cache_kv(cache, dtype=jnp.float32) -> Tuple[Array, Array]:
+    """Read the cache back as fp arrays (dequantizing if int8)."""
+    if "k_scale" in cache:
+        k = cache["k"].astype(dtype) * cache["k_scale"].astype(dtype)
+        v = cache["v"].astype(dtype) * cache["v_scale"].astype(dtype)
+        return k, v
+    return cache["k"].astype(dtype), cache["v"].astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# core attention math
+# ---------------------------------------------------------------------------
+
+def _mask_bias(q_pos: Array, k_pos: Array, causal: bool,
+               window: Optional[int], valid_len=None) -> Array:
+    """Additive mask [*, S, T] from absolute positions."""
+    i = q_pos[..., :, None]
+    j = k_pos[..., None, :]
+    ok = jnp.ones(jnp.broadcast_shapes(i.shape, j.shape), bool)
+    if causal:
+        ok &= j <= i
+    if window is not None:
+        ok &= (i - j) < window
+    if valid_len is not None:
+        ok &= j < valid_len
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def gqa_attend(q: Array, k: Array, v: Array, bias: Array,
+               compute_dtype=jnp.float32) -> Array:
+    """Grouped einsum path (decode: S small, KV read un-repeated).
+
+    q:[B,S,H,D] k,v:[B,T,Hk,D] bias:[B?,S,T] -> [B,S,H,D]."""
+    B, S, H, D = q.shape
+    Hk = k.shape[2]
+    G = H // Hk
+    qg = q.reshape(B, S, Hk, G, D).astype(compute_dtype)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg,
+                        k.astype(compute_dtype)) / math.sqrt(D)
+    scores = scores.astype(jnp.float32) + bias[:, None, None]
+    w = jax.nn.softmax(scores, axis=-1).astype(compute_dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", w, v.astype(compute_dtype))
+    return out.reshape(B, S, H, D)
+
+
+def attend_full(q: Array, k: Array, v: Array, q_pos: Array,
+                k_pos: Array, *, causal: bool, window: Optional[int],
+                compute_dtype=jnp.float32,
+                q_chunk: Optional[int] = 512) -> Array:
+    """Train/prefill attention: KV repeated to H heads (TP-shardable on
+    the head axis) and Q processed in chunks so the live score block is
+    [B, H, q_chunk, T] — never the full [B, H, S, S] (which at 32k
+    context would not fit any memory).  The mask is built on the fly
+    from positions; no [S, T] bias tensor is ever materialized beyond
+    one chunk.
+
+    q: [B,S,H,D]  k,v: [B,T,Hk,D]  q_pos: [B,S]  k_pos: [B,T].
+    """
+    from repro.distributed.sharding import constrain
+    B, S, H, D = q.shape
+    T, Hk = k.shape[1], k.shape[2]
+    G = H // Hk
+    if G > 1:
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+    k = constrain(k.astype(compute_dtype), ("batch", None, "heads", None))
+    v = constrain(v.astype(compute_dtype), ("batch", None, "heads", None))
+    q = constrain(q.astype(compute_dtype), ("batch", None, "heads", None))
+    scale = 1.0 / math.sqrt(D)
+
+    def block(q_blk: Array, pos_blk: Array) -> Array:
+        scores = jnp.einsum("bshd,bthd->bhst", q_blk, k) * scale
+        scores = constrain(scores, ("batch", "heads", None, None))
+        bias = _mask_bias(pos_blk, k_pos, causal, window)
+        scores = scores.astype(jnp.float32) + bias[:, None]
+        w = jax.nn.softmax(scores, axis=-1).astype(compute_dtype)
+        out = jnp.einsum("bhst,bthd->bshd", w, v)
+        return constrain(out, ("batch", None, "heads", None))
+
+    if q_chunk is None or S <= q_chunk or S % q_chunk != 0:
+        return block(q, q_pos)
+
+    n = S // q_chunk
+    # pin the stack layout: chunk dim UNSHARDED, heads on "model".
+    # Under SP the incoming q carries a 16-way seq sharding; reshaping
+    # S -> (n, q_chunk) would otherwise dump it onto the chunk dim, and
+    # every backward dynamic_slice of the saved stack then all-gathers
+    # the WHOLE stack (once per chunk iteration).
+    q_blks = constrain(
+        jnp.moveaxis(q.reshape(B, n, q_chunk, H, D), 1, 0),
+        (None, "batch", None, "heads", None))
+    pos_blks = jnp.moveaxis(q_pos.reshape(B, n, q_chunk), 1, 0)
+    # remat each chunk: backward recomputes its scores instead of the
+    # scan stacking [n, B, H, q_chunk, T] softmax weights
+    blk = jax.checkpoint(block)
+    out = jax.lax.map(lambda xs: blk(*xs), (q_blks, pos_blks))
+    return jnp.moveaxis(out, 0, 1).reshape(B, S, H, D)
+
+
+def _project_qkv(p, x, kv_src, cfg: AttnConfig, policy):
+    B = x.shape[0]
+    H, Hk, D = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = linear_apply(p["wq"], x, policy).reshape(B, -1, H, D)
+    k = linear_apply(p["wk"], kv_src, policy).reshape(B, -1, Hk, D)
+    v = linear_apply(p["wv"], kv_src, policy).reshape(B, -1, Hk, D)
+    if cfg.qk_norm:
+        q = rmsnorm_apply(p["q_norm"], q)
+        k = rmsnorm_apply(p["k_norm"], k)
+    return q, k, v
+
+
+def attention_apply(p, x: Array, cfg: AttnConfig,
+                    policy: Optional[QuantPolicy] = None, *,
+                    positions: Optional[Array] = None,
+                    encoder_out: Optional[Array] = None,
+                    cache=None, cache_index=None, kv_bits: int = 32,
+                    return_cache: bool = False):
+    """Full-sequence attention (train / prefill).
+
+    If ``return_cache`` and not cross-attention, also returns the filled
+    KV cache (quantized per kv_bits) for subsequent decode steps.
+    """
+    B, S, _ = x.shape
+    kv_src = encoder_out if cfg.cross else x
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    q, k, v = _project_qkv(p, x, kv_src, cfg, policy)
+    if cfg.rope and not cfg.cross:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    elif cfg.rope and cfg.cross:
+        q = apply_rope(q, positions, cfg.rope_theta)
+    T = k.shape[1]
+    k_pos = jnp.broadcast_to(jnp.arange(T)[None, :], (B, T))
+    cdt = policy.compute_dtype if policy else jnp.float32
+    out = attend_full(q, k, v, positions, k_pos,
+                      causal=cfg.causal and not cfg.cross,
+                      window=cfg.window, compute_dtype=cdt,
+                      q_chunk=cfg.q_chunk)
+    out = linear_apply(p["wo"], out.reshape(B, S, -1), policy)
+    if return_cache and not cfg.cross:
+        cache = init_cache(B, T if cache is None else cache["k"].shape[1],
+                           cfg.n_kv_heads, cfg.head_dim, kv_bits,
+                           k.dtype) if cache is None else cache
+        cache = cache_update(cache, k, v, 0, kv_bits)
+        return out, cache
+    return out
+
+
+def attention_decode(p, x: Array, cfg: AttnConfig, cache,
+                     cache_index: Array,
+                     policy: Optional[QuantPolicy] = None, *,
+                     encoder_out: Optional[Array] = None,
+                     cross_cache=None, kv_bits: int = 32):
+    """One-token decode step against a fixed-capacity cache.
+
+    x: [B, 1, d_model]; cache_index: scalar int32 (current length).
+    Returns (out [B,1,d_model], updated cache).
+    """
+    B = x.shape[0]
+    positions = jnp.full((B, 1), cache_index, jnp.int32)
+    cdt = policy.compute_dtype if policy else jnp.float32
+    if cfg.cross:
+        # cross-attention: cache holds the (static) encoder K/V
+        k, v = cache_kv(cross_cache, cdt)
+        q, _, _ = _project_qkv(p, x, x, cfg, policy)
+        if cfg.rope:
+            q = apply_rope(q, positions, cfg.rope_theta)
+        T = k.shape[1]
+        k_pos = jnp.broadcast_to(jnp.arange(T)[None, :], (B, T))
+        bias = _mask_bias(positions, k_pos, causal=False, window=None)
+        out = gqa_attend(q, k, v, bias, cdt)
+        out = linear_apply(p["wo"], out.reshape(B, 1, -1), policy)
+        return out, cache
+    q, k_new, v_new = _project_qkv(p, x, x, cfg, policy)
+    if cfg.rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k_new = apply_rope(k_new, positions, cfg.rope_theta)
+    cache = cache_update(cache, k_new, v_new, cache_index, kv_bits)
+    k, v = cache_kv(cache, cdt)
+    T = k.shape[1]
+    if "pos" in cache:
+        # ring buffer: mask from stored absolute positions
+        k_pos = cache["pos"]                               # [B, T]
+        ok = (k_pos >= 0) & (k_pos <= cache_index)
+        if cfg.window is not None:
+            ok &= k_pos > (cache_index - cfg.window)
+        bias = jnp.where(ok, 0.0, NEG_INF)[:, None, :].astype(
+            jnp.float32)                                   # [B, 1, T]
+    else:
+        k_pos = jnp.broadcast_to(jnp.arange(T)[None, :], (B, T))
+        bias = _mask_bias(positions, k_pos, causal=True,
+                          window=cfg.window,
+                          valid_len=cache_index + 1)
+    out = gqa_attend(q, k, v, bias, cdt)
+    out = linear_apply(p["wo"], out.reshape(B, 1, -1), policy)
+    return out, cache

@@ -1,0 +1,88 @@
+"""Convolutions: quantized 2D conv (Q-Conv, the RL agent's vision stem)
+and causal depthwise 1D conv (mamba2 / recurrentgemma stems).
+
+Q-Conv follows the paper: stride-2 replaces max-pooling, ReLU after.
+Weights/activations are fake-quantized per policy (im2col+Q-MAC would
+be the TPU kernel; XLA already lowers conv to MXU convolutions, so we
+quantize operands and let XLA fuse — documented adaptation).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fxp import fake_quant, fake_quant_rowwise
+from repro.core.fxp import QTensor, as_dense
+from repro.core.policy import QuantPolicy
+from repro.core.vact import activation
+from repro.nn.module import KeySeq, he_init, param, zeros_init
+
+
+def conv2d_init(key, c_in: int, c_out: int, kernel: int,
+                dtype=jnp.float32):
+    ks = KeySeq(key)
+    return {
+        "w": param(ks(), (kernel, kernel, c_in, c_out),
+                   (None, None, None, "d_ff"), he_init(), dtype),
+        "b": param(ks(), (c_out,), ("d_ff",), zeros_init(), dtype),
+    }
+
+
+def conv2d_apply(p, x, *, stride: int = 1, padding: str = "SAME",
+                 policy: Optional[QuantPolicy] = None):
+    """x: [B, H, W, C] -> [B, H', W', C']."""
+    w = as_dense(p["w"])
+    if policy is not None and policy.quantized_w \
+            and not isinstance(p["w"], QTensor):
+        w = fake_quant(w, policy.w_bits, channel_axis=3)
+    if policy is not None and policy.quantized_a:
+        x = fake_quant_rowwise(x, policy.a_bits)
+    dn = jax.lax.conv_dimension_numbers(x.shape, w.shape,
+                                        ("NHWC", "HWIO", "NHWC"))
+    out = jax.lax.conv_general_dilated(
+        x.astype(policy.compute_dtype if policy else jnp.float32),
+        w.astype(policy.compute_dtype if policy else jnp.float32),
+        (stride, stride), padding, dimension_numbers=dn)
+    return out + p["b"].astype(out.dtype)
+
+
+def qconv_block(p, x, *, stride: int = 2,
+                policy: Optional[QuantPolicy] = None):
+    """Paper's Q-Conv block: stride-2 conv (replaces pooling) + ReLU."""
+    return activation(conv2d_apply(p, x, stride=stride, policy=policy),
+                      "relu", policy)
+
+
+def causal_conv1d_init(key, channels: int, width: int = 4,
+                       dtype=jnp.float32):
+    ks = KeySeq(key)
+    return {
+        "w": param(ks(), (width, channels), (None, "d_inner"),
+                   he_init(), dtype),
+        "b": param(ks(), (channels,), ("d_inner",), zeros_init(), dtype),
+    }
+
+
+def causal_conv1d_apply(p, x, state=None):
+    """Depthwise causal conv.  x: [B, S, C].
+
+    With ``state`` ([B, width-1, C], the trailing inputs) this performs
+    one decode step (S == 1) and returns (out, new_state).
+    """
+    w, b = as_dense(p["w"]), p["b"]
+    width = w.shape[0]
+    if state is not None:
+        window = jnp.concatenate([state, x], axis=1)     # [B, width, C]
+        out = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32),
+                         w.astype(jnp.float32)) + b
+        return out[:, None, :].astype(x.dtype), window[:, 1:]
+    pad = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        pad.astype(jnp.float32)[:, :, :],
+        w.astype(jnp.float32)[:, None, :],   # [W, 1, C] depthwise
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=x.shape[-1])
+    return (out + b).astype(x.dtype)

@@ -1,0 +1,56 @@
+"""Quantized linear / embedding layers — every matmul goes via q_matmul."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fxp import QTensor
+from repro.core.policy import QuantPolicy
+from repro.core.qmatmul import q_matmul
+from repro.nn.module import (Axes, KeySeq, Param, lecun_init, normal_init,
+                             param, zeros_init)
+
+
+def linear_init(key, d_in: int, d_out: int, *, axes: Axes,
+                bias: bool = True, init=None, dtype=jnp.float32):
+    ks = KeySeq(key)
+    p = {"w": param(ks(), (d_in, d_out), axes, init or lecun_init(), dtype)}
+    if bias:
+        p["b"] = param(ks(), (d_out,), (axes[-1],) if axes else None,
+                       zeros_init(), dtype)
+    return p
+
+
+def linear_apply(p, x, policy: Optional[QuantPolicy] = None):
+    y = q_matmul(x, p["w"], policy)
+    if "b" in p:
+        y = y + p["b"].astype(y.dtype)
+    return y
+
+
+def embedding_init(key, vocab: int, d_model: int, *, axes: Axes,
+                   init=None, dtype=jnp.float32):
+    return {"emb": param(key, (vocab, d_model), axes,
+                         init or normal_init(0.02), dtype)}
+
+
+def embedding_apply(p, ids, policy: Optional[QuantPolicy] = None):
+    """Token lookup; int8 QTensor tables are gathered then dequantized
+    (so the HBM read is 1 byte/elem — the serving win)."""
+    emb = p["emb"]
+    if isinstance(emb, QTensor):
+        rows = jnp.take(emb.qvalue, ids, axis=0)
+        scale = emb.scale  # [1, d] per-channel or [1,1]
+        return rows.astype(jnp.float32) * scale
+    out = jnp.take(emb, ids, axis=0)
+    return out
+
+
+def embedding_attend(p, x, policy: Optional[QuantPolicy] = None):
+    """Tied LM head: logits = x @ emb^T."""
+    emb = p["emb"]
+    if isinstance(emb, QTensor):
+        emb = emb.deq(x.dtype)
+    return q_matmul(x, emb.T, policy)

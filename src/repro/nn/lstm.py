@@ -1,0 +1,81 @@
+"""Q-LSTM layer: quantized gate matmuls + V-ACT activations.
+
+Three execution paths with identical semantics:
+  * policy backend "ref"/"xla": q_matmul gates + core.vact activations,
+  * policy backend "pallas" at 8-bit: the fused kernels/qlstm cell,
+  * fp32 policy: plain LSTM (the E2HRL FxP32 baseline).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import QuantPolicy, cordic_iterations
+from repro.core.qmatmul import q_matmul, quantize_rowwise
+from repro.core.fxp import quantize
+from repro.core.vact import activation
+from repro.nn.module import KeySeq, lecun_init, param, zeros_init
+
+
+def lstm_init(key, d_in: int, d_hidden: int, dtype=jnp.float32):
+    ks = KeySeq(key)
+    return {
+        "w_x": param(ks(), (d_in, 4 * d_hidden), ("d_model", "d_ff"),
+                     lecun_init(), dtype),
+        "w_h": param(ks(), (d_hidden, 4 * d_hidden), ("d_model", "d_ff"),
+                     lecun_init(), dtype),
+        "b": param(ks(), (4 * d_hidden,), ("d_ff",), zeros_init(), dtype),
+    }
+
+
+def lstm_cell(p, x, h, c, policy: Optional[QuantPolicy] = None):
+    """One step.  x: [B, Din]; h, c: [B, H] -> (h', c')."""
+    H = h.shape[-1]
+    if (policy is not None and policy.backend == "pallas"
+            and policy.w_bits == 8 and policy.a_bits == 8):
+        from repro.kernels.qlstm import ops as qlstm_ops
+        qx, sx_arr = quantize_rowwise(x, 8)
+        qh, sh_arr = quantize_rowwise(h, 8)
+        # the fused kernel takes per-tensor activation scales
+        sx = jnp.max(sx_arr)
+        sh = jnp.max(sh_arr)
+        qx = jnp.clip(jnp.round(x / sx), -127, 127).astype(jnp.int8)
+        qh = jnp.clip(jnp.round(h / sh), -127, 127).astype(jnp.int8)
+        qw, sw = quantize(p["w_x"], 8, channel_axis=1)
+        qu, su = quantize(p["w_h"], 8, channel_axis=1)
+        return qlstm_ops.qlstm_cell(
+            qx, sx, qh, sh, qw, sw.reshape(1, -1), qu, su.reshape(1, -1),
+            p["b"], c, n_iters=cordic_iterations(policy))
+    gates = (q_matmul(x, p["w_x"], policy)
+             + q_matmul(h, p["w_h"], policy) + p["b"])
+    i = activation(gates[..., 0 * H:1 * H], "sigmoid", policy)
+    f = activation(gates[..., 1 * H:2 * H], "sigmoid", policy)
+    g = activation(gates[..., 2 * H:3 * H], "tanh", policy)
+    o = activation(gates[..., 3 * H:4 * H], "sigmoid", policy)
+    c_new = f * c + i * g
+    h_new = activation(c_new, "tanh", policy) * o
+    return h_new, c_new
+
+
+def lstm_apply(p, xs, policy: Optional[QuantPolicy] = None,
+               state: Optional[Tuple] = None):
+    """xs: [B, S, Din] -> (hs [B, S, H], (h_T, c_T))."""
+    B, S, _ = xs.shape
+    H = p["b"].shape[-1] // 4 if not hasattr(p["b"], "value") \
+        else p["b"].value.shape[-1] // 4
+    if state is None:
+        h = jnp.zeros((B, H), xs.dtype)
+        c = jnp.zeros((B, H), jnp.float32)
+    else:
+        h, c = state
+
+    def step(carry, x_t):
+        h, c = carry
+        h, c = lstm_cell(p, x_t, h, c, policy)
+        return (h, c), h
+
+    (h, c), hs = jax.lax.scan(step, (h, c),
+                              jnp.swapaxes(xs, 0, 1))
+    return jnp.swapaxes(hs, 0, 1), (h, c)

@@ -1,0 +1,55 @@
+"""Dense FFN blocks: SwiGLU (llama-family), GELU (whisper), GeGLU
+(gemma-family), and the plain ReLU FC used by the RL agent."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import QuantPolicy
+from repro.core.vact import activation
+from repro.nn.linear import linear_apply, linear_init
+from repro.nn.module import KeySeq
+
+
+def swiglu_init(key, d_model: int, d_ff: int, dtype=jnp.float32):
+    ks = KeySeq(key)
+    return {
+        "w_gate": linear_init(ks(), d_model, d_ff,
+                              axes=("d_model", "d_ff"), bias=False,
+                              dtype=dtype),
+        "w_up": linear_init(ks(), d_model, d_ff,
+                            axes=("d_model", "d_ff"), bias=False,
+                            dtype=dtype),
+        "w_down": linear_init(ks(), d_ff, d_model,
+                              axes=("d_ff", "d_model"), bias=False,
+                              dtype=dtype),
+    }
+
+
+def swiglu_apply(p, x, policy: Optional[QuantPolicy] = None,
+                 act: str = "silu"):
+    g = linear_apply(p["w_gate"], x, policy)
+    u = linear_apply(p["w_up"], x, policy)
+    h = activation(g, act, policy) * u
+    return linear_apply(p["w_down"], h, policy)
+
+
+def mlp_init(key, d_model: int, d_ff: int, *, bias: bool = True,
+             dtype=jnp.float32):
+    ks = KeySeq(key)
+    return {
+        "w_in": linear_init(ks(), d_model, d_ff,
+                            axes=("d_model", "d_ff"), bias=bias,
+                            dtype=dtype),
+        "w_out": linear_init(ks(), d_ff, d_model,
+                             axes=("d_ff", "d_model"), bias=bias,
+                             dtype=dtype),
+    }
+
+
+def mlp_apply(p, x, policy: Optional[QuantPolicy] = None,
+              act: str = "gelu"):
+    h = activation(linear_apply(p["w_in"], x, policy), act, policy)
+    return linear_apply(p["w_out"], h, policy)

@@ -1,0 +1,131 @@
+"""Minimal functional module system (no flax in this container).
+
+Convention: every layer provides ``<name>_init(key, ...) -> params`` and
+``<name>_apply(params, x, ...) -> out``.  Parameters are plain pytrees of
+arrays *boxed* in :class:`Param`, which carries the logical sharding axes
+(MaxText-style logical axis names).  Before jit/optimization, ``unbox``
+strips the boxes; ``axes_of`` extracts the parallel axes tree used by
+``distributed.sharding`` to build NamedShardings.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+Axes = Optional[Tuple[Optional[str], ...]]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Param:
+    """A parameter leaf annotated with logical sharding axes."""
+
+    value: Any
+    axes: Axes = None
+
+    def tree_flatten(self):
+        return (self.value,), (self.axes,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], aux[0])
+
+    @property
+    def shape(self):
+        return self.value.shape
+
+
+def is_param(x) -> bool:
+    return isinstance(x, Param)
+
+
+def unbox(tree):
+    """Strip Param boxes -> plain array pytree (what jit/optimizers see)."""
+    return jax.tree.map(lambda p: p.value if is_param(p) else p, tree,
+                        is_leaf=is_param)
+
+
+def axes_of(tree):
+    """Same structure as ``unbox(tree)`` with axes tuples as leaves."""
+    return jax.tree.map(lambda p: p.axes if is_param(p) else None, tree,
+                        is_leaf=is_param)
+
+
+def rebox(values, axes):
+    """Inverse of unbox given an axes tree of identical structure."""
+    return jax.tree.map(lambda v, a: Param(v, a), values, axes,
+                        is_leaf=lambda x: x is None)
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def normal_init(stddev: float = 0.02) -> Callable:
+    def f(key, shape, dtype=jnp.float32):
+        return jax.random.normal(key, shape, dtype) * jnp.asarray(
+            stddev, dtype)
+    return f
+
+
+def lecun_init() -> Callable:
+    def f(key, shape, dtype=jnp.float32):
+        fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+        std = math.sqrt(1.0 / fan_in)
+        return jax.random.normal(key, shape, dtype) * jnp.asarray(std, dtype)
+    return f
+
+
+def he_init() -> Callable:
+    def f(key, shape, dtype=jnp.float32):
+        fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+        std = math.sqrt(2.0 / fan_in)
+        return jax.random.normal(key, shape, dtype) * jnp.asarray(std, dtype)
+    return f
+
+
+def zeros_init() -> Callable:
+    return lambda key, shape, dtype=jnp.float32: jnp.zeros(shape, dtype)
+
+
+def ones_init() -> Callable:
+    return lambda key, shape, dtype=jnp.float32: jnp.ones(shape, dtype)
+
+
+def param(key, shape: Sequence[int], axes: Axes,
+          init: Optional[Callable] = None, dtype=jnp.float32) -> Param:
+    init = init or lecun_init()
+    assert axes is None or len(axes) == len(shape), (shape, axes)
+    return Param(init(key, tuple(shape), dtype), axes)
+
+
+class KeySeq:
+    """Deterministic key dispenser: ks = KeySeq(key); k1 = ks()."""
+
+    def __init__(self, key: Array):
+        self._key = key
+
+    def __call__(self) -> Array:
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    def split(self, n: int):
+        self._key, *subs = jax.random.split(self._key, n + 1)
+        return subs
+
+
+def count_params(tree) -> int:
+    from repro.core.fxp import QTensor
+    total = 0
+    for leaf in jax.tree.leaves(unbox(tree),
+                                is_leaf=lambda l: isinstance(l, QTensor)):
+        if isinstance(leaf, QTensor):
+            total += int(jnp.size(leaf.qvalue))
+        else:
+            total += int(jnp.size(leaf))
+    return total

@@ -1,0 +1,147 @@
+"""Mixture-of-Experts FFN with sort-based capacity dispatch.
+
+Two sharding regimes are exercised by the assigned archs (rules decide
+via logical axes, see distributed/sharding.py):
+
+  * expert parallelism (qwen3-moe: 128 experts / 16-way model axis):
+    logical axis "experts" -> "model"; the dispatch scatter/gather
+    lowers to all-to-all style collectives across the model axis.
+  * TP-within-expert (mixtral: 8 experts < 16-way model axis):
+    logical axis "d_ff_expert" -> "model"; experts replicated,
+    each expert's FFN is tensor-parallel.
+
+Dispatch: tokens pick top-k experts; a position within each expert's
+capacity buffer is assigned by sorting token-assignments by expert id
+(O(Tk log Tk), memory O(Tk) — no [T, E, C] one-hot blowup).  Tokens
+beyond capacity are dropped (their combine weight contributes nothing),
+standard GShard capacity-factor semantics.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import QuantPolicy
+from repro.core.qmatmul import q_batched_matmul, q_matmul
+from repro.core.vact import activation
+from repro.distributed.sharding import constrain
+from repro.nn.linear import linear_init
+from repro.nn.module import KeySeq, lecun_init, param
+
+
+def moe_init(key, d_model: int, d_ff: int, n_experts: int,
+             dtype=jnp.float32):
+    ks = KeySeq(key)
+    ax_w_in = ("experts", "d_model", "d_ff_expert")
+    ax_w_out = ("experts", "d_ff_expert", "d_model")
+    return {
+        "router": linear_init(ks(), d_model, n_experts,
+                              axes=("d_model", None), bias=False,
+                              dtype=dtype),
+        "w_gate": param(ks(), (n_experts, d_model, d_ff), ax_w_in,
+                        lecun_init(), dtype),
+        "w_up": param(ks(), (n_experts, d_model, d_ff), ax_w_in,
+                      lecun_init(), dtype),
+        "w_down": param(ks(), (n_experts, d_ff, d_model), ax_w_out,
+                        lecun_init(), dtype),
+    }
+
+
+def _dispatch_indices(expert_idx: jnp.ndarray, n_experts: int,
+                      capacity: int):
+    """Position of each (token, slot) inside its expert's buffer.
+
+    expert_idx: [Tk] int32.  Returns (pos [Tk], keep-mask [Tk]).
+    """
+    tk = expert_idx.shape[0]
+    order = jnp.argsort(expert_idx)                    # stable
+    sorted_e = expert_idx[order]
+    # rank within the sorted array minus start offset of the segment
+    counts = jnp.bincount(expert_idx, length=n_experts)
+    starts = jnp.cumsum(counts) - counts               # [E]
+    ranks = jnp.arange(tk) - starts[sorted_e]          # pos within expert
+    pos_sorted = ranks
+    pos = jnp.zeros_like(pos_sorted).at[order].set(pos_sorted)
+    keep = pos < capacity
+    return pos, keep
+
+
+def moe_apply(p, x, *, top_k: int, policy: Optional[QuantPolicy] = None,
+              capacity_factor: float = 1.25, act: str = "silu",
+              router_bf16: bool = False):
+    """x: [B, S, d_model] -> [B, S, d_model]."""
+    B, S, D = x.shape
+    E = p["w_gate"].shape[0] if not hasattr(p["w_gate"], "value") \
+        else p["w_gate"].value.shape[0]
+    w_gate, w_up, w_down = p["w_gate"], p["w_up"], p["w_down"]
+    T = B * S
+
+    # multi-device mesh active -> explicit shard_map dispatch (EP or
+    # TP-within-expert); the global-view path below stays for hosts
+    # and for non-divisible batches (long_500k B=1)
+    from repro.distributed.sharding import current_mesh
+    from repro.nn import moe_shard
+    mesh = current_mesh()
+    if mesh is not None and mesh.devices.size > 1 and \
+            moe_shard.shardable(x, mesh, E):
+        return moe_shard.moe_shard_map(
+            x, p["router"]["w"], w_gate, w_up, w_down, mesh,
+            top_k=top_k, capacity_factor=capacity_factor,
+            policy=policy, act=act)
+
+    xf = x.reshape(T, D)
+
+    # --- routing (always executed in fp32: tiny, accuracy-critical) ----
+    logits = q_matmul(xf, p["router"]["w"], None).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)      # [T, k]
+    gate_vals = gate_vals / jnp.sum(gate_vals, -1, keepdims=True)
+
+    # --- dispatch ------------------------------------------------------
+    capacity = int(math.ceil(T * top_k / E * capacity_factor))
+    capacity = max(capacity, 4)
+    e_flat = gate_idx.reshape(-1)                          # [Tk]
+    w_flat = gate_vals.reshape(-1)
+    pos, keep = _dispatch_indices(e_flat, E, capacity)
+    # dropped tokens go to a scratch slot (capacity) that is sliced off
+    pos_c = jnp.where(keep, pos, capacity)
+    x_rep = jnp.repeat(xf, top_k, axis=0)                  # [Tk, D]
+    x_rep = constrain(x_rep, ("batch", None))
+    buf = jnp.zeros((E, capacity + 1, D), x.dtype)
+    # expert buffers: experts over the model axis (EP) or replicated
+    # (TP-within-expert), capacity over data — without this constraint
+    # SPMD replicates the [E, C, D] buffers per device (100+ GiB at
+    # 1M-token steps); the scatter below lowers to the EP all-to-all
+    buf = constrain(buf, ("experts", "batch", None))
+    buf = buf.at[e_flat, pos_c].set(x_rep, mode="drop")
+    buf = constrain(buf, ("experts", "batch", None))
+    buf = buf[:, :capacity]
+
+    # --- expert FFN (batched quantized matmuls) ------------------------
+    g = q_batched_matmul(buf, w_gate, policy)
+    u = q_batched_matmul(buf, w_up, policy)
+    h = activation(g, act, policy) * u
+    h = constrain(h, ("experts", "batch", None))
+    out_buf = q_batched_matmul(h, w_down, policy)          # [E, C, D]
+    out_buf = constrain(out_buf, ("experts", "batch", None))
+
+    # --- combine -------------------------------------------------------
+    gathered = out_buf[e_flat, jnp.minimum(pos_c, capacity - 1)]
+    gathered = constrain(gathered, ("batch", None))
+    gathered = jnp.where((keep * 1.0)[:, None] > 0, gathered, 0.0)
+    weighted = gathered * w_flat[:, None].astype(gathered.dtype)
+    out = weighted.reshape(T, top_k, D).sum(axis=1)
+    return out.reshape(B, S, D).astype(x.dtype)
+
+
+def moe_aux_loss(logits: jnp.ndarray, gate_idx: jnp.ndarray,
+                 n_experts: int) -> jnp.ndarray:
+    """Switch-style load-balancing auxiliary loss."""
+    probs = jax.nn.softmax(logits, -1)
+    me = probs.mean(0)
+    one_hot = jax.nn.one_hot(gate_idx[:, 0], n_experts)
+    ce = one_hot.mean(0)
+    return n_experts * jnp.sum(me * ce)

@@ -1,0 +1,44 @@
+"""RMSNorm / LayerNorm (fp32 statistics, policy-dtype output)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.module import ones_init, param, zeros_init
+
+
+def rmsnorm_init(key, d: int, dtype=jnp.float32):
+    return {"scale": param(key, (d,), (None,), ones_init(), dtype)}
+
+
+def rmsnorm_apply(p, x, eps: float = 1e-6):
+    """fp32 accumulation without fp32 elementwise upcasts.
+
+    The sum of squares runs through an einsum with
+    preferred_element_type=f32 (a dot, so XLA cannot "helpfully" hoist
+    a whole-tensor bf16->f32 convert of the scan-saved activations out
+    of the backward loop — that hoist alone costs O(L*B*S*d) live
+    bytes).  The normalization multiply stays in the input dtype; the
+    rsqrt scalar is fp32 throughout.
+    """
+    dt = x.dtype
+    d = x.shape[-1]
+    ss = jnp.einsum("...d,...d->...", x, x,
+                    preferred_element_type=jnp.float32)
+    inv = jax.lax.rsqrt(ss[..., None] / d + eps)
+    return x * inv.astype(dt) * p["scale"].astype(dt)
+
+
+def layernorm_init(key, d: int, dtype=jnp.float32):
+    return {"scale": param(key, (d,), (None,), ones_init(), dtype),
+            "bias": param(key, (d,), (None,), zeros_init(), dtype)}
+
+
+def layernorm_apply(p, x, eps: float = 1e-5):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * (var + eps) ** -0.5
+    return (out * p["scale"].astype(jnp.float32)
+            + p["bias"].astype(jnp.float32)).astype(dt)

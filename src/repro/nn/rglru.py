@@ -1,0 +1,116 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+Real-gated linear recurrent unit:
+    r_t = sigmoid(W_r x_t)            (recurrence gate)
+    i_t = sigmoid(W_i x_t)            (input gate)
+    a_t = a ^ (c * r_t)               (per-channel learned decay, c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+The full-sequence path uses ``jax.lax.associative_scan`` (log-depth —
+this is the sub-quadratic property that lets recurrentgemma run the
+long_500k shape).  Decode is a single fused step.
+
+The surrounding recurrent block is: linear_in -> causal conv1d ->
+RG-LRU -> (gated by GeLU branch) -> linear_out, all via q_matmul.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import QuantPolicy
+from repro.core.qmatmul import q_matmul
+from repro.core.vact import activation
+from repro.nn.conv import causal_conv1d_apply, causal_conv1d_init
+from repro.nn.linear import linear_apply, linear_init
+from repro.nn.module import KeySeq, normal_init, param
+
+_C = 8.0
+_MAX_SQRT_GRADIENT = 1000.0
+
+
+def rglru_init(key, width: int, dtype=jnp.float32):
+    ks = KeySeq(key)
+    return {
+        "w_r": linear_init(ks(), width, width, axes=("d_inner", "d_inner"),
+                           bias=True, dtype=dtype),
+        "w_i": linear_init(ks(), width, width, axes=("d_inner", "d_inner"),
+                           bias=True, dtype=dtype),
+        # Lambda parametrized so a = sigmoid(L) starts near 0.9-0.999
+        "L": param(ks(), (width,), ("d_inner",),
+                   lambda k, s, d: jax.random.uniform(k, s, d, 2.0, 6.0)),
+    }
+
+
+def _gates(p, x, policy):
+    r = jax.nn.sigmoid(q_matmul(x, p["w_r"]["w"], policy)
+                       + p["w_r"]["b"])
+    i = jax.nn.sigmoid(q_matmul(x, p["w_i"]["w"], policy)
+                       + p["w_i"]["b"])
+    log_a_base = -_C * jax.nn.softplus(p["L"].astype(jnp.float32))
+    log_a = log_a_base * r.astype(jnp.float32)          # [B,S,W]
+    a = jnp.exp(log_a)
+    # sqrt(1 - a^2) with the Griffin stability clamp
+    mult = jnp.sqrt(jnp.clip(1.0 - jnp.exp(2.0 * log_a), 1e-12, 1.0))
+    gated_x = x.astype(jnp.float32) * i.astype(jnp.float32) * mult
+    return a, gated_x
+
+
+def rglru_apply(p, x, policy: Optional[QuantPolicy] = None,
+                state: Optional[jnp.ndarray] = None):
+    """x: [B, S, W].  With state [B, W]: one decode step (S==1)."""
+    a, b = _gates(p, x, policy)
+    if state is not None:
+        h = a[:, 0] * state + b[:, 0]
+        return h[:, None, :].astype(x.dtype), h
+    # associative scan over the linear recurrence h = a h_prev + b
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    a_s, h_s = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h_s.astype(x.dtype), h_s[:, -1]
+
+
+def recurrent_block_init(key, d_model: int, width: int,
+                         conv_width: int = 4, dtype=jnp.float32):
+    ks = KeySeq(key)
+    return {
+        "lin_x": linear_init(ks(), d_model, width,
+                             axes=("d_model", "d_inner"), bias=False,
+                             dtype=dtype),
+        "lin_y": linear_init(ks(), d_model, width,
+                             axes=("d_model", "d_inner"), bias=False,
+                             dtype=dtype),
+        "conv": causal_conv1d_init(ks(), width, conv_width, dtype),
+        "rglru": rglru_init(ks(), width, dtype),
+        "lin_out": linear_init(ks(), width, d_model,
+                               axes=("d_inner", "d_model"), bias=False,
+                               dtype=dtype),
+    }
+
+
+def recurrent_block_apply(p, x, policy: Optional[QuantPolicy] = None,
+                          state: Optional[dict] = None):
+    """Griffin recurrent block.  state: {"conv": ..., "rglru": ...}."""
+    gate = activation(linear_apply(p["lin_y"], x, policy), "gelu", policy)
+    u = linear_apply(p["lin_x"], x, policy)
+    if state is not None:
+        u, conv_state = causal_conv1d_apply(p["conv"], u, state["conv"])
+        h, rg_state = rglru_apply(p["rglru"], u, policy, state["rglru"])
+        out = linear_apply(p["lin_out"], h * gate, policy)
+        return out, {"conv": conv_state, "rglru": rg_state}
+    u = causal_conv1d_apply(p["conv"], u)
+    h, _ = rglru_apply(p["rglru"], u, policy)
+    return linear_apply(p["lin_out"], h * gate, policy)
+
+
+def recurrent_block_init_state(batch: int, width: int,
+                               conv_width: int = 4):
+    return {
+        "conv": jnp.zeros((batch, conv_width - 1, width), jnp.float32),
+        "rglru": jnp.zeros((batch, width), jnp.float32),
+    }

@@ -1,0 +1,204 @@
+"""Mamba-2 SSD (state-space duality) layer [arXiv:2405.21060].
+
+Chunked SSD for train/prefill (intra-chunk quadratic + inter-chunk
+linear recurrence over chunk states) and a constant-memory recurrent
+step for decode.  Projections route through q_matmul; the recurrence
+state stays fp32 (quantizing the running state compounds error — the
+paper's feedback-resilience argument applies to policy outputs, not to
+carried state; noted in DESIGN.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import QuantPolicy
+from repro.core.qmatmul import q_matmul
+from repro.nn.conv import causal_conv1d_apply, causal_conv1d_init
+from repro.nn.linear import linear_apply, linear_init
+from repro.nn.module import KeySeq, normal_init, ones_init, param
+from repro.nn.norm import rmsnorm_apply
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_model: int
+    d_inner: int           # expand * d_model
+    head_dim: int = 64     # P
+    d_state: int = 128     # N
+    n_groups: int = 1      # G
+    conv_width: int = 4
+    chunk: int = 128
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+
+def ssm_init(key, cfg: SSMConfig, dtype=jnp.float32):
+    ks = KeySeq(key)
+    conv_dim = cfg.d_inner + 2 * cfg.n_groups * cfg.d_state
+    d_in_proj = 2 * cfg.d_inner + 2 * cfg.n_groups * cfg.d_state \
+        + cfg.n_heads
+    return {
+        "in_proj": linear_init(ks(), cfg.d_model, d_in_proj,
+                               axes=("d_model", "d_inner"), bias=False,
+                               dtype=dtype),
+        "conv": causal_conv1d_init(ks(), conv_dim, cfg.conv_width, dtype),
+        "A_log": param(ks(), (cfg.n_heads,), ("heads",),
+                       lambda k, s, d: jnp.log(
+                           jax.random.uniform(k, s, d, 1.0, 16.0))),
+        "D": param(ks(), (cfg.n_heads,), ("heads",), ones_init()),
+        "dt_bias": param(ks(), (cfg.n_heads,), ("heads",),
+                         normal_init(0.1)),
+        "norm": {"scale": param(ks(), (cfg.d_inner,), (None,),
+                                ones_init(), dtype)},
+        "out_proj": linear_init(ks(), cfg.d_inner, cfg.d_model,
+                                axes=("d_inner", "d_model"), bias=False,
+                                dtype=dtype),
+    }
+
+
+def _split_zxbcdt(zxbcdt, cfg: SSMConfig):
+    di, gn, h = cfg.d_inner, cfg.n_groups * cfg.d_state, cfg.n_heads
+    z = zxbcdt[..., :di]
+    xBC = zxbcdt[..., di:di + di + 2 * gn]
+    dt = zxbcdt[..., di + di + 2 * gn:]
+    assert dt.shape[-1] == h
+    return z, xBC, dt
+
+
+def _segsum(x):
+    """Stable segment-sum: out[..., i, j] = sum_{k in (j, i]} x_k."""
+    T = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), bool), k=0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(X, A, Bm, C, chunk: int):
+    """Minimal SSD (discrete): X:[b,l,h,p] A:[b,l,h] B,C:[b,l,g,n].
+
+    Returns (Y [b,l,h,p], final_state [b,h,p,n]).
+    """
+    b, l, h, p = X.shape
+    g, n = Bm.shape[2], Bm.shape[3]
+    q = chunk
+    nc = l // q
+    assert l % q == 0, (l, q)
+    rep = h // g
+
+    def cshape(t):
+        return t.reshape(b, nc, q, *t.shape[2:])
+
+    Xc, Ac, Bc, Cc = cshape(X), cshape(A), cshape(Bm), cshape(C)
+    Ac = jnp.moveaxis(Ac, -1, 2)                  # [b, nc, h, q]
+    A_cum = jnp.cumsum(Ac, axis=-1)               # [b, nc, h, q]
+
+    # 1. intra-chunk (diagonal block): quadratic within chunk
+    L = jnp.exp(_segsum(Ac))                      # [b,nc,h,q,q]
+    Cr = jnp.repeat(Cc, rep, axis=3) if g != h else Cc
+    Br = jnp.repeat(Bc, rep, axis=3) if g != h else Bc
+    # scores: C_i . B_j  -> [b,nc,h,q,q]
+    CB = jnp.einsum("bcihn,bcjhn->bchij", Cr, Br)
+    Y_diag = jnp.einsum("bchij,bchij,bcjhp->bcihp", CB, L, Xc)
+
+    # 2. chunk states: B^T (decay-weighted) X
+    decay_states = jnp.exp(A_cum[..., -1:] - A_cum)    # [b,nc,h,q]
+    states = jnp.einsum("bcjhn,bchj,bcjhp->bchpn",
+                        Br, decay_states, Xc)          # [b,nc,h,p,n]
+
+    # 3. inter-chunk recurrence over chunk states
+    chunk_decay = jnp.exp(A_cum[..., -1])              # [b,nc,h]
+
+    def scan_fn(carry, inp):
+        s, d = inp                                     # [b,h,p,n], [b,h]
+        new = carry * d[..., None, None] + s
+        return new, carry                              # emit PREVIOUS
+
+    init = jnp.zeros((b, h, p, n), X.dtype)
+    final, prev_states = jax.lax.scan(
+        scan_fn, init,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)      # [b,nc,h,p,n]
+
+    # 4. off-diagonal contribution from previous chunks' state
+    state_decay = jnp.exp(A_cum)                       # [b,nc,h,q]
+    Y_off = jnp.einsum("bcihn,bchpn,bchi->bcihp",
+                       Cr, prev_states, state_decay)
+
+    Y = (Y_diag + Y_off).reshape(b, l, h, p)
+    return Y, final
+
+
+def ssm_apply(p, u, cfg: SSMConfig,
+              policy: Optional[QuantPolicy] = None,
+              state: Optional[dict] = None,
+              return_state: bool = False):
+    """Full-sequence forward. u: [B, S, d_model].
+
+    With ``state`` (dict with "ssm" [B,H,P,N] and "conv" [B,W-1,C]),
+    performs a single decode step (S == 1).  ``return_state=True`` on
+    the full path also returns the final recurrent state (prefill).
+    """
+    B, S, _ = u.shape
+    h, pd, n, g = cfg.n_heads, cfg.head_dim, cfg.d_state, cfg.n_groups
+    zxbcdt = linear_apply(p["in_proj"], u, policy)
+    z, xBC, dt = _split_zxbcdt(zxbcdt, cfg)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # [B,S,H]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))                 # [H]
+
+    if state is not None:
+        xBC_t, conv_state = causal_conv1d_apply(p["conv"], xBC,
+                                                state["conv"])
+        xBC_t = jax.nn.silu(xBC_t)
+        x = xBC_t[..., :cfg.d_inner].reshape(B, h, pd)
+        Bm = xBC_t[..., cfg.d_inner:cfg.d_inner + g * n].reshape(B, g, n)
+        Cm = xBC_t[..., cfg.d_inner + g * n:].reshape(B, g, n)
+        rep = h // g
+        Br = jnp.repeat(Bm, rep, axis=1)
+        Cr = jnp.repeat(Cm, rep, axis=1)
+        dt1 = dt[:, 0]                                           # [B,H]
+        dA = jnp.exp(dt1 * A)                                    # [B,H]
+        ssm = state["ssm"]
+        ssm = ssm * dA[..., None, None] \
+            + jnp.einsum("bhn,bhp,bh->bhpn", Br, x, dt1)
+        y = jnp.einsum("bhn,bhpn->bhp", Cr, ssm)
+        y = y + x * p["D"][None, :, None]
+        y = y.reshape(B, 1, cfg.d_inner)
+        y = rmsnorm_apply(p["norm"], y * jax.nn.silu(z))
+        out = linear_apply(p["out_proj"], y, policy)
+        return out, {"ssm": ssm, "conv": conv_state}
+
+    xBC_raw = xBC
+    xBC = jax.nn.silu(causal_conv1d_apply(p["conv"], xBC))
+    x = xBC[..., :cfg.d_inner].reshape(B, S, h, pd)
+    Bm = xBC[..., cfg.d_inner:cfg.d_inner + g * n].reshape(B, S, g, n)
+    Cm = xBC[..., cfg.d_inner + g * n:].reshape(B, S, g, n)
+    X_dt = x.astype(jnp.float32) * dt[..., None]                 # dt * x
+    A_dt = A[None, None, :] * dt                                 # [B,S,H]
+    Y, final = ssd_chunked(X_dt, A_dt, Bm.astype(jnp.float32),
+                           Cm.astype(jnp.float32), cfg.chunk)
+    Y = Y + x * p["D"][None, None, :, None]
+    Y = Y.reshape(B, S, cfg.d_inner).astype(u.dtype)
+    Y = rmsnorm_apply(p["norm"], Y * jax.nn.silu(z))
+    out = linear_apply(p["out_proj"], Y, policy)
+    if return_state:
+        w = cfg.conv_width - 1
+        conv_state = xBC_raw[:, S - w:S].astype(jnp.float32)
+        return out, {"ssm": final, "conv": conv_state}
+    return out
+
+
+def ssm_init_state(batch: int, cfg: SSMConfig):
+    conv_dim = cfg.d_inner + 2 * cfg.n_groups * cfg.d_state
+    return {
+        "ssm": jnp.zeros((batch, cfg.n_heads, cfg.head_dim, cfg.d_state),
+                         jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, conv_dim),
+                          jnp.float32),
+    }

@@ -1,0 +1,6 @@
+from repro.optim.adam import (AdamWConfig, adamw_init, adamw_update,
+                              optimizer_shardings)
+from repro.optim.clip import clip_by_global_norm, global_norm, zero_nonfinite
+from repro.optim.compression import compressed_psum_mean, compression_ratio
+from repro.optim.schedule import (constant, inverse_sqrt, linear_warmup,
+                                  warmup_cosine)

@@ -1,0 +1,32 @@
+"""Gradient clipping / finiteness guards."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def global_norm(tree) -> Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float) -> Tuple:
+    """Returns (clipped_tree, pre_clip_norm)."""
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: (g * scale).astype(g.dtype), tree), norm
+
+
+def zero_nonfinite(tree):
+    """Replace non-finite grads with 0 (skip-step semantics per-leaf);
+    returns (tree, any_nonfinite flag) so the loop can count skips."""
+    flags = [jnp.all(jnp.isfinite(l)) for l in jax.tree.leaves(tree)]
+    ok = jnp.stack(flags).all() if flags else jnp.asarray(True)
+    cleaned = jax.tree.map(
+        lambda g: jnp.where(jnp.isfinite(g), g, 0.0).astype(g.dtype), tree)
+    return cleaned, ~ok

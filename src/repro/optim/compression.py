@@ -1,0 +1,90 @@
+"""Quantized gradient collectives with error feedback (beyond-paper #2).
+
+The paper cuts learner->actor *weight sync* to int8 (Q-Actor).  We
+generalize the same trick to the data-parallel gradient all-reduce: ship
+int8 payloads + one fp scale per tensor, and keep a local error-feedback
+buffer so the quantization bias does not accumulate (Seide et al. /
+1-bit Adam semantics: e_{t+1} = g_t + e_t - deq(q_t)).
+
+Two wire strategies, chosen by axis size:
+
+* ``gather``  — all_gather the int8 shards and sum locally.  The wire
+  payload is genuinely 8-bit.  Bytes/device ~ (n-1)/n * S vs 2*S*4 for
+  an fp32 ring all-reduce, an ~8x cut for n=2 (the cross-pod DCN hop,
+  where bandwidth is scarcest).
+* ``psum``    — quantize, then arithmetic all-reduce in an int32
+  container (no overflow up to 2^23 summands).  XLA has no sub-word
+  accumulating all-reduce, so the container is 32-bit on the wire; this
+  path exists to keep the math identical when ``gather`` would lose
+  (n >= 8 on fast ICI).
+
+Both are used inside ``shard_map`` bodies (see launch/train.py) where
+gradients are per-device values and the collective is explicit.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fxp import fxp_qmax
+
+Array = jax.Array
+
+
+def _axis_size(axis_name) -> int:
+    return jax.lax.psum(1, axis_name)
+
+
+def compressed_psum_mean(g: Array, axis_name, bits: int = 8,
+                         error: Optional[Array] = None,
+                         strategy: str = "gather"
+                         ) -> Tuple[Array, Array]:
+    """Mean of ``g`` over ``axis_name`` with ``bits``-wide payloads.
+
+    Returns (mean_estimate fp32, new_error_buffer).  ``error`` is the
+    per-device error-feedback buffer (same shape as g); pass zeros on
+    step 0.  bits == 32 short-circuits to an exact psum.
+    """
+    n = _axis_size(axis_name)
+    g32 = g.astype(jnp.float32)
+    if bits >= 32:
+        mean = jax.lax.psum(g32, axis_name) / n
+        return mean, (error if error is not None
+                      else jnp.zeros_like(g32))
+
+    if error is None:
+        error = jnp.zeros_like(g32)
+    corr = g32 + error
+
+    # shared scale so payloads are summable: pmax of the local absmax
+    qmax = fxp_qmax(bits)
+    amax = jax.lax.pmax(jnp.max(jnp.abs(corr)), axis_name)
+    scale = jnp.maximum(amax, 1e-12) / qmax
+    q = jnp.clip(jnp.round(corr / scale), -qmax, qmax)
+
+    if strategy == "gather":
+        payload = q.astype(jnp.int8 if bits <= 8 else jnp.int16)
+        allq = jax.lax.all_gather(payload, axis_name)     # [n, ...] int8
+        total = jnp.sum(allq.astype(jnp.float32), axis=0)
+    else:  # "psum"
+        total = jax.lax.psum(q.astype(jnp.int32), axis_name) \
+                   .astype(jnp.float32)
+
+    mean = total * scale / n
+    new_error = corr - q * scale          # local residual
+    return mean.astype(jnp.float32), new_error
+
+
+def compression_ratio(bits: int, n: int, strategy: str = "gather") -> float:
+    """Wire-bytes ratio vs an fp32 ring all-reduce (analytic, for the
+    roofline collective term)."""
+    full = 2 * 4.0 * (n - 1) / n            # reduce-scatter + all-gather
+    if bits >= 32:
+        return 1.0
+    if strategy == "gather":
+        comp = (bits / 8.0) * (n - 1)       # all-gather of full payload
+    else:
+        comp = 2 * 4.0 * (n - 1) / n        # int32 container: no win
+    return comp / full

@@ -1,0 +1,43 @@
+"""Learning-rate schedules (scalar jnp functions of the step counter)."""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax.numpy as jnp
+
+Schedule = Callable
+
+
+def constant(lr: float) -> Schedule:
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def linear_warmup(lr: float, warmup_steps: int) -> Schedule:
+    def f(step):
+        frac = jnp.minimum(step / jnp.maximum(warmup_steps, 1), 1.0)
+        return jnp.asarray(lr, jnp.float32) * frac
+    return f
+
+
+def warmup_cosine(lr: float, warmup_steps: int, total_steps: int,
+                  final_frac: float = 0.1) -> Schedule:
+    """Linear warmup then cosine decay to ``final_frac * lr``."""
+    def f(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = step / jnp.maximum(warmup_steps, 1)
+        prog = (step - warmup_steps) / jnp.maximum(
+            total_steps - warmup_steps, 1)
+        prog = jnp.clip(prog, 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (
+            1 + jnp.cos(jnp.pi * prog))
+        return lr * jnp.where(step < warmup_steps, warm, cos)
+    return f
+
+
+def inverse_sqrt(lr: float, warmup_steps: int) -> Schedule:
+    def f(step):
+        step = jnp.maximum(jnp.asarray(step, jnp.float32), 1.0)
+        warm = jnp.minimum(step / jnp.maximum(warmup_steps, 1), 1.0)
+        return lr * warm * jnp.sqrt(
+            jnp.maximum(warmup_steps, 1) / jnp.maximum(step, warmup_steps))
+    return f

@@ -1,0 +1,4 @@
+from repro.rl.gae import gae, normalize
+from repro.rl.ppo import (PPOConfig, a2c_loss, batch_from_traj,
+                          minibatch_epochs, ppo_loss, stage_mask)
+from repro.rl.rollout import RolloutResult, Trajectory, init_envs, rollout

@@ -1,0 +1,90 @@
+"""DQN with a pure-JAX circular replay buffer + target network.
+
+Included because Fig. 3a's parity claim spans value-based methods too;
+the quantized actor here is the epsilon-greedy *behaviour* policy.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class DQNConfig:
+    gamma: float = 0.99
+    eps_start: float = 1.0
+    eps_end: float = 0.05
+    eps_decay_steps: int = 2_000
+    target_update_every: int = 100
+    batch_size: int = 64
+
+
+class Replay(NamedTuple):
+    obs: Array          # [N, ...]
+    actions: Array      # [N]
+    rewards: Array      # [N]
+    next_obs: Array     # [N, ...]
+    dones: Array        # [N]
+    ptr: Array          # scalar int32: next write slot
+    size: Array         # scalar int32: valid entries
+
+
+def replay_init(capacity: int, obs_shape) -> Replay:
+    z = jnp.zeros
+    return Replay(z((capacity,) + tuple(obs_shape)),
+                  z((capacity,), jnp.int32), z((capacity,)),
+                  z((capacity,) + tuple(obs_shape)),
+                  z((capacity,), bool),
+                  jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32))
+
+
+def replay_add(buf: Replay, obs, action, reward, next_obs, done) -> Replay:
+    """Add a batch of B transitions (contiguous circular write)."""
+    B = obs.shape[0]
+    cap = buf.obs.shape[0]
+    idx = (buf.ptr + jnp.arange(B)) % cap
+    return Replay(
+        buf.obs.at[idx].set(obs),
+        buf.actions.at[idx].set(action),
+        buf.rewards.at[idx].set(reward),
+        buf.next_obs.at[idx].set(next_obs),
+        buf.dones.at[idx].set(done),
+        (buf.ptr + B) % cap,
+        jnp.minimum(buf.size + B, cap),
+    )
+
+
+def replay_sample(buf: Replay, key: Array, n: int) -> dict:
+    idx = jax.random.randint(key, (n,), 0, jnp.maximum(buf.size, 1))
+    return {"obs": buf.obs[idx], "actions": buf.actions[idx],
+            "rewards": buf.rewards[idx], "next_obs": buf.next_obs[idx],
+            "dones": buf.dones[idx]}
+
+
+def epsilon(step: Array, cfg: DQNConfig) -> Array:
+    frac = jnp.clip(step / cfg.eps_decay_steps, 0.0, 1.0)
+    return cfg.eps_start + frac * (cfg.eps_end - cfg.eps_start)
+
+
+def egreedy(key: Array, qvals: Array, eps: Array) -> Array:
+    B, A = qvals.shape
+    k1, k2 = jax.random.split(key)
+    rand = jax.random.randint(k1, (B,), 0, A)
+    greedy = jnp.argmax(qvals, axis=-1)
+    return jnp.where(jax.random.uniform(k2, (B,)) < eps, rand, greedy)
+
+
+def dqn_loss(params, target_params, apply_fn: Callable, batch: dict,
+             cfg: DQNConfig) -> Array:
+    q = apply_fn(params, batch["obs"])
+    q_sel = q[jnp.arange(q.shape[0]), batch["actions"]]
+    q_next = apply_fn(target_params, batch["next_obs"])
+    target = batch["rewards"] + cfg.gamma * (
+        1.0 - batch["dones"].astype(jnp.float32)) * q_next.max(-1)
+    target = jax.lax.stop_gradient(target)
+    return jnp.mean(jnp.square(q_sel - target))

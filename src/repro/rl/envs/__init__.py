@@ -1,0 +1,8 @@
+from repro.rl.envs import cartpole, keydoor
+
+ENVS = {"cartpole": cartpole.rollout_capable,
+        "keydoor": keydoor.rollout_capable}
+
+
+def get_env(name: str) -> dict:
+    return ENVS[name]()

@@ -1,0 +1,93 @@
+"""Pure-JAX CartPole-v1 (Barto-Sutton dynamics, OpenAI Gym constants).
+
+Functional API, vmap/scan friendly:
+
+    state = reset(key)                      # EnvState
+    state, obs, reward, done = step(state, action)
+
+Auto-reset on termination (the returned state of a done transition is a
+fresh episode; ``done`` marks the boundary for GAE).  All ops are
+jax.lax level so thousands of environments run inside one jit — this is
+what the quantized-actor throughput claims are measured on.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+# Gym CartPole-v1 constants
+GRAVITY = 9.8
+CART_MASS = 1.0
+POLE_MASS = 0.1
+TOTAL_MASS = CART_MASS + POLE_MASS
+POLE_HALF_LEN = 0.5
+POLEMASS_LEN = POLE_MASS * POLE_HALF_LEN
+FORCE_MAG = 10.0
+DT = 0.02
+THETA_LIMIT = 12 * 2 * jnp.pi / 360
+X_LIMIT = 2.4
+MAX_STEPS = 500
+
+N_ACTIONS = 2
+OBS_DIM = 4
+
+
+class EnvState(NamedTuple):
+    x: Array
+    x_dot: Array
+    theta: Array
+    theta_dot: Array
+    t: Array            # step counter
+    key: Array          # per-env PRNG for auto-reset
+
+
+def _obs(s: EnvState) -> Array:
+    return jnp.stack([s.x, s.x_dot, s.theta, s.theta_dot], axis=-1)
+
+
+def _fresh(key: Array) -> EnvState:
+    key, sub = jax.random.split(key)
+    vals = jax.random.uniform(sub, (4,), minval=-0.05, maxval=0.05)
+    return EnvState(vals[0], vals[1], vals[2], vals[3],
+                    jnp.zeros((), jnp.int32), key)
+
+
+def reset(key: Array) -> Tuple[EnvState, Array]:
+    s = _fresh(key)
+    return s, _obs(s)
+
+
+def step(s: EnvState, action: Array
+         ) -> Tuple[EnvState, Array, Array, Array]:
+    """action in {0, 1}. Returns (state, obs, reward, done)."""
+    force = jnp.where(action == 1, FORCE_MAG, -FORCE_MAG)
+    cos, sin = jnp.cos(s.theta), jnp.sin(s.theta)
+    tmp = (force + POLEMASS_LEN * s.theta_dot ** 2 * sin) / TOTAL_MASS
+    theta_acc = (GRAVITY * sin - cos * tmp) / (
+        POLE_HALF_LEN * (4.0 / 3.0 - POLE_MASS * cos ** 2 / TOTAL_MASS))
+    x_acc = tmp - POLEMASS_LEN * theta_acc * cos / TOTAL_MASS
+
+    x = s.x + DT * s.x_dot
+    x_dot = s.x_dot + DT * x_acc
+    theta = s.theta + DT * s.theta_dot
+    theta_dot = s.theta_dot + DT * theta_acc
+    t = s.t + 1
+
+    done = ((jnp.abs(x) > X_LIMIT) | (jnp.abs(theta) > THETA_LIMIT)
+            | (t >= MAX_STEPS))
+    reward = jnp.ones((), jnp.float32)          # +1 per surviving step
+
+    nxt = EnvState(x, x_dot, theta, theta_dot, t, s.key)
+    fresh = _fresh(s.key)
+    out = jax.tree.map(lambda a, b: jnp.where(done, a, b), fresh, nxt)
+    return out, _obs(out), reward, done
+
+
+def rollout_capable() -> dict:
+    """Env descriptor consumed by rl/rollout.py."""
+    return {"reset": reset, "step": step, "n_actions": N_ACTIONS,
+            "obs_shape": (OBS_DIM,)}

@@ -1,0 +1,35 @@
+"""Generalized Advantage Estimation (reverse lax.scan)."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def gae(rewards: Array, values: Array, dones: Array, last_value: Array,
+        gamma: float = 0.99, lam: float = 0.95) -> Tuple[Array, Array]:
+    """rewards/dones: [T, B]; values: [T, B]; last_value: [B].
+
+    Returns (advantages [T,B], returns [T,B]).  ``dones[t]`` marks that
+    the transition at t ended an episode: no bootstrapping across it.
+    """
+    not_done = 1.0 - dones.astype(jnp.float32)
+    next_values = jnp.concatenate([values[1:], last_value[None]], axis=0)
+
+    def back(carry, xs):
+        r, v, nv, nd = xs
+        delta = r + gamma * nv * nd - v
+        adv = delta + gamma * lam * nd * carry
+        return adv, adv
+
+    _, advs = jax.lax.scan(back, jnp.zeros_like(last_value),
+                           (rewards, values, next_values, not_done),
+                           reverse=True)
+    return advs, advs + values
+
+
+def normalize(adv: Array, eps: float = 1e-8) -> Array:
+    return (adv - adv.mean()) / (adv.std() + eps)

@@ -1,0 +1,70 @@
+"""Small actor-critic / Q networks for vector-observation envs.
+
+Every matmul is a Q-MAC (q_matmul under the QuantPolicy), every
+activation a V-ACT — the same compute fabric as the big models, so the
+Fig.-3a reward-parity experiments exercise exactly the quantized paths.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import QuantPolicy
+from repro.core.vact import activation
+from repro.nn.linear import linear_apply, linear_init
+from repro.nn.module import KeySeq
+
+Array = jax.Array
+
+
+def mlp_ac_init(key, obs_dim: int, n_actions: int, hidden: int = 64,
+                dtype=jnp.float32):
+    ks = KeySeq(key)
+    return {
+        "torso": {
+            "fc1": linear_init(ks(), obs_dim, hidden, axes=(None, None),
+                               dtype=dtype),
+            "fc2": linear_init(ks(), hidden, hidden, axes=(None, None),
+                               dtype=dtype),
+        },
+        "pi": linear_init(ks(), hidden, n_actions, axes=(None, None),
+                          dtype=dtype),
+        "v": linear_init(ks(), hidden, 1, axes=(None, None), dtype=dtype),
+    }
+
+
+def mlp_ac_apply(params, obs: Array,
+                 policy: Optional[QuantPolicy] = None
+                 ) -> Tuple[Array, Array]:
+    """obs [B, D] -> (logits [B, A], value [B])."""
+    h = activation(linear_apply(params["torso"]["fc1"], obs, policy),
+                   "tanh", policy)
+    h = activation(linear_apply(params["torso"]["fc2"], h, policy),
+                   "tanh", policy)
+    logits = linear_apply(params["pi"], h, policy)
+    value = linear_apply(params["v"], h, policy)[..., 0]
+    return logits, value
+
+
+def mlp_q_init(key, obs_dim: int, n_actions: int, hidden: int = 64,
+               dtype=jnp.float32):
+    ks = KeySeq(key)
+    return {
+        "fc1": linear_init(ks(), obs_dim, hidden, axes=(None, None),
+                           dtype=dtype),
+        "fc2": linear_init(ks(), hidden, hidden, axes=(None, None),
+                           dtype=dtype),
+        "q": linear_init(ks(), hidden, n_actions, axes=(None, None),
+                         dtype=dtype),
+    }
+
+
+def mlp_q_apply(params, obs: Array,
+                policy: Optional[QuantPolicy] = None) -> Array:
+    h = activation(linear_apply(params["fc1"], obs, policy), "relu",
+                   policy)
+    h = activation(linear_apply(params["fc2"], h, policy), "relu",
+                   policy)
+    return linear_apply(params["q"], h, policy)

@@ -1,0 +1,153 @@
+"""PPO (clipped) — the paper's training algorithm — plus A2C.
+
+Supports the paper's *two-stage* HRL schedule: stage "action" trains
+stem+action+value with the sub-goal frozen; stage "subgoal" fine-tunes
+the sub-goal module with everything else frozen (Sec. III: "Once the
+action module is trained, its weights are frozen, and the sub-goal
+module is fine-tuned independently").  Freezing = zeroing grads by
+subtree, which keeps optimizer state layout stable across stages.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.rl.gae import gae, normalize
+from repro.rl.rollout import Trajectory
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class PPOConfig:
+    gamma: float = 0.99
+    lam: float = 0.95
+    clip_eps: float = 0.2
+    vf_coef: float = 0.5
+    ent_coef: float = 0.01
+    epochs: int = 4
+    minibatches: int = 4
+    normalize_adv: bool = True
+
+
+def ppo_loss(params, apply_fn: Callable, batch: dict,
+             cfg: PPOConfig) -> Tuple[Array, dict]:
+    """batch: flat dict of [N, ...] tensors (obs, actions, log_probs,
+    advantages, returns, mask)."""
+    logits, values = apply_fn(params, batch["obs"])
+    logits = logits.astype(jnp.float32)
+    logp_all = jax.nn.log_softmax(logits)
+    logp = logp_all[jnp.arange(logits.shape[0]), batch["actions"]]
+
+    mask = batch.get("mask")
+    mean = (lambda x: (x * mask).sum() / jnp.maximum(mask.sum(), 1)) \
+        if mask is not None else jnp.mean
+
+    ratio = jnp.exp(logp - batch["log_probs"])
+    adv = batch["advantages"]
+    pg = -jnp.minimum(
+        ratio * adv,
+        jnp.clip(ratio, 1 - cfg.clip_eps, 1 + cfg.clip_eps) * adv)
+    pg_loss = mean(pg)
+
+    v_loss = 0.5 * mean(jnp.square(values - batch["returns"]))
+    entropy = mean(-jnp.sum(jnp.exp(logp_all) * logp_all, axis=-1))
+
+    loss = pg_loss + cfg.vf_coef * v_loss - cfg.ent_coef * entropy
+    stats = {"pg_loss": pg_loss, "v_loss": v_loss, "entropy": entropy,
+             "approx_kl": mean(batch["log_probs"] - logp)}
+    return loss, stats
+
+
+def a2c_loss(params, apply_fn: Callable, batch: dict,
+             cfg: PPOConfig) -> Tuple[Array, dict]:
+    logits, values = apply_fn(params, batch["obs"])
+    logits = logits.astype(jnp.float32)
+    logp_all = jax.nn.log_softmax(logits)
+    logp = logp_all[jnp.arange(logits.shape[0]), batch["actions"]]
+    pg_loss = -jnp.mean(logp * batch["advantages"])
+    v_loss = 0.5 * jnp.mean(jnp.square(values - batch["returns"]))
+    entropy = jnp.mean(-jnp.sum(jnp.exp(logp_all) * logp_all, axis=-1))
+    loss = pg_loss + cfg.vf_coef * v_loss - cfg.ent_coef * entropy
+    return loss, {"pg_loss": pg_loss, "v_loss": v_loss,
+                  "entropy": entropy}
+
+
+def batch_from_traj(traj: Trajectory, last_value: Array,
+                    cfg: PPOConfig,
+                    actor_mask: Optional[Array] = None) -> dict:
+    """GAE over [T, B] then flatten to [T*B, ...].
+
+    ``actor_mask`` [B] (1 = actor delivered, 0 = straggler/dead): masked
+    actors contribute zero loss — the aggregator's timeout semantics.
+    """
+    advs, rets = gae(traj.rewards, traj.values, traj.dones, last_value,
+                     cfg.gamma, cfg.lam)
+    if cfg.normalize_adv:
+        advs = normalize(advs)
+    T, B = traj.rewards.shape
+    flat = lambda x: x.reshape((T * B,) + x.shape[2:])
+    batch = {
+        "obs": flat(traj.obs),
+        "actions": flat(traj.actions),
+        "log_probs": flat(traj.log_probs),
+        "advantages": flat(advs),
+        "returns": flat(rets),
+    }
+    if actor_mask is not None:
+        batch["mask"] = flat(
+            jnp.broadcast_to(actor_mask[None].astype(jnp.float32),
+                             (T, B)))
+    return batch
+
+
+# ---------------------------------------------------------------------------
+# two-stage freezing
+# ---------------------------------------------------------------------------
+
+def stage_mask(params, stage: str):
+    """1/0 pytree: which leaves train in this stage.
+
+    stage "action":  stem + action head + value head (sub-goal frozen)
+    stage "subgoal": sub-goal module only
+    stage "all":     everything (non-hierarchical nets)
+    """
+    if stage == "all":
+        return jax.tree.map(lambda _: 1.0, params)
+
+    def mask_subtree(tree, on):
+        return jax.tree.map(lambda _: 1.0 if on else 0.0, tree)
+
+    out = {}
+    for name, sub in params.items():
+        trainable = (name == "subgoal") == (stage == "subgoal")
+        out[name] = mask_subtree(sub, trainable)
+    return out
+
+
+def apply_stage_mask(grads, mask):
+    return jax.tree.map(lambda g, m: g * m, grads, mask)
+
+
+def minibatch_epochs(key, params, opt_state, batch, apply_fn, cfg,
+                     optimizer_step, loss_fn=ppo_loss, grad_mask=None):
+    """Standard PPO epochs x minibatches loop (python loop: trace-time
+    constants, jit the caller)."""
+    n = batch["obs"].shape[0]
+    mb = n // cfg.minibatches
+    stats = None
+    for _ in range(cfg.epochs):
+        key, sub = jax.random.split(key)
+        perm = jax.random.permutation(sub, n)
+        for i in range(cfg.minibatches):
+            idx = jax.lax.dynamic_slice_in_dim(perm, i * mb, mb)
+            mbatch = {k: v[idx] for k, v in batch.items()}
+            (_, stats), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, apply_fn, mbatch, cfg)
+            if grad_mask is not None:
+                grads = apply_stage_mask(grads, grad_mask)
+            params, opt_state = optimizer_step(params, opt_state, grads)
+    return params, opt_state, stats

@@ -1,0 +1,80 @@
+"""Vectorized experience collection (B envs x T steps, one jit).
+
+``apply_fn(params, obs) -> (logits, value)`` is the *actor policy* —
+pass quantized params + an FxP8 QuantPolicy and this is the paper's
+quantized actor; the rollout code is precision-agnostic.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+class Trajectory(NamedTuple):
+    obs: Array          # [T, B, ...]
+    actions: Array      # [T, B]
+    log_probs: Array    # [T, B]
+    values: Array       # [T, B]
+    rewards: Array      # [T, B]
+    dones: Array        # [T, B]
+
+
+class RolloutResult(NamedTuple):
+    traj: Trajectory
+    last_value: Array   # [B]
+    final_env: Any      # env state carry (resume collection)
+    final_obs: Array
+
+
+def init_envs(env: dict, key: Array, n_envs: int):
+    keys = jax.random.split(key, n_envs)
+    state, obs = jax.vmap(env["reset"])(keys)
+    return state, obs
+
+
+def rollout(params, env: dict, apply_fn: Callable, key: Array,
+            env_state, obs, n_steps: int) -> RolloutResult:
+    """Collect ``n_steps`` transitions from every env (scan over time)."""
+
+    def one(carry, step_key):
+        state, obs = carry
+        logits, value = apply_fn(params, obs)
+        logits = logits.astype(jnp.float32)
+        action = jax.random.categorical(step_key, logits)
+        logp = jax.nn.log_softmax(logits)[
+            jnp.arange(logits.shape[0]), action]
+        state, next_obs, reward, done = jax.vmap(env["step"])(state,
+                                                              action)
+        tr = Trajectory(obs, action, logp, value, reward, done)
+        return (state, next_obs), tr
+
+    keys = jax.random.split(key, n_steps)
+    (env_state, obs), traj = jax.lax.scan(one, (env_state, obs), keys)
+    last_value = apply_fn(params, obs)[1]
+    return RolloutResult(traj, last_value, env_state, obs)
+
+
+def episode_returns(traj: Trajectory) -> Tuple[Array, Array]:
+    """Mean undiscounted return and count of COMPLETED episodes."""
+    T, B = traj.rewards.shape
+
+    def per_env(rew, done):
+        def f(carry, x):
+            acc, total, n = carry
+            r, d = x
+            acc = acc + r
+            total = total + jnp.where(d, acc, 0.0)
+            n = n + d.astype(jnp.int32)
+            acc = jnp.where(d, 0.0, acc)
+            return (acc, total, n), None
+
+        (_, total, n), _ = jax.lax.scan(f, (0.0, 0.0, 0), (rew, done))
+        return total, n
+
+    totals, ns = jax.vmap(per_env, in_axes=1)(traj.rewards, traj.dones)
+    n = ns.sum()
+    return totals.sum() / jnp.maximum(n, 1), n

@@ -1,0 +1,108 @@
+"""Per-architecture smoke tests: reduced config, one forward + one
+train step + (where defined) one prefill/decode step on CPU; asserts
+output shapes and finiteness.  Full configs are dry-run-only."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import ARCHS, get_arch
+from repro.core.policy import get_policy
+from repro.launch.steps import make_train_step
+from repro.models.registry import model_for
+from repro.nn.module import count_params, unbox
+from repro.optim import adamw_init
+
+POLICY = get_policy("w8a8")
+
+B, S = 2, 32
+
+
+def batch_for(cfg):
+    key = jax.random.PRNGKey(1)
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab, dtype=jnp.int32)
+    out = {"tokens": toks, "labels": toks}
+    if cfg.is_encdec:
+        out["frames"] = jax.random.normal(key, (B, S, cfg.d_model))
+    return out
+
+
+@pytest.fixture(scope="module", params=sorted(ARCHS))
+def arch_setup(request):
+    cfg = get_arch(request.param).reduced().replace(q_chunk=16)
+    model = model_for(cfg)
+    params = unbox(model.init(jax.random.PRNGKey(0), cfg))
+    return cfg, model, params
+
+
+def test_forward_shapes_finite(arch_setup):
+    cfg, model, params = arch_setup
+    batch = batch_for(cfg)
+    if cfg.is_encdec:
+        enc = model.encode(params, batch["frames"], cfg, POLICY)
+        logits = model.decode_train(params, batch["tokens"], enc, cfg,
+                                    POLICY)
+    else:
+        logits = model.forward(params, batch["tokens"], cfg, POLICY)
+    assert logits.shape[:2] == (B, S)
+    assert logits.shape[2] >= cfg.vocab          # padded vocab allowed
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    # padded columns are masked to -inf-ish
+    if logits.shape[2] > cfg.vocab:
+        assert float(logits[..., cfg.vocab:].max()) < -1e8
+
+
+def test_train_step_reduces_loss_no_nans(arch_setup):
+    cfg, model, params = arch_setup
+    batch = batch_for(cfg)
+    opt = adamw_init(params)
+    step = jax.jit(make_train_step(cfg, None, POLICY))
+    p, o, stats = step(params, opt, batch)
+    l0 = float(stats["loss"])
+    assert np.isfinite(l0)
+    for _ in range(2):
+        p, o, stats = step(p, o, batch)
+    assert np.isfinite(float(stats["loss"]))
+    assert float(stats["loss"]) < l0 + 1.0       # not diverging
+
+
+def test_prefill_decode_consistency(arch_setup):
+    """prefill(x[:S]) then decode_step must agree with forward logits
+    (greedy argmax parity on the last position, fp tolerance)."""
+    cfg, model, params = arch_setup
+    if cfg.is_encdec:
+        pytest.skip("encdec covered by its own path below")
+    toks = batch_for(cfg)["tokens"]
+    logits_f = model.forward(params, toks, cfg, POLICY)
+    logits_p, caches = model.prefill(params, toks, cfg, POLICY)
+    np.testing.assert_allclose(np.asarray(logits_p),
+                               np.asarray(logits_f[:, -1]),
+                               rtol=2e-2, atol=2e-2)
+    # one decode step from the cache
+    nxt = jnp.argmax(logits_p, -1)[:, None].astype(jnp.int32)
+    logits_d, caches = model.decode_step(params, nxt, caches,
+                                         jnp.asarray(S, jnp.int32),
+                                         cfg, POLICY)
+    assert logits_d.shape[0] == B
+    assert bool(jnp.all(jnp.isfinite(logits_d)))
+
+
+def test_encdec_prefill_decode():
+    cfg = get_arch("whisper-large-v3").reduced().replace(q_chunk=16)
+    model = model_for(cfg)
+    params = unbox(model.init(jax.random.PRNGKey(0), cfg))
+    batch = batch_for(cfg)
+    logits_p, caches = model.prefill(params, batch, cfg, POLICY)
+    assert bool(jnp.all(jnp.isfinite(logits_p)))
+    nxt = jnp.argmax(logits_p, -1)[:, None].astype(jnp.int32)
+    logits_d, _ = model.decode_step(params, nxt, caches,
+                                    jnp.asarray(S, jnp.int32), cfg,
+                                    POLICY)
+    assert bool(jnp.all(jnp.isfinite(logits_d)))
+
+
+def test_param_scale_sanity(arch_setup):
+    """Reduced models stay tiny (same code paths, not same size)."""
+    cfg, model, params = arch_setup
+    n = count_params(params)
+    assert n < 20e6, f"{cfg.name}: reduced config too big ({n})"

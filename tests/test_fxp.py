@@ -1,0 +1,109 @@
+"""Property tests (hypothesis) + unit tests for the quantization core."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from hypothesis.extra import numpy as hnp
+
+from repro.core import (FXP8, FXP16, FP32, W8, W8A8, QTensor, QuantPolicy,
+                        dequantize, fake_quant, q_matmul, quantize,
+                        quantize_eq1)
+from repro.core.fxp import absmax_scale, fxp_qmax
+
+finite_f32 = st.floats(min_value=-1e4, max_value=1e4, width=32,
+                       allow_nan=False, allow_infinity=False)
+
+
+def arrays(shape):
+    return hnp.arrays(np.float32, shape, elements=finite_f32)
+
+
+@settings(max_examples=50, deadline=None)
+@given(arrays((17, 9)), st.sampled_from([8, 16]))
+def test_quant_dequant_error_bound(x, bits):
+    """|x - deq(quant(x))| <= scale/2 elementwise (uniform grid)."""
+    x = jnp.asarray(x)
+    q, s = quantize(x, bits)
+    err = jnp.abs(dequantize(q, s) - x)
+    assert bool(jnp.all(err <= jnp.squeeze(s) * 0.5 + 1e-6))
+
+
+@settings(max_examples=50, deadline=None)
+@given(arrays((8, 16)), st.sampled_from([8, 16]))
+def test_fake_quant_idempotent(x, bits):
+    """fake_quant is a projection: applying twice == applying once."""
+    x = jnp.asarray(x)
+    once = fake_quant(x, bits)
+    twice = fake_quant(once, bits)
+    np.testing.assert_allclose(np.asarray(once), np.asarray(twice),
+                               rtol=1e-6, atol=1e-7)
+
+
+@settings(max_examples=30, deadline=None)
+@given(arrays((4, 8)))
+def test_ste_gradient_is_identity(x):
+    x = jnp.asarray(x)
+    g = jax.grad(lambda v: fake_quant(v, 8).sum())(x)
+    np.testing.assert_allclose(np.asarray(g), 1.0)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 30), st.integers(1, 30))
+def test_qmatmul_backends_agree(m, n):
+    """ref and xla backends produce the same quantized product."""
+    x = jax.random.normal(jax.random.PRNGKey(m), (m, 16))
+    w = jax.random.normal(jax.random.PRNGKey(n + 100), (16, n)) * 0.1
+    a = q_matmul(x, w, W8A8.with_backend("ref"))
+    b = q_matmul(x, w, W8A8.with_backend("xla"))
+    # identical grids; differences only from fp accumulation order
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=5e-3, atol=5e-4)
+
+
+def test_quantize_eq1_matches_paper_form():
+    """Eq (1): grid step = (|min(W,0)|+|max(W,0)|) / 2^n."""
+    w = jnp.array([[-2.0, 1.0], [0.5, -0.25]])
+    q, s = quantize_eq1(w, n=8)
+    assert abs(float(s) - 3.0 / 256.0) < 1e-9
+    np.testing.assert_allclose(np.asarray(q * s), np.asarray(w),
+                               atol=float(s) / 2 + 1e-9)
+
+
+def test_per_channel_beats_per_tensor():
+    """Per-channel scales must not increase worst-case error."""
+    key = jax.random.PRNGKey(0)
+    w = jax.random.normal(key, (64, 32)) * jnp.logspace(-2, 0, 32)
+    q_pc, s_pc = quantize(w, 8, channel_axis=1)
+    q_pt, s_pt = quantize(w, 8, channel_axis=None)
+    err_pc = float(jnp.abs(dequantize(q_pc, s_pc) - w).max())
+    err_pt = float(jnp.abs(dequantize(q_pt, s_pt) - w).max())
+    assert err_pc <= err_pt + 1e-7
+
+
+def test_qtensor_roundtrip_and_bytes():
+    w = jax.random.normal(jax.random.PRNGKey(1), (128, 64))
+    qt = QTensor.quant(w, 8, channel_axis=1)
+    assert qt.qvalue.dtype == jnp.int8
+    rel = float(jnp.abs(qt.deq() - w).max() / jnp.abs(w).max())
+    assert rel < 0.02
+    # pytree round trip (jit boundary)
+    out = jax.jit(lambda t: t.deq())(qt)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(qt.deq()))
+
+
+def test_fp32_policy_is_exact():
+    x = jax.random.normal(jax.random.PRNGKey(0), (8, 8))
+    w = jax.random.normal(jax.random.PRNGKey(1), (8, 8))
+    np.testing.assert_allclose(np.asarray(q_matmul(x, w, FP32)),
+                               np.asarray(x @ w), rtol=1e-6)
+
+
+def test_grad_flows_through_all_policies():
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 16))
+    w = jax.random.normal(jax.random.PRNGKey(1), (16, 8)) * 0.1
+    for pol in [FP32, FXP8, FXP16, W8, W8A8]:
+        gx, gw = jax.grad(
+            lambda x, w: q_matmul(x, w, pol).sum(), argnums=(0, 1))(x, w)
+        assert bool(jnp.isfinite(gx).all() and jnp.isfinite(gw).all()), pol
+        assert float(jnp.abs(gw).max()) > 0

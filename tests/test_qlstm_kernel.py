@@ -1,0 +1,60 @@
+"""Fused Q-LSTM cell kernel vs oracle + vs fp32 LSTM reference."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.qlstm import ops, ref
+
+SIZES = [(8, 32, 32), (16, 64, 32), (5, 24, 48), (1, 32, 32)]
+
+
+def _setup(b, din, h, key=0):
+    ks = jax.random.split(jax.random.PRNGKey(key), 8)
+    qx = jax.random.randint(ks[0], (b, din), -128, 128, dtype=jnp.int8)
+    qh = jax.random.randint(ks[1], (b, h), -128, 128, dtype=jnp.int8)
+    qw = jax.random.randint(ks[2], (din, 4 * h), -128, 128, dtype=jnp.int8)
+    qu = jax.random.randint(ks[3], (h, 4 * h), -128, 128, dtype=jnp.int8)
+    sx, sh = 0.02, 0.015
+    sw = jax.random.uniform(ks[4], (1, 4 * h), minval=1e-3, maxval=5e-3)
+    su = jax.random.uniform(ks[5], (1, 4 * h), minval=1e-3, maxval=5e-3)
+    bias = jax.random.normal(ks[6], (4 * h,)) * 0.1
+    c = jax.random.normal(ks[7], (b, h)) * 0.5
+    return qx, sx, qh, sh, qw, sw, qu, su, bias, c
+
+
+@pytest.mark.parametrize("b,din,h", SIZES)
+def test_qlstm_kernel_vs_oracle(b, din, h):
+    args = _setup(b, din, h)
+    h_k, c_k = ops.qlstm_cell(*args, n_iters=13)
+    h_r, c_r = ref.qlstm_cell(*[jnp.asarray(a) for a in args], n_iters=13)
+    np.testing.assert_allclose(np.asarray(c_k), np.asarray(c_r),
+                               atol=1e-5, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(h_k), np.asarray(h_r),
+                               atol=1e-5, rtol=1e-4)
+
+
+def test_qlstm_tracks_fp32_lstm():
+    """Quantized fused cell ~= fp32 LSTM math within quantization error."""
+    b, din, h = 8, 32, 32
+    qx, sx, qh, sh, qw, sw, qu, su, bias, c = _setup(b, din, h, key=3)
+    x = qx.astype(jnp.float32) * sx
+    hh = qh.astype(jnp.float32) * sh
+    w = qw.astype(jnp.float32) * sw
+    u = qu.astype(jnp.float32) * su
+    gates = x @ w + hh @ u + bias
+    i, f, g, o = jnp.split(jax.nn.sigmoid(gates), 4, axis=1)
+    g = jnp.tanh(gates[:, 2 * h:3 * h])
+    c_fp = f[:, :h] * 0 + jax.nn.sigmoid(gates[:, h:2 * h]) * c \
+        + jax.nn.sigmoid(gates[:, :h]) * g
+    h_fp = jnp.tanh(c_fp) * jax.nn.sigmoid(gates[:, 3 * h:])
+    h_k, c_k = ops.qlstm_cell(qx, sx, qh, sh, qw, sw, qu, su, bias, c,
+                              n_iters=13)
+    assert float(jnp.abs(c_k - c_fp).max()) < 5e-3
+    assert float(jnp.abs(h_k - h_fp).max()) < 5e-3
+
+
+def test_qlstm_vmem_guard():
+    with pytest.raises(ValueError):
+        args = _setup(8, 2048, 2048)
+        ops.qlstm_cell(*args, n_iters=6)

@@ -1,0 +1,78 @@
+"""Q-MAC Pallas kernel vs pure-jnp oracle: shape sweeps, exactness."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.qmac import ops, ref
+
+SHAPES = [
+    (128, 128, 128),
+    (256, 512, 384),
+    (8, 8, 8),
+    (64, 100, 72),      # non-multiple K/N
+    (33, 17, 9),        # tiny odd shapes (padding path)
+    (1, 256, 256),      # single row (decode-like)
+    (512, 32, 1024),
+]
+
+
+def _rand_i8(key, shape):
+    return jax.random.randint(key, shape, -128, 128, dtype=jnp.int8)
+
+
+@pytest.mark.parametrize("m,k,n", SHAPES)
+def test_qmac_i8_exact(m, k, n):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(m * 7 + n))
+    qx, qw = _rand_i8(k1, (m, k)), _rand_i8(k2, (k, n))
+    out = ops.qmac_i8(qx, qw)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(ref.qmac_i8(qx, qw)))
+    assert out.dtype == jnp.int32
+
+
+@pytest.mark.parametrize("m,k,n", SHAPES)
+def test_qmac_i8_deq(m, k, n):
+    key = jax.random.PRNGKey(m + k + n)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    qx, qw = _rand_i8(k1, (m, k)), _rand_i8(k2, (k, n))
+    sx = jax.random.uniform(k3, (m, 1), minval=1e-3, maxval=0.1)
+    sw = jax.random.uniform(k4, (1, n), minval=1e-3, maxval=0.1)
+    out = ops.qmac_i8_deq(qx, sx, qw, sw)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(ref.qmac_i8_deq(qx, sx, qw, sw)),
+                               rtol=1e-6)
+    assert out.dtype == jnp.float32
+
+
+@pytest.mark.parametrize("bm,bn,bk", [(8, 8, 8), (32, 64, 16),
+                                      (128, 128, 128)])
+def test_qmac_block_shape_invariance(bm, bn, bk):
+    """Result must not depend on the chosen BlockSpec tiling."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(3))
+    qx, qw = _rand_i8(k1, (128, 128)), _rand_i8(k2, (128, 128))
+    out = ops.qmac_i8(qx, qw, bm=bm, bn=bn, bk=bk)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(ref.qmac_i8(qx, qw)))
+
+
+def test_qmac_extreme_values_no_overflow():
+    """Worst case |acc| = K * 127 * 128 must fit int32 (K <= 131072)."""
+    qx = jnp.full((8, 2048), 127, jnp.int8)
+    qw = jnp.full((2048, 8), -128, jnp.int8)
+    out = ops.qmac_i8(qx, qw)
+    assert int(out[0, 0]) == 2048 * 127 * (-128)
+
+
+def test_qmac_matches_fp_product_within_quant_error():
+    """End-to-end: quantize fp operands, Q-MAC, dequant ~= fp matmul."""
+    from repro.core.qmatmul import quantize_rowwise
+    from repro.core.fxp import quantize
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (64, 256))
+    w = jax.random.normal(jax.random.PRNGKey(1), (256, 128)) * 0.05
+    qx, sx = quantize_rowwise(x, 8)
+    qw, sw = quantize(w, 8, channel_axis=1)
+    out = ops.qmac_i8_deq(qx, sx, qw, sw.reshape(1, -1))
+    rel = float(jnp.abs(out - x @ w).max() / jnp.abs(x @ w).max())
+    assert rel < 0.02, rel

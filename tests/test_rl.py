@@ -1,0 +1,298 @@
+"""RL subsystem tests: envs, GAE, PPO, DQN, actor-learner sync."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.policy import FXP8, QuantPolicy
+from repro.nn.module import unbox
+from repro.rl import PPOConfig, batch_from_traj, gae, init_envs, rollout
+from repro.rl.actor_learner import (merge_results, pack_weights,
+                                    sync_bytes, unpack_weights)
+from repro.rl.dqn import (DQNConfig, dqn_loss, egreedy, epsilon,
+                          replay_add, replay_init, replay_sample)
+from repro.rl.envs import get_env
+from repro.rl.nets import (mlp_ac_apply, mlp_ac_init, mlp_q_apply,
+                           mlp_q_init)
+from repro.rl.ppo import a2c_loss, apply_stage_mask, ppo_loss, stage_mask
+from repro.rl.rollout import episode_returns
+
+
+# -- envs --------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["cartpole", "keydoor"])
+def test_env_shapes_and_determinism(name):
+    env = get_env(name)
+    s, obs = env["reset"](jax.random.PRNGKey(0))
+    assert obs.shape == env["obs_shape"]
+    s2, obs2, r, d = jax.jit(env["step"])(s, jnp.asarray(0))
+    assert obs2.shape == env["obs_shape"]
+    assert r.shape == () and d.shape == ()
+    # same key -> same trajectory
+    sb, obsb = env["reset"](jax.random.PRNGKey(0))
+    s2b, obs2b, rb, _ = jax.jit(env["step"])(sb, jnp.asarray(0))
+    np.testing.assert_allclose(np.asarray(obs2), np.asarray(obs2b),
+                               rtol=1e-6)
+
+
+def test_cartpole_terminates_on_angle():
+    env = get_env("cartpole")
+    s, _ = env["reset"](jax.random.PRNGKey(0))
+    done = False
+    for _ in range(500):          # always push right -> falls over
+        s, _, _, d = jax.jit(env["step"])(s, jnp.asarray(1))
+        done = done or bool(d)
+        if done:
+            break
+    assert done
+
+
+def test_keydoor_subgoal_then_goal():
+    """Walking to key then door yields both bonuses and terminates."""
+    from repro.rl.envs import keydoor
+    s, _ = keydoor.reset(jax.random.PRNGKey(3))
+    step = jax.jit(keydoor.step)
+
+    def walk_to(s, target):
+        total = 0.0
+        for _ in range(2 * keydoor.GRID):
+            dr = target[0] - s.agent[0]
+            dc = target[1] - s.agent[1]
+            if dr < 0:
+                a = 0
+            elif dr > 0:
+                a = 1
+            elif dc < 0:
+                a = 2
+            elif dc > 0:
+                a = 3
+            else:
+                break
+            s, _, r, d = step(s, jnp.asarray(a))
+            total += float(r)
+            if bool(d):
+                break
+        return s, total
+
+    key_pos = np.asarray(s.key_pos)
+    s, r1 = walk_to(s, key_pos)
+    assert bool(s.has_key)
+    assert r1 > 0.3                       # +0.5 pickup minus step costs
+    door = np.asarray(s.door)
+    s2, r2 = walk_to(s, door)
+    assert r2 > 0.8                       # +1.0 open minus step costs
+
+
+def test_vectorized_rollout_and_returns():
+    env = get_env("cartpole")
+    params = unbox(mlp_ac_init(jax.random.PRNGKey(0), 4, 2))
+    fn = lambda p, o: mlp_ac_apply(p, o)
+    est, obs = init_envs(env, jax.random.PRNGKey(1), 8)
+    res = jax.jit(lambda p, e, o: rollout(
+        p, env, fn, jax.random.PRNGKey(2), e, o, 64))(params, est, obs)
+    assert res.traj.rewards.shape == (64, 8)
+    ret, n = episode_returns(res.traj)
+    assert int(n) > 0 and float(ret) > 5.0     # random policy survives >5
+
+
+# -- GAE ----------------------------------------------------------------
+
+def test_gae_matches_manual_single_env():
+    r = jnp.array([[1.0], [1.0], [1.0]])
+    v = jnp.array([[0.5], [0.5], [0.5]])
+    d = jnp.zeros((3, 1), bool)
+    lastv = jnp.array([0.5])
+    adv, ret = gae(r, v, d, lastv, gamma=0.9, lam=1.0)
+    # lam=1: adv_t = sum_k gamma^k r_{t+k} + gamma^{T-t} v_T - v_t
+    expect0 = 1 + 0.9 + 0.81 + 0.729 * 0.5 - 0.5
+    assert float(adv[0, 0]) == pytest.approx(expect0, rel=1e-5)
+    np.testing.assert_allclose(np.asarray(ret), np.asarray(adv + v))
+
+
+def test_gae_stops_at_done():
+    r = jnp.ones((2, 1))
+    v = jnp.zeros((2, 1))
+    d = jnp.array([[True], [False]])
+    adv, _ = gae(r, v, d, jnp.array([10.0]), gamma=0.9, lam=0.95)
+    assert float(adv[0, 0]) == pytest.approx(1.0)  # no bootstrap past done
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10**6))
+def test_gae_zero_when_values_consistent(seed):
+    """If v exactly equals discounted return, advantages are ~0."""
+    key = jax.random.PRNGKey(seed)
+    r = jax.random.uniform(key, (5, 2))
+    lastv = jnp.zeros((2,))
+    d = jnp.zeros((5, 2), bool)
+    # v_t = r_t + g*v_{t+1}
+    g = 0.9
+    vs = []
+    nxt = lastv
+    for t in range(4, -1, -1):
+        nxt = r[t] + g * nxt
+        vs.append(nxt)
+    v = jnp.stack(vs[::-1])
+    # v here includes r_t; GAE defines delta = r + g*v' - v, so feed
+    # v_t as value BEFORE reward: shift
+    adv, _ = gae(r, v, d, lastv, gamma=g, lam=0.95)
+    # delta_t = r_t + g v_{t+1} - v_t = 0 by construction
+    np.testing.assert_allclose(np.asarray(adv), 0.0, atol=1e-4)
+
+
+# -- PPO / A2C ----------------------------------------------------------
+
+def _tiny_batch(n=16):
+    key = jax.random.PRNGKey(0)
+    return {
+        "obs": jax.random.normal(key, (n, 4)),
+        "actions": jnp.zeros((n,), jnp.int32),
+        "log_probs": jnp.full((n,), -0.69),
+        "advantages": jnp.ones((n,)),
+        "returns": jnp.ones((n,)),
+    }
+
+
+def test_ppo_loss_finite_and_grads_flow():
+    params = unbox(mlp_ac_init(jax.random.PRNGKey(0), 4, 2))
+    fn = lambda p, o: mlp_ac_apply(p, o)
+    (loss, stats), grads = jax.value_and_grad(ppo_loss, has_aux=True)(
+        params, fn, _tiny_batch(), PPOConfig())
+    assert np.isfinite(float(loss))
+    assert all(np.all(np.isfinite(np.asarray(g)))
+               for g in jax.tree.leaves(grads))
+    gnorm = sum(float(jnp.sum(jnp.abs(g)))
+                for g in jax.tree.leaves(grads))
+    assert gnorm > 0
+
+
+def test_ppo_clipping_caps_ratio_gradient():
+    """With a huge positive advantage and ratio far above 1+eps, the
+    pg gradient wrt logits must vanish (clip active)."""
+    cfg = PPOConfig(ent_coef=0.0, vf_coef=0.0)
+    params = unbox(mlp_ac_init(jax.random.PRNGKey(0), 4, 2))
+    fn = lambda p, o: mlp_ac_apply(p, o)
+    b = _tiny_batch(4)
+    b["log_probs"] = jnp.full((4,), -20.0)   # ratio = e^(logp+20) >> 1.2
+    b["advantages"] = jnp.ones((4,)) * 5.0
+    grads = jax.grad(lambda p: ppo_loss(p, fn, b, cfg)[0])(params)
+    gnorm = sum(float(jnp.sum(jnp.abs(g)))
+                for g in jax.tree.leaves(grads))
+    assert gnorm < 1e-5
+
+
+def test_a2c_loss_finite():
+    params = unbox(mlp_ac_init(jax.random.PRNGKey(0), 4, 2))
+    fn = lambda p, o: mlp_ac_apply(p, o)
+    loss, _ = a2c_loss(params, fn, _tiny_batch(), PPOConfig())
+    assert np.isfinite(float(loss))
+
+
+def test_stage_mask_freezes_subgoal():
+    params = {"stem": {"w": jnp.ones(3)}, "subgoal": {"w": jnp.ones(3)},
+              "action": {"w": jnp.ones(3)}, "value": {"w": jnp.ones(3)}}
+    grads = jax.tree.map(jnp.ones_like, params)
+    m1 = stage_mask(params, "action")
+    g1 = apply_stage_mask(grads, m1)
+    assert float(jnp.sum(g1["subgoal"]["w"])) == 0
+    assert float(jnp.sum(g1["stem"]["w"])) == 3
+    m2 = stage_mask(params, "subgoal")
+    g2 = apply_stage_mask(grads, m2)
+    assert float(jnp.sum(g2["subgoal"]["w"])) == 3
+    assert float(jnp.sum(g2["action"]["w"])) == 0
+
+
+def test_masked_batch_zeroes_straggler_loss():
+    """A batch whose mask is all-zero produces zero pg/v loss."""
+    from repro.rl.rollout import Trajectory
+    T, B = 8, 4
+    traj = Trajectory(
+        obs=jnp.zeros((T, B, 4)), actions=jnp.zeros((T, B), jnp.int32),
+        log_probs=jnp.zeros((T, B)), values=jnp.zeros((T, B)),
+        rewards=jnp.ones((T, B)), dones=jnp.zeros((T, B), bool))
+    batch = batch_from_traj(traj, jnp.zeros((B,)), PPOConfig(),
+                            actor_mask=jnp.zeros((B,)))
+    params = unbox(mlp_ac_init(jax.random.PRNGKey(0), 4, 2))
+    fn = lambda p, o: mlp_ac_apply(p, o)
+    cfg = PPOConfig(ent_coef=0.0)
+    loss, stats = ppo_loss(params, fn, batch, cfg)
+    assert float(stats["pg_loss"]) == 0.0
+    assert float(stats["v_loss"]) == 0.0
+
+
+# -- DQN ----------------------------------------------------------------
+
+def test_replay_circular_and_sample():
+    buf = replay_init(8, (4,))
+    obs = jnp.arange(24.0).reshape(6, 4)
+    buf = replay_add(buf, obs, jnp.zeros(6, jnp.int32), jnp.ones(6),
+                     obs, jnp.zeros(6, bool))
+    assert int(buf.size) == 6 and int(buf.ptr) == 6
+    buf = replay_add(buf, obs, jnp.zeros(6, jnp.int32), jnp.ones(6),
+                     obs, jnp.zeros(6, bool))
+    assert int(buf.size) == 8 and int(buf.ptr) == 4   # wrapped
+    s = replay_sample(buf, jax.random.PRNGKey(0), 16)
+    assert s["obs"].shape == (16, 4)
+
+
+def test_dqn_loss_and_epsilon_schedule():
+    params = unbox(mlp_q_init(jax.random.PRNGKey(0), 4, 2))
+    fn = lambda p, o: mlp_q_apply(p, o)
+    batch = {"obs": jnp.zeros((8, 4)), "actions": jnp.zeros((8,), jnp.int32),
+             "rewards": jnp.ones((8,)), "next_obs": jnp.zeros((8, 4)),
+             "dones": jnp.zeros((8,), bool)}
+    cfg = DQNConfig()
+    loss = dqn_loss(params, params, fn, batch, cfg)
+    assert np.isfinite(float(loss))
+    assert float(epsilon(jnp.asarray(0), cfg)) == pytest.approx(1.0)
+    assert float(epsilon(jnp.asarray(10**6), cfg)) == pytest.approx(0.05)
+    acts = egreedy(jax.random.PRNGKey(0),
+                   jnp.array([[0.0, 9.9]] * 100), jnp.asarray(0.0))
+    assert int(acts.sum()) == 100          # greedy when eps=0
+
+
+# -- actor-learner sync --------------------------------------------------
+
+def test_sync_bytes_4x_reduction():
+    params = unbox(mlp_ac_init(jax.random.PRNGKey(0), 4, 2, hidden=128))
+    packed = pack_weights(params, 8)
+    payload, fp32 = sync_bytes(packed)
+    assert payload < 0.35 * fp32          # int8 + scales < 35% of fp32
+
+
+def test_pack_unpack_roundtrip_error_bounded():
+    params = unbox(mlp_ac_init(jax.random.PRNGKey(0), 4, 2))
+    rec = unpack_weights(pack_weights(params, 8))
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(rec)):
+        scale = float(jnp.max(jnp.abs(a))) / 127.0
+        assert float(jnp.max(jnp.abs(a - b))) <= scale * 0.51 + 1e-8
+
+
+def test_quantized_actor_rollout_runs():
+    """Rollout under the FXP8 actor policy with int8-packed weights."""
+    from repro.rl.actor_learner import collect
+    env = get_env("cartpole")
+    params = unbox(mlp_ac_init(jax.random.PRNGKey(0), 4, 2))
+    packed = pack_weights(params, 8)
+    est, obs = init_envs(env, jax.random.PRNGKey(1), 4)
+    res = collect(packed, env, mlp_ac_apply, FXP8,
+                  jax.random.PRNGKey(2), est, obs, 16)
+    assert res.traj.rewards.shape == (16, 4)
+    assert np.all(np.isfinite(np.asarray(res.traj.log_probs)))
+
+
+def test_merge_results_masks_stragglers():
+    from repro.rl.actor_learner import collect
+    env = get_env("cartpole")
+    params = unbox(mlp_ac_init(jax.random.PRNGKey(0), 4, 2))
+    packed = pack_weights(params, 8)
+    results = []
+    for i in range(3):
+        est, obs = init_envs(env, jax.random.PRNGKey(i), 4)
+        results.append(collect(packed, env, mlp_ac_apply, FXP8,
+                               jax.random.PRNGKey(10 + i), est, obs, 8))
+    merged, mask = merge_results(results, jnp.array([True, False, True]))
+    assert merged.traj.rewards.shape == (8, 12)
+    np.testing.assert_array_equal(
+        np.asarray(mask), np.repeat([1.0, 0.0, 1.0], 4))

@@ -1,0 +1,69 @@
+"""V-ACT Pallas kernel vs oracles: kinds x iterations x shapes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.policy import cordic_iterations, FXP8, FXP16, FXP32
+from repro.kernels.vact import ops, ref
+
+KINDS = ["relu", "sigmoid", "tanh"]
+SHAPES = [(8, 128), (256, 128), (100, 100), (3, 7), (1, 513)]
+ITERS = [6, 7, 13]
+
+# CORDIC truncation error ~ 2^-n plus fp32 noise
+TOL = {6: 3e-2, 7: 1.5e-2, 13: 5e-4}
+
+
+@pytest.mark.parametrize("kind", KINDS)
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("n_iters", ITERS)
+def test_vact_kernel_vs_cordic_oracle(kind, shape, n_iters):
+    x = jax.random.normal(jax.random.PRNGKey(hash((kind, shape)) % 2**31),
+                          shape) * 4.0
+    out = ops.vact(x, kind, n_iters)
+    expect = ref.vact(x, kind, n_iters)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               atol=1e-6, rtol=1e-5)
+
+
+@pytest.mark.parametrize("kind", ["sigmoid", "tanh"])
+@pytest.mark.parametrize("n_iters", ITERS)
+def test_vact_kernel_vs_native(kind, n_iters):
+    """CORDIC approximation error against jax.nn, bounded by schedule."""
+    x = jnp.linspace(-8, 8, 2048).reshape(16, 128)
+    out = ops.vact(x, kind, n_iters)
+    native = jnp.tanh(x) if kind == "tanh" else jax.nn.sigmoid(x)
+    err = float(jnp.abs(out - native).max())
+    assert err < TOL[n_iters], (kind, n_iters, err)
+
+
+@pytest.mark.parametrize("shape", [(8, 128), (64, 50), (2, 1000)])
+def test_vact_softmax_kernel(shape):
+    x = jax.random.normal(jax.random.PRNGKey(0), shape) * 5.0
+    out = ops.vact(x, "softmax", 13)
+    np.testing.assert_allclose(np.asarray(out.sum(-1)), 1.0, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(jax.nn.softmax(x, axis=-1)),
+                               atol=1e-3)
+
+
+@pytest.mark.parametrize("kind", ["sigmoid", "tanh", "relu"])
+def test_vact_q8_fused(kind):
+    """int8-in/int8-out fused path: one LSB (1/127) accuracy."""
+    qx = jax.random.randint(jax.random.PRNGKey(1), (32, 128), -128, 128,
+                            dtype=jnp.int8)
+    sx = 0.05
+    out = ops.vact_q8(qx, sx, kind, 13)
+    expect = ref.vact_q8(qx, jnp.float32(sx), kind, 13)
+    assert out.dtype == jnp.int8
+    # relu of an exact grid is exact; cordic kinds within 1 LSB
+    diff = np.abs(np.asarray(out, np.int32) - np.asarray(expect, np.int32))
+    assert diff.max() <= 1
+
+
+def test_iteration_schedule_matches_paper_formula():
+    """(3n/8 + 1) iterations per precision, floored at 6."""
+    assert cordic_iterations(FXP32) == 13      # 3*32/8+1
+    assert cordic_iterations(FXP16) == 7       # 3*16/8+1
+    assert cordic_iterations(FXP8) == 6        # 3*8/8+1=4 -> floor 6
