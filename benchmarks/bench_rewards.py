@@ -21,20 +21,20 @@ from repro.rl import PPOConfig, batch_from_traj, init_envs, rollout
 from repro.rl.actor_learner import pack_weights, unpack_weights
 from repro.rl.dqn import (DQNConfig, dqn_loss, egreedy, epsilon,
                           replay_add, replay_init, replay_sample)
-from repro.rl.envs import get_env
+from repro.rl.envs import make
 from repro.rl.nets import (mlp_ac_apply, mlp_ac_init, mlp_q_apply,
                            mlp_q_init)
 from repro.rl.ppo import a2c_loss, minibatch_epochs, ppo_loss
 from repro.rl.rollout import episode_returns
 
-ENV = get_env("cartpole")
+ENV = make("cartpole")
 N_ENVS, T = 32, 128
 
 
 def train_pg(algo: str, actor_policy, iters: int, seed: int = 0):
     """PPO/A2C with (optionally quantized) rollout actors."""
     key = jax.random.PRNGKey(seed)
-    params = unbox(mlp_ac_init(key, 4, ENV["n_actions"]))
+    params = unbox(mlp_ac_init(key, 4, ENV.spec.n_actions))
     opt = adamw_init(params)
     ocfg = AdamWConfig(weight_decay=0.0, max_grad_norm=0.5)
     pcfg = PPOConfig(epochs=4 if algo == "ppo" else 1,
@@ -74,7 +74,7 @@ def train_pg(algo: str, actor_policy, iters: int, seed: int = 0):
 
 def train_dqn(actor_policy, iters: int, seed: int = 0):
     key = jax.random.PRNGKey(seed)
-    params = unbox(mlp_q_init(key, 4, ENV["n_actions"]))
+    params = unbox(mlp_q_init(key, 4, ENV.spec.n_actions))
     target = params
     opt = adamw_init(params)
     ocfg = AdamWConfig(weight_decay=0.0)
@@ -91,7 +91,7 @@ def train_dqn(actor_policy, iters: int, seed: int = 0):
                                          8 if actor_policy else 32))
         q = mlp_q_apply(ap, obs, actor_policy)
         a = egreedy(k1, q, epsilon(i, cfg))
-        est2, obs2, r, d = jax.vmap(ENV["step"])(est, a)
+        est2, obs2, r, d = jax.vmap(ENV.step)(est, a)
         buf = replay_add(buf, obs, a, r, obs2, d)
         batch = replay_sample(buf, k2, cfg.batch_size)
         g = jax.grad(dqn_loss)(params, target,

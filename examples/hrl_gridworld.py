@@ -18,7 +18,7 @@ from repro.models import hrl
 from repro.nn.module import count_params, unbox
 from repro.optim import AdamWConfig, adamw_init, adamw_update, constant
 from repro.rl import PPOConfig, batch_from_traj, init_envs, rollout
-from repro.rl.envs import get_env
+from repro.rl.envs import make
 from repro.rl.ppo import minibatch_epochs, stage_mask
 from repro.rl.rollout import episode_returns
 
@@ -30,8 +30,8 @@ def main():
     ap.add_argument("--n-envs", type=int, default=16)
     args = ap.parse_args()
 
-    env = get_env("keydoor")
-    cfg = HRLConfig(n_actions=env["n_actions"])
+    env = make("keydoor")
+    cfg = HRLConfig(n_actions=env.spec.n_actions)
     policy = get_policy(args.policy)
     params = unbox(hrl.init(jax.random.PRNGKey(0), cfg))
     print(f"E2HRL agent ({cfg.subgoal_kind}-HRL): "

@@ -6,24 +6,33 @@ an int8-compressed channel — and prints the reward curves side by
 side.  The expected outcome is parity (the paper's core claim), with
 a ~4x smaller learner->actor payload.
 
-    PYTHONPATH=src python examples/rl_cartpole_qactor.py [--iters 40]
+Works for any registered vector-obs env — including the continuous
+``pendulum`` (tanh-Gaussian PPO head) — via ``--env``:
+
+    PYTHONPATH=src python examples/rl_cartpole_qactor.py [--iters 40] \
+        [--env cartpole|acrobot|mountain_car|pendulum]
 """
 import argparse
 
 from repro.launch.rl_train import rl_train
+from repro.rl.envs import make, registered
+
+# this example drives the MLP agent, so offer only vector-obs envs
+VECTOR_ENVS = [n for n in registered() if len(make(n).obs_shape) == 1]
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--iters", type=int, default=40)
+    ap.add_argument("--env", default="cartpole", choices=VECTOR_ENVS)
     args = ap.parse_args()
 
     print("=== FP32 actors ===")
-    _, hist_fp32 = rl_train("cartpole", "mlp", iters=args.iters,
+    _, hist_fp32 = rl_train(args.env, "mlp", iters=args.iters,
                             actor_policy=None, comm_bits=32,
                             log_every=10)
     print("\n=== FxP8 actors (int8 sync) ===")
-    _, hist_q8 = rl_train("cartpole", "mlp", iters=args.iters,
+    _, hist_q8 = rl_train(args.env, "mlp", iters=args.iters,
                           actor_policy="fxp8", comm_bits=8,
                           log_every=10)
 

@@ -28,19 +28,32 @@ from repro.rl import PPOConfig, batch_from_traj, init_envs, rollout
 from repro.rl.actor_learner import (ActorLearnerConfig, VersionBuffer,
                                     pack_weights, sync_bytes,
                                     unpack_weights)
-from repro.rl.envs import get_env
+from repro.rl.dists import distribution_for
+from repro.rl.envs import Environment, make, registered
+from repro.rl.envs.spaces import head_dim
 from repro.rl.nets import mlp_ac_apply, mlp_ac_init
 from repro.rl.ppo import minibatch_epochs, stage_mask
 from repro.rl.rollout import episode_returns
 
 
-def make_agent(agent: str, env: dict, key, policy_name: Optional[str]):
+def make_agent(agent: str, env: Environment, key,
+               policy_name: Optional[str]):
+    spec = env.spec
     if agent == "mlp":
-        params = unbox(mlp_ac_init(key, env["obs_shape"][0],
-                                   env["n_actions"]))
+        if len(spec.obs_shape) != 1:
+            raise ValueError(
+                f"{spec.name} has obs shape {spec.obs_shape}; wrap with "
+                "envs.wrappers.flatten_observation for the mlp agent "
+                "or use --agent hrl")
+        params = unbox(mlp_ac_init(key, spec.obs_shape[0],
+                                   head_dim(spec.action_space)))
         apply_fn = mlp_ac_apply
         return params, apply_fn
-    cfg = HRLConfig(n_actions=env["n_actions"])
+    if len(spec.obs_shape) != 3:
+        raise ValueError(
+            f"{spec.name} has obs shape {spec.obs_shape}; the hrl agent "
+            "needs image (H, W, C) observations — use --agent mlp")
+    cfg = HRLConfig(obs_shape=spec.obs_shape, n_actions=spec.n_actions)
     params = unbox(hrl.init(key, cfg))
 
     def apply_fn(p, obs, policy=None):
@@ -56,7 +69,8 @@ def rl_train(env_name: str = "cartpole", agent: str = "mlp",
              comm_bits: int = 8, max_lag: int = 1, seed: int = 0,
              two_stage: bool = False, ckpt_dir: Optional[str] = None,
              log_every: int = 5, verbose: bool = True):
-    env = get_env(env_name)
+    env = make(env_name)
+    dist = distribution_for(env.action_space)
     key = jax.random.PRNGKey(seed)
     params, apply_fn = make_agent(agent, env, key, actor_policy)
     a_policy = get_policy(actor_policy) if actor_policy else None
@@ -87,7 +101,7 @@ def rl_train(env_name: str = "cartpole", agent: str = "mlp",
         actor_params = unpack_weights(packed)
         actor_apply = lambda p, o: apply_fn(p, o, a_policy)
         res = rollout(actor_params, env, actor_apply, k1, est, obs,
-                      rollout_len)
+                      rollout_len, dist)
         batch = batch_from_traj(res.traj, res.last_value, pcfg)
 
         def opt_step(p, s, g):
@@ -97,7 +111,7 @@ def rl_train(env_name: str = "cartpole", agent: str = "mlp",
         gmask = None
         params, opt, stats = minibatch_epochs(
             k2, params, opt, batch, learner_apply, pcfg, opt_step,
-            grad_mask=gmask)
+            grad_mask=gmask, dist=dist)
         ret, n_ep = episode_returns(res.traj)
         return params, opt, res.final_env, res.final_obs, ret, n_ep
 
@@ -134,7 +148,7 @@ def rl_train(env_name: str = "cartpole", agent: str = "mlp",
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--env", default="cartpole",
-                    choices=["cartpole", "keydoor"])
+                    choices=list(registered()))
     ap.add_argument("--agent", default="mlp", choices=["mlp", "hrl"])
     ap.add_argument("--iters", type=int, default=40)
     ap.add_argument("--n-envs", type=int, default=32)

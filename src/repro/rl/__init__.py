@@ -1,3 +1,6 @@
+from repro.rl.dists import (ActionDist, Categorical, TanhGaussian,
+                            distribution_for)
+from repro.rl.envs import Environment, EnvSpec, make, register, registered
 from repro.rl.gae import gae, normalize
 from repro.rl.ppo import (PPOConfig, a2c_loss, batch_from_traj,
                           minibatch_epochs, ppo_loss, stage_mask)

@@ -30,6 +30,8 @@ from repro.core.fxp import QTensor
 from repro.core.policy import QuantPolicy
 from repro.core.quantizer import (dequantize_params, quantize_params,
                                   quantized_nbytes)
+from repro.rl.dists import ActionDist
+from repro.rl.envs.base import Environment
 from repro.rl.rollout import RolloutResult, rollout
 
 Array = jax.Array
@@ -84,13 +86,14 @@ class VersionBuffer:
         return self._buf[idx]
 
 
-def collect(packed, env: dict, apply_fn: Callable,
+def collect(packed, env: Environment, apply_fn: Callable,
             actor_policy: Optional[QuantPolicy], key: Array,
-            env_state, obs, n_steps: int) -> RolloutResult:
+            env_state, obs, n_steps: int,
+            dist: Optional[ActionDist] = None) -> RolloutResult:
     """One actor's contribution: dequantize the synced weights, roll."""
     params = unpack_weights(packed)
     fn = (lambda p, o: apply_fn(p, o, actor_policy))
-    return rollout(params, env, fn, key, env_state, obs, n_steps)
+    return rollout(params, env, fn, key, env_state, obs, n_steps, dist)
 
 
 def merge_results(results: List[RolloutResult],

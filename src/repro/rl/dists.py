@@ -1,0 +1,111 @@
+"""Action distributions — the layer that makes rollout/PPO
+distribution-agnostic.
+
+The policy network emits a flat parameter vector ``dparams`` per state
+(``spaces.head_dim(action_space)`` wide); an :class:`ActionDist` turns
+it into sampling, log-probs and entropy.  Two concrete families:
+
+  * :class:`Categorical` — ``dparams`` are unnormalized logits
+    ``[..., n]`` (Discrete action spaces);
+  * :class:`TanhGaussian` — ``dparams`` are ``[..., 2*d]`` (mean,
+    log_std) of a Gaussian squashed by tanh and rescaled into the Box
+    bounds (continuous control à la Pendulum).
+
+All methods broadcast over leading batch axes, so the same code runs
+unbatched inside ``vmap`` or on ``[T*B, ...]`` minibatches.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.rl.envs.spaces import Box, Discrete, Space
+
+Array = jax.Array
+
+LOG_STD_MIN = -5.0
+LOG_STD_MAX = 2.0
+_HALF_LOG_2PI = 0.5 * math.log(2.0 * math.pi)
+
+
+@dataclasses.dataclass(frozen=True)
+class Categorical:
+    """Discrete actions from unnormalized logits ``[..., n]``."""
+
+    def sample(self, key: Array, dparams: Array) -> Array:
+        return jax.random.categorical(key, dparams)
+
+    def log_prob(self, dparams: Array, action: Array) -> Array:
+        logp = jax.nn.log_softmax(dparams)
+        idx = action.astype(jnp.int32)[..., None]
+        return jnp.take_along_axis(logp, idx, axis=-1)[..., 0]
+
+    def entropy(self, dparams: Array) -> Array:
+        logp = jax.nn.log_softmax(dparams)
+        return -jnp.sum(jnp.exp(logp) * logp, axis=-1)
+
+
+@dataclasses.dataclass(frozen=True)
+class TanhGaussian:
+    """tanh-squashed diagonal Gaussian rescaled into ``[low, high]``.
+
+    ``dparams`` is ``[..., 2*d]``: the first half is the pre-squash
+    mean, the second half log-std (clipped to a sane range).  Log-probs
+    include the tanh + affine change-of-variables correction;
+    ``entropy`` is the pre-squash Gaussian entropy (the standard
+    tractable surrogate for the PPO bonus — squashing only shrinks it).
+    """
+
+    low: float
+    high: float
+
+    @property
+    def _mid(self) -> float:
+        return 0.5 * (self.high + self.low)
+
+    @property
+    def _half(self) -> float:
+        return 0.5 * (self.high - self.low)
+
+    def _split(self, dparams: Array):
+        mu, log_std = jnp.split(dparams, 2, axis=-1)
+        return mu, jnp.clip(log_std, LOG_STD_MIN, LOG_STD_MAX)
+
+    def sample(self, key: Array, dparams: Array) -> Array:
+        mu, log_std = self._split(dparams)
+        u = mu + jnp.exp(log_std) * jax.random.normal(key, mu.shape)
+        return self._mid + self._half * jnp.tanh(u)
+
+    def log_prob(self, dparams: Array, action: Array) -> Array:
+        mu, log_std = self._split(dparams)
+        a = (action - self._mid) / self._half
+        a = jnp.clip(a, -1.0 + 1e-6, 1.0 - 1e-6)
+        u = jnp.arctanh(a)
+        std = jnp.exp(log_std)
+        logp_u = (-0.5 * jnp.square((u - mu) / std) - log_std
+                  - _HALF_LOG_2PI)
+        # |d action / d u| = half * (1 - tanh(u)^2)
+        jac = jnp.log(self._half * (1.0 - jnp.square(a)) + 1e-9)
+        return jnp.sum(logp_u - jac, axis=-1)
+
+    def entropy(self, dparams: Array) -> Array:
+        _, log_std = self._split(dparams)
+        return jnp.sum(log_std + 0.5 + _HALF_LOG_2PI, axis=-1)
+
+
+ActionDist = Union[Categorical, TanhGaussian]
+
+
+def distribution_for(space: Space) -> ActionDist:
+    """The canonical distribution family for an action space."""
+    if isinstance(space, Discrete):
+        return Categorical()
+    if isinstance(space, Box):
+        if not space.bounded:
+            raise ValueError("TanhGaussian needs finite Box bounds")
+        return TanhGaussian(space.low, space.high)
+    raise TypeError(f"no distribution for space {space!r}")

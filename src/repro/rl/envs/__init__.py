@@ -1,8 +1,24 @@
-from repro.rl.envs import cartpole, keydoor
+"""Typed environment registry (see base.py for the protocol).
 
-ENVS = {"cartpole": cartpole.rollout_capable,
-        "keydoor": keydoor.rollout_capable}
+    from repro.rl.envs import make, register, registered
+    env = make("cartpole")            # -> Environment (spec + reset/step)
 
+Built-ins: cartpole, keydoor, acrobot, mountain_car, pendulum
+(continuous Box actions), catch (pixel grid).  Wrappers live in
+``repro.rl.envs.wrappers``; spaces in ``repro.rl.envs.spaces``.
+"""
+from repro.rl.envs import (acrobot, cartpole, catch, keydoor,
+                           mountain_car, pendulum, spaces, wrappers)
+from repro.rl.envs.base import Environment, EnvSpec
+from repro.rl.envs.registry import make, register, registered
+from repro.rl.envs.spaces import Box, Discrete
 
-def get_env(name: str) -> dict:
-    return ENVS[name]()
+register("cartpole", cartpole.make)
+register("keydoor", keydoor.make)
+register("acrobot", acrobot.make)
+register("mountain_car", mountain_car.make)
+register("pendulum", pendulum.make)
+register("catch", catch.make)
+
+__all__ = ["Box", "Discrete", "Environment", "EnvSpec", "make",
+           "register", "registered", "spaces", "wrappers"]

@@ -1,0 +1,126 @@
+"""Pure-JAX Acrobot-v1 (Sutton's two-link underactuated swing-up).
+
+Gym-compatible constants and RK4 integration.  Observations are the
+6-vector [cos θ1, sin θ1, cos θ2, sin θ2, θ̇1, θ̇2]; the 3 discrete
+actions apply torque {-1, 0, +1} to the joint between the links.
+Reward is -1 per step until the tip swings above the bar
+(-cos θ1 - cos(θ1 + θ2) > 1), which terminates.  Auto-resets like every
+env behind this API.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.rl.envs.base import (Environment, EnvSpec, angle_wrap,
+                                auto_reset)
+from repro.rl.envs.spaces import Box, Discrete
+
+Array = jax.Array
+
+DT = 0.2
+LINK_LENGTH_1 = 1.0
+LINK_MASS_1 = 1.0
+LINK_MASS_2 = 1.0
+LINK_COM_1 = 0.5
+LINK_COM_2 = 0.5
+LINK_MOI = 1.0
+GRAVITY = 9.8
+MAX_VEL_1 = 4 * jnp.pi
+MAX_VEL_2 = 9 * jnp.pi
+MAX_STEPS = 500
+
+N_ACTIONS = 3           # torque -1, 0, +1
+OBS_DIM = 6
+
+
+class EnvState(NamedTuple):
+    theta1: Array
+    theta2: Array
+    dtheta1: Array
+    dtheta2: Array
+    t: Array
+    key: Array
+
+
+def _obs(s: EnvState) -> Array:
+    return jnp.stack([jnp.cos(s.theta1), jnp.sin(s.theta1),
+                      jnp.cos(s.theta2), jnp.sin(s.theta2),
+                      s.dtheta1, s.dtheta2], axis=-1)
+
+
+def _fresh(key: Array) -> EnvState:
+    key, sub = jax.random.split(key)
+    vals = jax.random.uniform(sub, (4,), minval=-0.1, maxval=0.1)
+    return EnvState(vals[0], vals[1], vals[2], vals[3],
+                    jnp.zeros((), jnp.int32), key)
+
+
+def reset(key: Array) -> Tuple[EnvState, Array]:
+    s = _fresh(key)
+    return s, _obs(s)
+
+
+def _dsdt(y: Array, torque: Array) -> Array:
+    """Equations of motion (Sutton & Barto / Gym `_dsdt`)."""
+    m1, m2 = LINK_MASS_1, LINK_MASS_2
+    l1 = LINK_LENGTH_1
+    lc1, lc2 = LINK_COM_1, LINK_COM_2
+    i1 = i2 = LINK_MOI
+    g = GRAVITY
+    theta1, theta2, dtheta1, dtheta2 = y[0], y[1], y[2], y[3]
+
+    d1 = (m1 * lc1 ** 2 + m2 *
+          (l1 ** 2 + lc2 ** 2 + 2 * l1 * lc2 * jnp.cos(theta2)) + i1 + i2)
+    d2 = m2 * (lc2 ** 2 + l1 * lc2 * jnp.cos(theta2)) + i2
+    phi2 = m2 * lc2 * g * jnp.cos(theta1 + theta2 - jnp.pi / 2.0)
+    phi1 = (-m2 * l1 * lc2 * dtheta2 ** 2 * jnp.sin(theta2)
+            - 2 * m2 * l1 * lc2 * dtheta2 * dtheta1 * jnp.sin(theta2)
+            + (m1 * lc1 + m2 * l1) * g * jnp.cos(theta1 - jnp.pi / 2.0)
+            + phi2)
+    ddtheta2 = ((torque + d2 / d1 * phi1
+                 - m2 * l1 * lc2 * dtheta1 ** 2 * jnp.sin(theta2) - phi2)
+                / (m2 * lc2 ** 2 + i2 - d2 ** 2 / d1))
+    ddtheta1 = -(d2 * ddtheta2 + phi1) / d1
+    return jnp.stack([dtheta1, dtheta2, ddtheta1, ddtheta2])
+
+
+def _rk4(y0: Array, torque: Array, dt: float) -> Array:
+    k1 = _dsdt(y0, torque)
+    k2 = _dsdt(y0 + dt / 2 * k1, torque)
+    k3 = _dsdt(y0 + dt / 2 * k2, torque)
+    k4 = _dsdt(y0 + dt * k3, torque)
+    return y0 + dt / 6.0 * (k1 + 2 * k2 + 2 * k3 + k4)
+
+
+def step(s: EnvState, action: Array
+         ) -> Tuple[EnvState, Array, Array, Array]:
+    """action in {0, 1, 2} -> torque {-1, 0, +1}."""
+    torque = action.astype(jnp.float32) - 1.0
+    y0 = jnp.stack([s.theta1, s.theta2, s.dtheta1, s.dtheta2])
+    y = _rk4(y0, torque, DT)
+
+    theta1 = angle_wrap(y[0])
+    theta2 = angle_wrap(y[1])
+    dtheta1 = jnp.clip(y[2], -MAX_VEL_1, MAX_VEL_1)
+    dtheta2 = jnp.clip(y[3], -MAX_VEL_2, MAX_VEL_2)
+    t = s.t + 1
+
+    solved = -jnp.cos(theta1) - jnp.cos(theta2 + theta1) > 1.0
+    done = solved | (t >= MAX_STEPS)
+    reward = jnp.where(solved, 0.0, -1.0).astype(jnp.float32)
+
+    nxt = EnvState(theta1, theta2, dtheta1, dtheta2, t, s.key)
+    out = auto_reset(done, _fresh(s.key), nxt)
+    return out, _obs(out), reward, done
+
+
+def make() -> Environment:
+    spec = EnvSpec("acrobot",
+                   observation_space=Box(-float(MAX_VEL_2),
+                                         float(MAX_VEL_2), (OBS_DIM,)),
+                   action_space=Discrete(N_ACTIONS),
+                   max_steps=MAX_STEPS)
+    return Environment(spec=spec, reset=reset, step=step)

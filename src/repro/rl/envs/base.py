@@ -1,0 +1,96 @@
+"""The typed environment protocol every env and wrapper implements.
+
+An :class:`Environment` is a frozen bundle of two *pure functions* plus
+an :class:`EnvSpec` describing its interface:
+
+    env = make("cartpole")
+    state, obs = env.reset(key)                       # unbatched
+    state, obs, reward, done = env.step(state, action)
+
+Both functions are unbatched and jax.lax-level: batch with ``vmap``,
+iterate with ``scan``, and the whole fleet jits into one program — the
+substrate the quantized-actor throughput claims are measured on.
+
+Auto-reset contract: the state returned by a ``done`` transition is a
+fresh episode (and ``obs`` is the fresh episode's first observation);
+``done`` marks the boundary for GAE.  Wrappers preserve this.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.rl.envs.spaces import Box, Discrete, Space
+
+Array = jax.Array
+
+# reset(key) -> (state, obs)
+ResetFn = Callable[[Array], Tuple[Any, Array]]
+# step(state, action) -> (state, obs, reward, done)
+StepFn = Callable[[Any, Array], Tuple[Any, Array, Array, Array]]
+
+
+def auto_reset(done: Array, fresh: Any, nxt: Any) -> Any:
+    """Select ``fresh`` state leaves where ``done``, else ``nxt`` —
+    the shared implementation of the auto-reset contract."""
+    return jax.tree.map(lambda a, b: jnp.where(done, a, b), fresh, nxt)
+
+
+def angle_wrap(x: Array) -> Array:
+    """Wrap angles to [-pi, pi)."""
+    return ((x + jnp.pi) % (2 * jnp.pi)) - jnp.pi
+
+
+@dataclasses.dataclass(frozen=True)
+class EnvSpec:
+    """Static interface description of an environment."""
+
+    name: str
+    observation_space: Space
+    action_space: Space
+    max_steps: int
+
+    @property
+    def obs_shape(self) -> Tuple[int, ...]:
+        return self.observation_space.shape
+
+    @property
+    def n_actions(self) -> int:
+        if not isinstance(self.action_space, Discrete):
+            raise TypeError(
+                f"{self.name}: action space is {self.action_space!r}, "
+                "not Discrete — use spec.action_space directly")
+        return self.action_space.n
+
+    @property
+    def continuous(self) -> bool:
+        return isinstance(self.action_space, Box)
+
+
+@dataclasses.dataclass(frozen=True)
+class Environment:
+    """A spec plus pure reset/step functions (see module docstring)."""
+
+    spec: EnvSpec
+    reset: ResetFn
+    step: StepFn
+
+    # convenience passthroughs so call-sites stay short
+    @property
+    def observation_space(self) -> Space:
+        return self.spec.observation_space
+
+    @property
+    def action_space(self) -> Space:
+        return self.spec.action_space
+
+    @property
+    def obs_shape(self) -> Tuple[int, ...]:
+        return self.spec.obs_shape
+
+    def replace(self, **kw) -> "Environment":
+        """Functional update — how wrappers derive new environments."""
+        return dataclasses.replace(self, **kw)

@@ -2,8 +2,9 @@
 
 Functional API, vmap/scan friendly:
 
-    state = reset(key)                      # EnvState
-    state, obs, reward, done = step(state, action)
+    env = make()
+    state, obs = env.reset(key)
+    state, obs, reward, done = env.step(state, action)
 
 Auto-reset on termination (the returned state of a done transition is a
 fresh episode; ``done`` marks the boundary for GAE).  All ops are
@@ -12,10 +13,14 @@ what the quantized-actor throughput claims are measured on.
 """
 from __future__ import annotations
 
+import math
 from typing import NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.rl.envs.base import Environment, EnvSpec, auto_reset
+from repro.rl.envs.spaces import Box, Discrete
 
 Array = jax.Array
 
@@ -82,12 +87,13 @@ def step(s: EnvState, action: Array
     reward = jnp.ones((), jnp.float32)          # +1 per surviving step
 
     nxt = EnvState(x, x_dot, theta, theta_dot, t, s.key)
-    fresh = _fresh(s.key)
-    out = jax.tree.map(lambda a, b: jnp.where(done, a, b), fresh, nxt)
+    out = auto_reset(done, _fresh(s.key), nxt)
     return out, _obs(out), reward, done
 
 
-def rollout_capable() -> dict:
-    """Env descriptor consumed by rl/rollout.py."""
-    return {"reset": reset, "step": step, "n_actions": N_ACTIONS,
-            "obs_shape": (OBS_DIM,)}
+def make() -> Environment:
+    spec = EnvSpec("cartpole",
+                   observation_space=Box(-math.inf, math.inf, (OBS_DIM,)),
+                   action_space=Discrete(N_ACTIONS),
+                   max_steps=MAX_STEPS)
+    return Environment(spec=spec, reset=reset, step=step)

@@ -1,0 +1,82 @@
+"""Pure-JAX Catch (bsuite-style) — a minimal pixel-grid env.
+
+A ball falls one row per step down a ROWS x COLS board; the paddle on
+the bottom row moves left/stay/right.  Reward is +1 for catching the
+ball, -1 for missing, 0 otherwise; the episode ends when the ball
+reaches the bottom row.  Observations are a (ROWS, COLS, 1) binary
+image (ball and paddle pixels set), sized for conv stems and the
+frame-stack wrapper — the registry's cheap stand-in for image RL.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.rl.envs.base import Environment, EnvSpec, auto_reset
+from repro.rl.envs.spaces import Box, Discrete
+
+Array = jax.Array
+
+ROWS = 10
+COLS = 5
+MAX_STEPS = ROWS          # ball reaches the bottom in ROWS - 1 steps
+
+N_ACTIONS = 3             # left, stay, right
+
+
+class EnvState(NamedTuple):
+    ball_row: Array
+    ball_col: Array
+    paddle_col: Array
+    t: Array
+    key: Array
+
+
+def _render(s: EnvState) -> Array:
+    img = jnp.zeros((ROWS, COLS, 1), jnp.float32)
+    img = img.at[s.ball_row, s.ball_col, 0].set(1.0)
+    img = img.at[ROWS - 1, s.paddle_col, 0].set(1.0)
+    return img
+
+
+def _fresh(key: Array) -> EnvState:
+    key, sub = jax.random.split(key)
+    ball_col = jax.random.randint(sub, (), 0, COLS, jnp.int32)
+    return EnvState(jnp.zeros((), jnp.int32), ball_col,
+                    jnp.asarray(COLS // 2, jnp.int32),
+                    jnp.zeros((), jnp.int32), key)
+
+
+def reset(key: Array) -> Tuple[EnvState, Array]:
+    s = _fresh(key)
+    return s, _render(s)
+
+
+def step(s: EnvState, action: Array
+         ) -> Tuple[EnvState, Array, Array, Array]:
+    """action in {0, 1, 2} -> paddle move {-1, 0, +1}."""
+    paddle = jnp.clip(s.paddle_col + action.astype(jnp.int32) - 1,
+                      0, COLS - 1)
+    ball_row = s.ball_row + 1
+    t = s.t + 1
+
+    at_bottom = ball_row >= ROWS - 1
+    caught = at_bottom & (paddle == s.ball_col)
+    reward = jnp.where(at_bottom,
+                       jnp.where(caught, 1.0, -1.0), 0.0
+                       ).astype(jnp.float32)
+    done = at_bottom | (t >= MAX_STEPS)
+
+    nxt = EnvState(ball_row, s.ball_col, paddle, t, s.key)
+    out = auto_reset(done, _fresh(s.key), nxt)
+    return out, _render(out), reward, done
+
+
+def make() -> Environment:
+    spec = EnvSpec("catch",
+                   observation_space=Box(0.0, 1.0, (ROWS, COLS, 1)),
+                   action_space=Discrete(N_ACTIONS),
+                   max_steps=MAX_STEPS)
+    return Environment(spec=spec, reset=reset, step=step)

@@ -15,6 +15,9 @@ from typing import NamedTuple, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.rl.envs.base import Environment, EnvSpec, auto_reset
+from repro.rl.envs.spaces import Box, Discrete
+
 Array = jax.Array
 
 GRID = 8
@@ -74,8 +77,7 @@ def step(s: EnvState, action: Array
     done = opened | (t >= MAX_STEPS)
 
     nxt = EnvState(agent, s.key_pos, s.door, has_key, t, s.key)
-    fresh = _fresh(s.key)
-    out = jax.tree.map(lambda a, b: jnp.where(done, a, b), fresh, nxt)
+    out = auto_reset(done, _fresh(s.key), nxt)
     return out, _render(out), reward, done
 
 
@@ -84,6 +86,9 @@ def subgoal_reached(s: EnvState) -> Array:
     return s.has_key
 
 
-def rollout_capable() -> dict:
-    return {"reset": reset, "step": step, "n_actions": N_ACTIONS,
-            "obs_shape": (IMG, IMG, 3)}
+def make() -> Environment:
+    spec = EnvSpec("keydoor",
+                   observation_space=Box(0.0, 1.0, (IMG, IMG, 3)),
+                   action_space=Discrete(N_ACTIONS),
+                   max_steps=MAX_STEPS)
+    return Environment(spec=spec, reset=reset, step=step)

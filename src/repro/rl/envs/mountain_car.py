@@ -1,0 +1,79 @@
+"""Pure-JAX MountainCar-v0 (Moore's car-on-a-hill, Gym constants).
+
+2-vector observation [position, velocity], 3 discrete actions
+(push left / coast / push right), -1 reward per step, terminal at the
+flag (position >= 0.5) or after 200 steps.  A sparse-reward staple for
+the quantized-actor parity sweeps.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.rl.envs.base import Environment, EnvSpec, auto_reset
+from repro.rl.envs.spaces import Box, Discrete
+
+Array = jax.Array
+
+MIN_POS = -1.2
+MAX_POS = 0.6
+MAX_SPEED = 0.07
+GOAL_POS = 0.5
+FORCE = 0.001
+GRAVITY = 0.0025
+MAX_STEPS = 200
+
+N_ACTIONS = 3
+OBS_DIM = 2
+
+
+class EnvState(NamedTuple):
+    position: Array
+    velocity: Array
+    t: Array
+    key: Array
+
+
+def _obs(s: EnvState) -> Array:
+    return jnp.stack([s.position, s.velocity], axis=-1)
+
+
+def _fresh(key: Array) -> EnvState:
+    key, sub = jax.random.split(key)
+    pos = jax.random.uniform(sub, (), minval=-0.6, maxval=-0.4)
+    return EnvState(pos, jnp.zeros(()), jnp.zeros((), jnp.int32), key)
+
+
+def reset(key: Array) -> Tuple[EnvState, Array]:
+    s = _fresh(key)
+    return s, _obs(s)
+
+
+def step(s: EnvState, action: Array
+         ) -> Tuple[EnvState, Array, Array, Array]:
+    """action in {0, 1, 2} -> force {-1, 0, +1} * FORCE."""
+    velocity = (s.velocity + (action.astype(jnp.float32) - 1.0) * FORCE
+                - jnp.cos(3 * s.position) * GRAVITY)
+    velocity = jnp.clip(velocity, -MAX_SPEED, MAX_SPEED)
+    position = jnp.clip(s.position + velocity, MIN_POS, MAX_POS)
+    # inelastic left wall
+    velocity = jnp.where((position <= MIN_POS) & (velocity < 0),
+                         0.0, velocity)
+    t = s.t + 1
+
+    done = (position >= GOAL_POS) | (t >= MAX_STEPS)
+    reward = jnp.full((), -1.0, jnp.float32)
+
+    nxt = EnvState(position, velocity, t, s.key)
+    out = auto_reset(done, _fresh(s.key), nxt)
+    return out, _obs(out), reward, done
+
+
+def make() -> Environment:
+    spec = EnvSpec("mountain_car",
+                   observation_space=Box(MIN_POS, MAX_POS, (OBS_DIM,)),
+                   action_space=Discrete(N_ACTIONS),
+                   max_steps=MAX_STEPS)
+    return Environment(spec=spec, reset=reset, step=step)

@@ -1,0 +1,87 @@
+"""Pure-JAX Pendulum-v1 — the continuous-action env in the registry.
+
+Action is a Box torque in [-2, 2] (shape (1,)); the policy head is a
+tanh-squashed Gaussian (see :mod:`repro.rl.dists`), exercising the
+continuous path through PPO that "Learning Quantized Continuous
+Controllers for Integer Hardware" needs.  Observation is
+[cos θ, sin θ, θ̇]; reward is the negative quadratic cost; episodes are
+pure time-limit (200 steps) with auto-reset.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.rl.envs.base import (Environment, EnvSpec, angle_wrap,
+                                auto_reset)
+from repro.rl.envs.spaces import Box
+
+Array = jax.Array
+
+DT = 0.05
+GRAVITY = 10.0
+MASS = 1.0
+LENGTH = 1.0
+MAX_SPEED = 8.0
+MAX_TORQUE = 2.0
+MAX_STEPS = 200
+
+OBS_DIM = 3
+ACT_DIM = 1
+
+
+class EnvState(NamedTuple):
+    theta: Array
+    theta_dot: Array
+    t: Array
+    key: Array
+
+
+def _obs(s: EnvState) -> Array:
+    return jnp.stack([jnp.cos(s.theta), jnp.sin(s.theta), s.theta_dot],
+                     axis=-1)
+
+
+def _fresh(key: Array) -> EnvState:
+    key, sub = jax.random.split(key)
+    vals = jax.random.uniform(sub, (2,),
+                              minval=jnp.array([-jnp.pi, -1.0]),
+                              maxval=jnp.array([jnp.pi, 1.0]))
+    return EnvState(vals[0], vals[1], jnp.zeros((), jnp.int32), key)
+
+
+def reset(key: Array) -> Tuple[EnvState, Array]:
+    s = _fresh(key)
+    return s, _obs(s)
+
+
+def step(s: EnvState, action: Array
+         ) -> Tuple[EnvState, Array, Array, Array]:
+    """action: float tensor of shape (1,), torque in [-2, 2]."""
+    u = jnp.clip(action.reshape(()), -MAX_TORQUE, MAX_TORQUE)
+    cost = (angle_wrap(s.theta) ** 2 + 0.1 * s.theta_dot ** 2
+            + 0.001 * u ** 2)
+
+    theta_dot = s.theta_dot + DT * (
+        3 * GRAVITY / (2 * LENGTH) * jnp.sin(s.theta)
+        + 3.0 / (MASS * LENGTH ** 2) * u)
+    theta_dot = jnp.clip(theta_dot, -MAX_SPEED, MAX_SPEED)
+    theta = s.theta + DT * theta_dot
+    t = s.t + 1
+
+    done = t >= MAX_STEPS
+    reward = (-cost).astype(jnp.float32)
+
+    nxt = EnvState(theta, theta_dot, t, s.key)
+    out = auto_reset(done, _fresh(s.key), nxt)
+    return out, _obs(out), reward, done
+
+
+def make() -> Environment:
+    spec = EnvSpec("pendulum",
+                   observation_space=Box(-MAX_SPEED, MAX_SPEED, (OBS_DIM,)),
+                   action_space=Box(-MAX_TORQUE, MAX_TORQUE, (ACT_DIM,)),
+                   max_steps=MAX_STEPS)
+    return Environment(spec=spec, reset=reset, step=step)

@@ -1,0 +1,100 @@
+"""Typed observation/action spaces for the pure-JAX environment API.
+
+Two space kinds cover every registered env:
+
+  * ``Discrete(n)`` — integer actions in ``[0, n)`` (categorical heads);
+  * ``Box(low, high, shape)`` — bounded/unbounded float tensors
+    (observations, and continuous actions à la Pendulum).
+
+Spaces are frozen dataclasses of python scalars, so an ``EnvSpec`` is
+hashable and safe to close over inside jit.  ``sample`` draws a random
+element (used by the conformance suite and exploration warmup) and
+``contains`` is a jit-friendly membership check.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class Discrete:
+    """Integers ``{0, ..., n-1}``; scalar per env instance."""
+
+    n: int
+
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        return ()
+
+    @property
+    def dtype(self):
+        return jnp.int32
+
+    def sample(self, key: Array) -> Array:
+        return jax.random.randint(key, (), 0, self.n, jnp.int32)
+
+    def contains(self, x: Array) -> Array:
+        return (x >= 0) & (x < self.n)
+
+
+@dataclasses.dataclass(frozen=True)
+class Box:
+    """Float tensor with (possibly infinite) scalar bounds.
+
+    ``low``/``high`` are python floats broadcast over ``shape`` — every
+    env here has uniform bounds per tensor, which keeps the spec
+    hashable (no array fields).
+    """
+
+    low: float
+    high: float
+    shape: Tuple[int, ...]
+
+    @property
+    def dtype(self):
+        return jnp.float32
+
+    @property
+    def bounded(self) -> bool:
+        return math.isfinite(self.low) and math.isfinite(self.high)
+
+    def sample(self, key: Array) -> Array:
+        if self.bounded:
+            return jax.random.uniform(key, self.shape, jnp.float32,
+                                      self.low, self.high)
+        return jax.random.normal(key, self.shape, jnp.float32)
+
+    def contains(self, x: Array) -> Array:
+        """Reduces over the event dims only, so a batched ``x``
+        ([B, *shape]) yields a [B] mask — same element-wise semantics
+        as Discrete.contains."""
+        ok = (x >= self.low) & (x <= self.high)
+        if self.shape:
+            return jnp.all(ok, axis=tuple(range(-len(self.shape), 0)))
+        return ok
+
+
+Space = Union[Discrete, Box]
+
+
+def head_dim(space: Space) -> int:
+    """Policy-head width needed to parameterize a distribution over
+    ``space``: ``n`` logits for Discrete, (mean, log_std) pairs for Box.
+    """
+    if isinstance(space, Discrete):
+        return space.n
+    return 2 * int(math.prod(space.shape))
+
+
+def flat_dim(space: Space) -> int:
+    """Number of scalars in one element of the space."""
+    if isinstance(space, Discrete):
+        return 1
+    return int(math.prod(space.shape))

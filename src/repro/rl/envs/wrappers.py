@@ -1,0 +1,183 @@
+"""Composable environment wrappers (pure-function style).
+
+Each wrapper takes an :class:`Environment` and returns a *new*
+:class:`Environment` whose reset/step close over the inner functions —
+no classes, no mutable state, so wrapped envs stay vmap/scan/jit
+friendly and stack in any order:
+
+    env = frame_stack(normalize_observation(make("catch"), 0.5, 0.5), 4)
+
+Wrappers that need their own carry (time limit counter, frame buffer)
+wrap the inner state in a NamedTuple, preserving the auto-reset
+contract from :mod:`repro.rl.envs.base`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.rl.envs.base import Environment, auto_reset
+from repro.rl.envs.spaces import Box
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# stateless observation / reward transforms
+# ---------------------------------------------------------------------------
+
+def normalize_observation(env: Environment, mean, std) -> Environment:
+    """Affine observation transform ``(obs - mean) / std``.
+
+    ``mean``/``std`` are constants (scalars or obs-shaped arrays) — e.g.
+    dataset statistics, or 0.5/0.5 to center pixel grids.  Keeping them
+    static (rather than running estimates) keeps reset/step pure.
+    """
+    mean = jnp.asarray(mean, jnp.float32)
+    std = jnp.asarray(std, jnp.float32)
+
+    def norm(obs):
+        return (obs.astype(jnp.float32) - mean) / std
+
+    def reset(key):
+        state, obs = env.reset(key)
+        return state, norm(obs)
+
+    def step(state, action):
+        state, obs, reward, done = env.step(state, action)
+        return state, norm(obs), reward, done
+
+    in_space = env.observation_space
+    if (isinstance(in_space, Box) and in_space.bounded
+            and mean.ndim == 0 and std.ndim == 0):
+        lo = (in_space.low - float(mean)) / float(std)
+        hi = (in_space.high - float(mean)) / float(std)
+        space = Box(min(lo, hi), max(lo, hi), env.obs_shape)
+    else:
+        space = Box(-math.inf, math.inf, env.obs_shape)
+    spec = dataclasses.replace(env.spec, observation_space=space)
+    return env.replace(spec=spec, reset=reset, step=step)
+
+
+def scale_reward(env: Environment, scale: float) -> Environment:
+    """Multiply rewards by a constant (loss-scale style conditioning)."""
+
+    def step(state, action):
+        state, obs, reward, done = env.step(state, action)
+        return state, obs, reward * jnp.float32(scale), done
+
+    return env.replace(step=step)
+
+
+def flatten_observation(env: Environment) -> Environment:
+    """Ravel observations to 1-D — lets MLP policies drive pixel envs."""
+    flat = int(math.prod(env.obs_shape))
+
+    def reset(key):
+        state, obs = env.reset(key)
+        return state, obs.reshape(flat).astype(jnp.float32)
+
+    def step(state, action):
+        state, obs, reward, done = env.step(state, action)
+        return state, obs.reshape(flat).astype(jnp.float32), reward, done
+
+    in_space = env.observation_space
+    if isinstance(in_space, Box):
+        space = Box(in_space.low, in_space.high, (flat,))
+    else:
+        space = Box(-math.inf, math.inf, (flat,))
+    spec = dataclasses.replace(env.spec, observation_space=space)
+    return env.replace(spec=spec, reset=reset, step=step)
+
+
+# ---------------------------------------------------------------------------
+# time limit
+# ---------------------------------------------------------------------------
+
+class TimeLimitState(NamedTuple):
+    inner: Any
+    t: Array            # steps taken in the current episode
+    key: Array          # PRNG for the forced reset on timeout
+
+
+def time_limit(env: Environment, max_steps: int) -> Environment:
+    """Truncate episodes after ``max_steps`` wrapper-level steps.
+
+    On timeout the inner env is force-reset (fresh key from the wrapper
+    carry), so the auto-reset contract holds even for envs whose own
+    horizon is longer.
+    """
+
+    def reset(key):
+        key, k_inner, k_carry = jax.random.split(key, 3)
+        state, obs = env.reset(k_inner)
+        return TimeLimitState(state, jnp.zeros((), jnp.int32), k_carry), obs
+
+    def step(state, action):
+        inner, obs, reward, done = env.step(state.inner, action)
+        t = state.t + 1
+        timeout = t >= max_steps
+        done = done | timeout
+
+        key, sub = jax.random.split(state.key)
+        fresh_inner, fresh_obs = env.reset(sub)
+        # inner auto-resets on its own `done`; only the pure timeout
+        # needs the forced reset
+        inner = auto_reset(timeout, fresh_inner, inner)
+        obs = jnp.where(timeout, fresh_obs, obs)
+        t = jnp.where(done, 0, t)
+        return TimeLimitState(inner, t, key), obs, reward, done
+
+    spec = dataclasses.replace(env.spec,
+                               max_steps=min(env.spec.max_steps,
+                                             max_steps))
+    return env.replace(spec=spec, reset=reset, step=step)
+
+
+# ---------------------------------------------------------------------------
+# frame stacking
+# ---------------------------------------------------------------------------
+
+class FrameStackState(NamedTuple):
+    inner: Any
+    frames: Array       # [k, *obs_shape], frames[-1] is newest
+
+
+def frame_stack(env: Environment, k: int) -> Environment:
+    """Stack the last ``k`` observations along the trailing axis.
+
+    Images (H, W, C) become (H, W, C*k); vectors (D,) become (D*k,) —
+    the Binarized-P-Network-style temporal context for pixel inputs.
+    On episode boundaries the buffer refills with the fresh episode's
+    first observation.
+    """
+    if k < 1:
+        raise ValueError(f"frame_stack needs k >= 1, got {k}")
+
+    def stacked(frames: Array) -> Array:
+        return jnp.concatenate([frames[i] for i in range(k)], axis=-1)
+
+    def reset(key):
+        state, obs = env.reset(key)
+        frames = jnp.stack([obs] * k)
+        return FrameStackState(state, frames), stacked(frames)
+
+    def step(state, action):
+        inner, obs, reward, done = env.step(state.inner, action)
+        rolled = jnp.concatenate([state.frames[1:], obs[None]], axis=0)
+        fresh = jnp.stack([obs] * k)        # obs is already post-reset
+        frames = jnp.where(done, fresh, rolled)
+        return (FrameStackState(inner, frames), stacked(frames),
+                reward, done)
+
+    in_space = env.observation_space
+    shape = in_space.shape[:-1] + (in_space.shape[-1] * k,)
+    low = in_space.low if isinstance(in_space, Box) else -math.inf
+    high = in_space.high if isinstance(in_space, Box) else math.inf
+    spec = dataclasses.replace(env.spec,
+                               observation_space=Box(low, high, shape))
+    return env.replace(spec=spec, reset=reset, step=step)

@@ -19,8 +19,10 @@ from repro.nn.module import KeySeq
 Array = jax.Array
 
 
-def mlp_ac_init(key, obs_dim: int, n_actions: int, hidden: int = 64,
+def mlp_ac_init(key, obs_dim: int, head_dim: int, hidden: int = 64,
                 dtype=jnp.float32):
+    """``head_dim`` = spaces.head_dim(action_space): n logits for
+    Discrete, 2*act_dim (mean, log_std) for Box."""
     ks = KeySeq(key)
     return {
         "torso": {
@@ -29,7 +31,7 @@ def mlp_ac_init(key, obs_dim: int, n_actions: int, hidden: int = 64,
             "fc2": linear_init(ks(), hidden, hidden, axes=(None, None),
                                dtype=dtype),
         },
-        "pi": linear_init(ks(), hidden, n_actions, axes=(None, None),
+        "pi": linear_init(ks(), hidden, head_dim, axes=(None, None),
                           dtype=dtype),
         "v": linear_init(ks(), hidden, 1, axes=(None, None), dtype=dtype),
     }
@@ -38,7 +40,7 @@ def mlp_ac_init(key, obs_dim: int, n_actions: int, hidden: int = 64,
 def mlp_ac_apply(params, obs: Array,
                  policy: Optional[QuantPolicy] = None
                  ) -> Tuple[Array, Array]:
-    """obs [B, D] -> (logits [B, A], value [B])."""
+    """obs [B, D] -> (dist params [B, H], value [B])."""
     h = activation(linear_apply(params["torso"]["fc1"], obs, policy),
                    "tanh", policy)
     h = activation(linear_apply(params["torso"]["fc2"], h, policy),

@@ -15,10 +15,13 @@ from typing import Callable, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.rl.dists import ActionDist, Categorical
 from repro.rl.gae import gae, normalize
 from repro.rl.rollout import Trajectory
 
 Array = jax.Array
+
+_CATEGORICAL = Categorical()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -33,14 +36,16 @@ class PPOConfig:
     normalize_adv: bool = True
 
 
-def ppo_loss(params, apply_fn: Callable, batch: dict,
-             cfg: PPOConfig) -> Tuple[Array, dict]:
+def ppo_loss(params, apply_fn: Callable, batch: dict, cfg: PPOConfig,
+             dist: Optional[ActionDist] = None) -> Tuple[Array, dict]:
     """batch: flat dict of [N, ...] tensors (obs, actions, log_probs,
-    advantages, returns, mask)."""
-    logits, values = apply_fn(params, batch["obs"])
-    logits = logits.astype(jnp.float32)
-    logp_all = jax.nn.log_softmax(logits)
-    logp = logp_all[jnp.arange(logits.shape[0]), batch["actions"]]
+    advantages, returns, mask).  ``dist`` defaults to Categorical; pass
+    the env's ActionDist (e.g. TanhGaussian) for continuous control.
+    """
+    dist = dist or _CATEGORICAL
+    dparams, values = apply_fn(params, batch["obs"])
+    dparams = dparams.astype(jnp.float32)
+    logp = dist.log_prob(dparams, batch["actions"])
 
     mask = batch.get("mask")
     mean = (lambda x: (x * mask).sum() / jnp.maximum(mask.sum(), 1)) \
@@ -54,7 +59,7 @@ def ppo_loss(params, apply_fn: Callable, batch: dict,
     pg_loss = mean(pg)
 
     v_loss = 0.5 * mean(jnp.square(values - batch["returns"]))
-    entropy = mean(-jnp.sum(jnp.exp(logp_all) * logp_all, axis=-1))
+    entropy = mean(dist.entropy(dparams))
 
     loss = pg_loss + cfg.vf_coef * v_loss - cfg.ent_coef * entropy
     stats = {"pg_loss": pg_loss, "v_loss": v_loss, "entropy": entropy,
@@ -62,15 +67,15 @@ def ppo_loss(params, apply_fn: Callable, batch: dict,
     return loss, stats
 
 
-def a2c_loss(params, apply_fn: Callable, batch: dict,
-             cfg: PPOConfig) -> Tuple[Array, dict]:
-    logits, values = apply_fn(params, batch["obs"])
-    logits = logits.astype(jnp.float32)
-    logp_all = jax.nn.log_softmax(logits)
-    logp = logp_all[jnp.arange(logits.shape[0]), batch["actions"]]
+def a2c_loss(params, apply_fn: Callable, batch: dict, cfg: PPOConfig,
+             dist: Optional[ActionDist] = None) -> Tuple[Array, dict]:
+    dist = dist or _CATEGORICAL
+    dparams, values = apply_fn(params, batch["obs"])
+    dparams = dparams.astype(jnp.float32)
+    logp = dist.log_prob(dparams, batch["actions"])
     pg_loss = -jnp.mean(logp * batch["advantages"])
     v_loss = 0.5 * jnp.mean(jnp.square(values - batch["returns"]))
-    entropy = jnp.mean(-jnp.sum(jnp.exp(logp_all) * logp_all, axis=-1))
+    entropy = jnp.mean(dist.entropy(dparams))
     loss = pg_loss + cfg.vf_coef * v_loss - cfg.ent_coef * entropy
     return loss, {"pg_loss": pg_loss, "v_loss": v_loss,
                   "entropy": entropy}
@@ -133,12 +138,16 @@ def apply_stage_mask(grads, mask):
 
 
 def minibatch_epochs(key, params, opt_state, batch, apply_fn, cfg,
-                     optimizer_step, loss_fn=ppo_loss, grad_mask=None):
+                     optimizer_step, loss_fn=ppo_loss, grad_mask=None,
+                     dist: Optional[ActionDist] = None):
     """Standard PPO epochs x minibatches loop (python loop: trace-time
     constants, jit the caller)."""
     n = batch["obs"].shape[0]
     mb = n // cfg.minibatches
     stats = None
+    # keep the historical 4-arg loss_fn contract intact when no dist
+    # is supplied (custom losses need not know about ActionDist)
+    extra = () if dist is None else (dist,)
     for _ in range(cfg.epochs):
         key, sub = jax.random.split(key)
         perm = jax.random.permutation(sub, n)
@@ -146,7 +155,8 @@ def minibatch_epochs(key, params, opt_state, batch, apply_fn, cfg,
             idx = jax.lax.dynamic_slice_in_dim(perm, i * mb, mb)
             mbatch = {k: v[idx] for k, v in batch.items()}
             (_, stats), grads = jax.value_and_grad(
-                loss_fn, has_aux=True)(params, apply_fn, mbatch, cfg)
+                loss_fn, has_aux=True)(params, apply_fn, mbatch, cfg,
+                                       *extra)
             if grad_mask is not None:
                 grads = apply_stage_mask(grads, grad_mask)
             params, opt_state = optimizer_step(params, opt_state, grads)

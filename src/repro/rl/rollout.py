@@ -1,22 +1,28 @@
 """Vectorized experience collection (B envs x T steps, one jit).
 
-``apply_fn(params, obs) -> (logits, value)`` is the *actor policy* —
-pass quantized params + an FxP8 QuantPolicy and this is the paper's
-quantized actor; the rollout code is precision-agnostic.
+``apply_fn(params, obs) -> (dparams, value)`` is the *actor policy* —
+``dparams`` parameterizes whatever :class:`~repro.rl.dists.ActionDist`
+matches the env's action space (logits for Discrete, mean/log_std for
+Box).  Pass quantized params + an FxP8 QuantPolicy and this is the
+paper's quantized actor; the rollout code is precision- and
+distribution-agnostic.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, NamedTuple, Tuple
+from typing import Any, Callable, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.rl.dists import ActionDist, distribution_for
+from repro.rl.envs.base import Environment
 
 Array = jax.Array
 
 
 class Trajectory(NamedTuple):
     obs: Array          # [T, B, ...]
-    actions: Array      # [T, B]
+    actions: Array      # [T, B] (Discrete) or [T, B, d] (Box)
     log_probs: Array    # [T, B]
     values: Array       # [T, B]
     rewards: Array      # [T, B]
@@ -30,25 +36,26 @@ class RolloutResult(NamedTuple):
     final_obs: Array
 
 
-def init_envs(env: dict, key: Array, n_envs: int):
+def init_envs(env: Environment, key: Array, n_envs: int):
     keys = jax.random.split(key, n_envs)
-    state, obs = jax.vmap(env["reset"])(keys)
+    state, obs = jax.vmap(env.reset)(keys)
     return state, obs
 
 
-def rollout(params, env: dict, apply_fn: Callable, key: Array,
-            env_state, obs, n_steps: int) -> RolloutResult:
+def rollout(params, env: Environment, apply_fn: Callable, key: Array,
+            env_state, obs, n_steps: int,
+            dist: Optional[ActionDist] = None) -> RolloutResult:
     """Collect ``n_steps`` transitions from every env (scan over time)."""
+    if dist is None:
+        dist = distribution_for(env.action_space)
 
     def one(carry, step_key):
         state, obs = carry
-        logits, value = apply_fn(params, obs)
-        logits = logits.astype(jnp.float32)
-        action = jax.random.categorical(step_key, logits)
-        logp = jax.nn.log_softmax(logits)[
-            jnp.arange(logits.shape[0]), action]
-        state, next_obs, reward, done = jax.vmap(env["step"])(state,
-                                                              action)
+        dparams, value = apply_fn(params, obs)
+        dparams = dparams.astype(jnp.float32)
+        action = dist.sample(step_key, dparams)
+        logp = dist.log_prob(dparams, action)
+        state, next_obs, reward, done = jax.vmap(env.step)(state, action)
         tr = Trajectory(obs, action, logp, value, reward, done)
         return (state, next_obs), tr
 

@@ -1,0 +1,260 @@
+"""Conformance suite for the typed environment API.
+
+Every registered env must honour the same contract: spec-accurate
+shapes/dtypes, deterministic reset, jit purity, vmap batching,
+auto-reset on done, and a jitted rollout under the FxP8 quantized
+actor policy.  Wrapper and registry semantics are covered at the end.
+"""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.policy import FXP8
+from repro.nn.module import unbox
+from repro.rl import init_envs, rollout
+from repro.rl.actor_learner import collect, pack_weights
+from repro.rl.dists import distribution_for
+from repro.rl.envs import (Box, Discrete, Environment, make, register,
+                           registered, wrappers)
+from repro.rl.envs.spaces import head_dim
+from repro.rl.nets import mlp_ac_apply, mlp_ac_init
+
+ALL_ENVS = registered()
+
+
+def _vectorized(env: Environment) -> Environment:
+    """MLP-policy view: ravel image observations."""
+    if len(env.obs_shape) == 1:
+        return env
+    return wrappers.flatten_observation(env)
+
+
+# ---------------------------------------------------------------------------
+# per-env contract
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ALL_ENVS)
+def test_spec_contract(name):
+    env = make(name)
+    assert isinstance(env, Environment)
+    assert env.spec.name == name
+    assert isinstance(env.observation_space, Box)
+    assert isinstance(env.action_space, (Box, Discrete))
+    assert env.spec.max_steps > 0
+    assert len(env.obs_shape) >= 1
+
+
+@pytest.mark.parametrize("name", ALL_ENVS)
+def test_reset_step_shapes_and_dtypes(name):
+    env = make(name)
+    obs_space, act_space = env.observation_space, env.action_space
+    state, obs = env.reset(jax.random.PRNGKey(0))
+    assert obs.shape == obs_space.shape
+    assert obs.dtype == obs_space.dtype
+    action = act_space.sample(jax.random.PRNGKey(1))
+    assert action.shape == act_space.shape
+
+    state, obs2, reward, done = env.step(state, action)
+    assert obs2.shape == obs_space.shape
+    assert obs2.dtype == obs_space.dtype
+    assert reward.shape == () and reward.dtype == jnp.float32
+    assert done.shape == () and done.dtype == jnp.bool_
+    assert bool(obs_space.contains(obs2))
+
+
+@pytest.mark.parametrize("name", ALL_ENVS)
+def test_determinism_and_jit_purity(name):
+    env = make(name)
+    action = env.action_space.sample(jax.random.PRNGKey(1))
+    s1, o1 = env.reset(jax.random.PRNGKey(0))
+    s2, o2 = env.reset(jax.random.PRNGKey(0))
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2))
+
+    _, eo, er, ed = env.step(s1, action)
+    _, jo, jr, jd = jax.jit(env.step)(s2, action)
+    np.testing.assert_allclose(np.asarray(eo), np.asarray(jo),
+                               rtol=1e-5, atol=1e-6)
+    assert float(er) == pytest.approx(float(jr), rel=1e-5)
+    assert bool(ed) == bool(jd)
+
+
+@pytest.mark.parametrize("name", ALL_ENVS)
+def test_vmap_batching(name):
+    env = make(name)
+    n = 5
+    state, obs = init_envs(env, jax.random.PRNGKey(0), n)
+    assert obs.shape == (n,) + env.obs_shape
+    keys = jax.random.split(jax.random.PRNGKey(1), n)
+    actions = jax.vmap(env.action_space.sample)(keys)
+    state, obs, reward, done = jax.jit(jax.vmap(env.step))(state, actions)
+    assert obs.shape == (n,) + env.obs_shape
+    assert reward.shape == (n,) and done.shape == (n,)
+
+
+@pytest.mark.parametrize("name", ALL_ENVS)
+def test_auto_reset_semantics(name):
+    """Within max_steps+1 random steps at least one episode ends, and
+    the state returned by every done transition is a fresh episode
+    (step counter back to zero)."""
+    env = make(name)
+    T = env.spec.max_steps + 1
+    s0, _ = env.reset(jax.random.PRNGKey(0))
+
+    def one(state, key):
+        action = env.action_space.sample(key)
+        state, _, _, done = env.step(state, action)
+        return state, (done, state.t)
+
+    keys = jax.random.split(jax.random.PRNGKey(1), T)
+    _, (dones, ts) = jax.jit(
+        lambda s, k: jax.lax.scan(one, s, k))(s0, keys)
+    dones, ts = np.asarray(dones), np.asarray(ts)
+    assert dones.any(), f"{name}: no episode ended in {T} steps"
+    assert (ts[dones] == 0).all(), \
+        f"{name}: done transition did not return a fresh episode"
+
+
+@pytest.mark.parametrize("name", ALL_ENVS)
+def test_quantized_actor_rollout(name):
+    """Smoke rollout under the fxp8 actor policy with int8-packed
+    weights — any registered env, one shared rollout path."""
+    env = _vectorized(make(name))
+    dist = distribution_for(env.action_space)
+    params = unbox(mlp_ac_init(jax.random.PRNGKey(0), env.obs_shape[0],
+                               head_dim(env.action_space), hidden=32))
+    packed = pack_weights(params, 8)
+    est, obs = init_envs(env, jax.random.PRNGKey(1), 4)
+    res = jax.jit(lambda p, e, o: collect(
+        p, env, mlp_ac_apply, FXP8, jax.random.PRNGKey(2), e, o, 8,
+        dist))(packed, est, obs)
+    assert res.traj.rewards.shape == (8, 4)
+    assert np.all(np.isfinite(np.asarray(res.traj.log_probs)))
+    acts = res.traj.actions.reshape((-1,) + env.action_space.shape)
+    assert bool(jnp.all(env.action_space.contains(acts)))
+
+
+def test_pendulum_is_continuous():
+    env = make("pendulum")
+    assert env.spec.continuous
+    assert isinstance(env.action_space, Box)
+    assert env.action_space.shape == (1,)
+    with pytest.raises(TypeError):
+        env.spec.n_actions
+
+
+# ---------------------------------------------------------------------------
+# wrappers
+# ---------------------------------------------------------------------------
+
+def test_flatten_observation():
+    env = wrappers.flatten_observation(make("catch"))
+    assert env.obs_shape == (50,)
+    _, obs = env.reset(jax.random.PRNGKey(0))
+    assert obs.shape == (50,)
+
+
+def test_normalize_observation_affine():
+    base = make("cartpole")
+    env = wrappers.normalize_observation(base, 1.0, 2.0)
+    _, raw = base.reset(jax.random.PRNGKey(0))
+    _, nrm = env.reset(jax.random.PRNGKey(0))
+    np.testing.assert_allclose(np.asarray(nrm), (np.asarray(raw) - 1) / 2,
+                               rtol=1e-6)
+
+
+def test_scale_reward():
+    base = make("cartpole")            # reward is +1 per step
+    env = wrappers.scale_reward(base, 0.25)
+    s, _ = env.reset(jax.random.PRNGKey(0))
+    _, _, r, _ = env.step(s, jnp.asarray(0))
+    assert float(r) == pytest.approx(0.25)
+
+
+def test_time_limit_truncates_and_force_resets():
+    env = wrappers.time_limit(make("pendulum"), 5)   # inner horizon 200
+    assert env.spec.max_steps == 5
+    s, _ = env.reset(jax.random.PRNGKey(0))
+    step = jax.jit(env.step)
+    for i in range(5):
+        s, obs, r, d = step(s, jnp.zeros((1,)))
+    assert bool(d), "episode must truncate at the wrapper limit"
+    assert int(s.t) == 0 and int(s.inner.t) == 0   # forced inner reset
+    assert bool(env.observation_space.contains(obs))
+
+
+def test_frame_stack_shape_and_episode_boundary():
+    k = 4
+    env = wrappers.frame_stack(make("catch"), k)
+    assert env.obs_shape == (10, 5, k)
+    s, obs = env.reset(jax.random.PRNGKey(0))
+    # initial buffer: all frames identical
+    f = np.asarray(obs)
+    for i in range(1, k):
+        np.testing.assert_array_equal(f[..., 0], f[..., i])
+    step = jax.jit(env.step)
+    done = False
+    for _ in range(12):                # catch ends within 10 steps
+        s, obs, r, d = step(s, jnp.asarray(1))
+        if bool(d):
+            done = True
+            break
+    assert done
+    # post-done buffer refilled with the fresh episode's first frame
+    f = np.asarray(obs)
+    for i in range(1, k):
+        np.testing.assert_array_equal(f[..., 0], f[..., i])
+
+
+def test_frame_stack_vector_env():
+    env = wrappers.frame_stack(make("cartpole"), 3)
+    assert env.obs_shape == (12,)
+    _, obs = env.reset(jax.random.PRNGKey(0))
+    assert obs.shape == (12,)
+
+
+def test_wrapped_env_rolls_under_rollout():
+    env = wrappers.frame_stack(
+        wrappers.normalize_observation(
+            wrappers.flatten_observation(make("catch")), 0.5, 0.5), 2)
+    params = unbox(mlp_ac_init(jax.random.PRNGKey(0), env.obs_shape[0],
+                               head_dim(env.action_space), hidden=16))
+    est, obs = init_envs(env, jax.random.PRNGKey(1), 3)
+    res = jax.jit(lambda p, e, o: rollout(
+        p, env, mlp_ac_apply, jax.random.PRNGKey(2), e, o,
+        12))(params, est, obs)
+    assert res.traj.obs.shape == (12, 3, 100)
+    assert np.all(np.isfinite(np.asarray(res.traj.log_probs)))
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def test_registry_rejects_duplicates_and_unknown():
+    with pytest.raises(ValueError, match="already registered"):
+        register("cartpole", make)
+    with pytest.raises(ValueError, match="registered:"):
+        make("not-an-env")
+
+
+def test_registry_overwrite_and_kwargs():
+    from repro.rl.envs import cartpole as cp
+
+    calls = {}
+
+    def factory(max_steps=123):
+        calls["max_steps"] = max_steps
+        return cp.make()
+
+    register("_test_env", factory)
+    try:
+        env = make("_test_env", max_steps=7)
+        assert calls["max_steps"] == 7
+        assert isinstance(env, Environment)
+        register("_test_env", cp.make, overwrite=True)
+    finally:
+        from repro.rl.envs import registry
+        registry._REGISTRY.pop("_test_env", None)

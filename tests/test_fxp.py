@@ -3,8 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
-from hypothesis.extra import numpy as hnp
+from _hypothesis_compat import given, settings, st, hnp
 
 from repro.core import (FXP8, FXP16, FP32, W8, W8A8, QTensor, QuantPolicy,
                         dequantize, fake_quant, q_matmul, quantize,

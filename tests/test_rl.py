@@ -1,47 +1,49 @@
-"""RL subsystem tests: envs, GAE, PPO, DQN, actor-learner sync."""
+"""RL subsystem tests: envs, GAE, PPO, DQN, dists, actor-learner sync."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, st
 
 from repro.core.policy import FXP8, QuantPolicy
 from repro.nn.module import unbox
 from repro.rl import PPOConfig, batch_from_traj, gae, init_envs, rollout
 from repro.rl.actor_learner import (merge_results, pack_weights,
                                     sync_bytes, unpack_weights)
+from repro.rl.dists import Categorical, TanhGaussian, distribution_for
 from repro.rl.dqn import (DQNConfig, dqn_loss, egreedy, epsilon,
                           replay_add, replay_init, replay_sample)
-from repro.rl.envs import get_env
+from repro.rl.envs import Box, Discrete, Environment, make
+from repro.rl.envs.spaces import head_dim
 from repro.rl.nets import (mlp_ac_apply, mlp_ac_init, mlp_q_apply,
                            mlp_q_init)
 from repro.rl.ppo import a2c_loss, apply_stage_mask, ppo_loss, stage_mask
 from repro.rl.rollout import episode_returns
 
 
-# -- envs --------------------------------------------------------------------
+# -- envs (spot checks; the per-env contract lives in test_envs.py) ----------
 
-@pytest.mark.parametrize("name", ["cartpole", "keydoor"])
-def test_env_shapes_and_determinism(name):
-    env = get_env(name)
-    s, obs = env["reset"](jax.random.PRNGKey(0))
-    assert obs.shape == env["obs_shape"]
-    s2, obs2, r, d = jax.jit(env["step"])(s, jnp.asarray(0))
-    assert obs2.shape == env["obs_shape"]
-    assert r.shape == () and d.shape == ()
-    # same key -> same trajectory
-    sb, obsb = env["reset"](jax.random.PRNGKey(0))
-    s2b, obs2b, rb, _ = jax.jit(env["step"])(sb, jnp.asarray(0))
-    np.testing.assert_allclose(np.asarray(obs2), np.asarray(obs2b),
-                               rtol=1e-6)
+def test_make_returns_typed_environment():
+    env = make("cartpole")
+    assert isinstance(env, Environment)
+    assert env.spec.name == "cartpole"
+    assert isinstance(env.action_space, Discrete)
+    assert env.spec.n_actions == 2
+    assert env.obs_shape == (4,)
+
+
+def test_make_unknown_env_lists_registry():
+    with pytest.raises(ValueError, match="cartpole"):
+        make("nope")
 
 
 def test_cartpole_terminates_on_angle():
-    env = get_env("cartpole")
-    s, _ = env["reset"](jax.random.PRNGKey(0))
+    env = make("cartpole")
+    s, _ = env.reset(jax.random.PRNGKey(0))
     done = False
     for _ in range(500):          # always push right -> falls over
-        s, _, _, d = jax.jit(env["step"])(s, jnp.asarray(1))
+        s, _, _, d = jax.jit(env.step)(s, jnp.asarray(1))
         done = done or bool(d)
         if done:
             break
@@ -85,7 +87,7 @@ def test_keydoor_subgoal_then_goal():
 
 
 def test_vectorized_rollout_and_returns():
-    env = get_env("cartpole")
+    env = make("cartpole")
     params = unbox(mlp_ac_init(jax.random.PRNGKey(0), 4, 2))
     fn = lambda p, o: mlp_ac_apply(p, o)
     est, obs = init_envs(env, jax.random.PRNGKey(1), 8)
@@ -94,6 +96,76 @@ def test_vectorized_rollout_and_returns():
     assert res.traj.rewards.shape == (64, 8)
     ret, n = episode_returns(res.traj)
     assert int(n) > 0 and float(ret) > 5.0     # random policy survives >5
+
+
+# -- action distributions -----------------------------------------------
+
+def test_distribution_for_space_kinds():
+    assert isinstance(distribution_for(Discrete(4)), Categorical)
+    d = distribution_for(Box(-2.0, 2.0, (1,)))
+    assert isinstance(d, TanhGaussian)
+    with pytest.raises(ValueError):
+        distribution_for(Box(-np.inf, np.inf, (1,)))
+
+
+def test_head_dim():
+    assert head_dim(Discrete(6)) == 6
+    assert head_dim(Box(-1.0, 1.0, (3,))) == 6
+
+
+def test_categorical_matches_log_softmax():
+    dist = Categorical()
+    logits = jax.random.normal(jax.random.PRNGKey(0), (5, 3))
+    a = jnp.array([0, 2, 1, 2, 0])
+    expect = jax.nn.log_softmax(logits)[jnp.arange(5), a]
+    np.testing.assert_allclose(np.asarray(dist.log_prob(logits, a)),
+                               np.asarray(expect), rtol=1e-6)
+    ent = dist.entropy(jnp.zeros((2, 4)))
+    np.testing.assert_allclose(np.asarray(ent), np.log(4.0), rtol=1e-5)
+
+
+def test_tanh_gaussian_samples_in_bounds_and_logprob_finite():
+    dist = TanhGaussian(-2.0, 2.0)
+    dparams = jax.random.normal(jax.random.PRNGKey(0), (64, 2))  # d=1
+    a = dist.sample(jax.random.PRNGKey(1), dparams)
+    assert a.shape == (64, 1)
+    # fp32 tanh saturates to exactly +/-1, so the bounds are closed
+    assert bool(jnp.all((a >= -2.0) & (a <= 2.0)))
+    lp = dist.log_prob(dparams, a)
+    assert lp.shape == (64,)
+    assert bool(jnp.all(jnp.isfinite(lp)))
+    assert bool(jnp.all(jnp.isfinite(dist.entropy(dparams))))
+
+
+def test_tanh_gaussian_logprob_integrates_to_one():
+    """Riemann-integrate exp(log_prob) over the support: ~1."""
+    dist = TanhGaussian(-2.0, 2.0)
+    dparams = jnp.array([0.3, -0.5])      # mu=0.3, log_std=-0.5
+    xs = jnp.linspace(-1.999, 1.999, 4001).reshape(-1, 1)
+    lp = jax.vmap(lambda x: dist.log_prob(dparams, x))(xs)
+    mass = float(jnp.sum(jnp.exp(lp)) * (xs[1, 0] - xs[0, 0]))
+    assert mass == pytest.approx(1.0, abs=2e-2)
+
+
+def test_continuous_rollout_and_ppo_loss():
+    """Pendulum actions flow through rollout + PPO without reshaping."""
+    env = make("pendulum")
+    dist = distribution_for(env.action_space)
+    params = unbox(mlp_ac_init(jax.random.PRNGKey(0), 3,
+                               head_dim(env.action_space)))
+    fn = lambda p, o: mlp_ac_apply(p, o)
+    est, obs = init_envs(env, jax.random.PRNGKey(1), 4)
+    res = jax.jit(lambda p, e, o: rollout(
+        p, env, fn, jax.random.PRNGKey(2), e, o, 16,
+        dist))(params, est, obs)
+    assert res.traj.actions.shape == (16, 4, 1)
+    batch = batch_from_traj(res.traj, res.last_value, PPOConfig())
+    (loss, stats), grads = jax.value_and_grad(ppo_loss, has_aux=True)(
+        params, fn, batch, PPOConfig(), dist)
+    assert np.isfinite(float(loss))
+    gnorm = sum(float(jnp.sum(jnp.abs(g)))
+                for g in jax.tree.leaves(grads))
+    assert gnorm > 0
 
 
 # -- GAE ----------------------------------------------------------------
@@ -272,7 +344,7 @@ def test_pack_unpack_roundtrip_error_bounded():
 def test_quantized_actor_rollout_runs():
     """Rollout under the FXP8 actor policy with int8-packed weights."""
     from repro.rl.actor_learner import collect
-    env = get_env("cartpole")
+    env = make("cartpole")
     params = unbox(mlp_ac_init(jax.random.PRNGKey(0), 4, 2))
     packed = pack_weights(params, 8)
     est, obs = init_envs(env, jax.random.PRNGKey(1), 4)
@@ -284,7 +356,7 @@ def test_quantized_actor_rollout_runs():
 
 def test_merge_results_masks_stragglers():
     from repro.rl.actor_learner import collect
-    env = get_env("cartpole")
+    env = make("cartpole")
     params = unbox(mlp_ac_init(jax.random.PRNGKey(0), 4, 2))
     packed = pack_weights(params, 8)
     results = []
