@@ -1,0 +1,117 @@
+"""Env throughput sweep: every registered env x precision x devices.
+
+For each registered environment, roll the actor fleet through
+``collect_sharded`` on a host mesh of 1..N devices with the actor
+policy at FP32 vs FxP8 (int8 weights + activations), reporting
+env-steps/s and the int8 weight-sync payload (MiB) — the fleet-level
+view of the paper's throughput claims, extending bench_rewards.py
+beyond cartpole.
+
+Standalone (8 forced host devices):
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python -m benchmarks.bench_env_throughput
+
+or via the orchestrator: ``python -m benchmarks.run --only env_throughput``.
+"""
+from __future__ import annotations
+
+import argparse
+import math
+
+import jax
+
+from benchmarks.common import emit, timeit
+from repro.core.policy import get_policy
+from repro.launch.mesh import describe, make_host_mesh
+from repro.nn.module import unbox
+from repro.rl import init_envs
+from repro.rl.actor_learner import collect_sharded, pack_weights, sync_bytes
+from repro.rl.envs import make, registered
+from repro.rl.envs.spaces import head_dim
+from repro.rl.envs.wrappers import ensure_vector_obs
+from repro.rl.nets import mlp_ac_apply, mlp_ac_init
+
+
+def _device_counts():
+    """1, the full host, and powers of two in between."""
+    n = len(jax.devices())
+    counts, c = [], 1
+    while c < n:
+        counts.append(c)
+        c *= 2
+    counts.append(n)
+    return counts
+
+
+def bench_one(env_name: str, policy_name: str, n_dev: int,
+              n_envs: int, rollout_len: int) -> float:
+    env = ensure_vector_obs(make(env_name))
+    policy = get_policy(policy_name) if policy_name != "fp32" else None
+    params = unbox(mlp_ac_init(jax.random.PRNGKey(0), env.obs_shape[0],
+                               head_dim(env.action_space)))
+    packed = pack_weights(params, 8 if policy else 32)
+    payload, fp32_eq = sync_bytes(packed)
+    mesh = make_host_mesh(n_dev)
+    est, obs = init_envs(env, jax.random.PRNGKey(1), n_envs, mesh=mesh)
+
+    fn = jax.jit(lambda packed, key, est, obs: collect_sharded(
+        packed, env, mlp_ac_apply, policy, key, est, obs, rollout_len,
+        mesh))
+    sec = timeit(fn, packed, jax.random.PRNGKey(2), est, obs,
+                 warmup=1, iters=5)
+    steps_per_s = n_envs * rollout_len / sec
+    emit("env_throughput", f"{env_name}/{policy_name}/{n_dev}dev",
+         env=env_name, policy=policy_name, devices=n_dev,
+         n_envs=n_envs, rollout_len=rollout_len,
+         steps_per_s=int(steps_per_s),
+         sync_mib=round(payload / 2**20, 4),
+         sync_fp32_mib=round(fp32_eq / 2**20, 4))
+    return steps_per_s
+
+
+def run(fast: bool = True, n_envs: int = 0, rollout_len: int = 0,
+        device_counts=None):
+    counts = list(device_counts or _device_counts())
+    n_envs = n_envs or (512 if fast else 4096)
+    rollout_len = rollout_len or (64 if fast else 256)
+    # every leg of the sweep needs n_envs % n_dev == 0
+    lcm = math.lcm(*counts)
+    n_envs = max(lcm, n_envs - n_envs % lcm)
+    print(f"{describe(make_host_mesh())}; sweeping devices={counts}, "
+          f"n_envs={n_envs}, rollout_len={rollout_len}")
+    for env_name in registered():
+        for policy_name in ("fp32", "fxp8"):
+            results = {n_dev: bench_one(env_name, policy_name, n_dev,
+                                        n_envs, rollout_len)
+                       for n_dev in counts}
+            if 1 in results:             # only meaningful vs 1 device
+                for n_dev in counts:
+                    if n_dev != 1:
+                        emit("env_throughput_scaling",
+                             f"{env_name}/{policy_name}/{n_dev}dev",
+                             speedup_vs_1dev=round(
+                                 results[n_dev] / results[1], 2))
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--n-envs", type=int, default=0)
+    ap.add_argument("--rollout-len", type=int, default=0)
+    ap.add_argument("--device-counts", default=None,
+                    help="comma-separated, e.g. 1,8 (default: powers of "
+                         "two up to the host device count)")
+    ap.add_argument("--csv", default=None)
+    args = ap.parse_args(argv)
+    counts = ([int(c) for c in args.device_counts.split(",")]
+              if args.device_counts else None)
+    run(fast=not args.full, n_envs=args.n_envs,
+        rollout_len=args.rollout_len, device_counts=counts)
+    if args.csv:
+        from benchmarks.common import dump_csv
+        dump_csv(args.csv)
+
+
+if __name__ == "__main__":
+    main()

@@ -3,20 +3,23 @@
     PYTHONPATH=src python -m benchmarks.run [--only qmac,vact,...]
                                             [--full] [--csv out.csv]
 
-  qmac     Table II/III  Q-MAC precision->throughput/energy scaling
-  vact     Table IV      V-ACT CORDIC accuracy/latency per AF+precision
-  arch     Table V       E2HRL agent FPS/energy per precision + sync
-  rewards  Fig. 3a       FP32 vs Q8 reward parity (PPO/A2C/DQN)
-  lm       Sec. IV       the fabric generalized to LM train/serve
-  roofline §Roofline     dry-run derived terms (needs dryrun JSON)
+  qmac        Table II/III  Q-MAC precision->throughput/energy scaling
+  vact        Table IV      V-ACT CORDIC accuracy/latency per AF+precision
+  arch        Table V       E2HRL agent FPS/energy per precision + sync
+  rewards     Fig. 3a       FP32 vs Q8 reward parity (PPO/A2C/DQN)
+  env_throughput  Fig. 2    sharded-fleet env-steps/s: every registered
+                            env x fp32/fxp8 x device count + sync MiB
+  lm          Sec. IV       the fabric generalized to LM train/serve
+  roofline    §Roofline     dry-run derived terms (needs dryrun JSON)
 """
 from __future__ import annotations
 
 import argparse
 import time
 
-from benchmarks import (bench_arch, bench_lm, bench_qmac,
-                        bench_rewards, bench_roofline, bench_vact)
+from benchmarks import (bench_arch, bench_env_throughput, bench_lm,
+                        bench_qmac, bench_rewards, bench_roofline,
+                        bench_vact)
 from benchmarks.common import dump_csv
 
 SUITES = {
@@ -24,6 +27,7 @@ SUITES = {
     "vact": lambda full: bench_vact.run(),
     "arch": lambda full: bench_arch.run(),
     "rewards": lambda full: bench_rewards.run(fast=not full),
+    "env_throughput": lambda full: bench_env_throughput.run(fast=not full),
     "lm": lambda full: bench_lm.run(),
     "roofline": lambda full: bench_roofline.run(),
 }

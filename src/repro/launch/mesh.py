@@ -2,7 +2,11 @@
 this module never touches jax device state)."""
 from __future__ import annotations
 
+from typing import Optional
+
 import jax
+import numpy as np
+from jax.sharding import Mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -11,11 +15,20 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
-def make_host_mesh():
-    """Whatever this host has (1 CPU device in the container) — used by
-    the runnable examples and the smoke training loop."""
-    n = len(jax.devices())
-    return jax.make_mesh((n, 1), ("data", "model"))
+def make_host_mesh(n_devices: Optional[int] = None):
+    """Whatever this host has (1 CPU device in the container, N under
+    ``--xla_force_host_platform_device_count=N``) — used by the runnable
+    examples, the RL training loop and the throughput benchmarks.
+
+    ``n_devices`` restricts the mesh to the first N devices (so a single
+    benchmark process can sweep device counts).
+    """
+    devs = jax.devices()
+    n = len(devs) if n_devices is None else n_devices
+    if not 1 <= n <= len(devs):
+        raise ValueError(f"n_devices={n_devices} but this host exposes "
+                         f"{len(devs)} device(s)")
+    return Mesh(np.asarray(devs[:n]).reshape(n, 1), ("data", "model"))
 
 
 def describe(mesh) -> str:

@@ -4,10 +4,18 @@ learner + int8 weight sync (the paper's Fig. 2 system).
     PYTHONPATH=src python -m repro.launch.rl_train --env cartpole \
         --iters 40 --actor-policy fxp8 [--agent hrl] [--two-stage]
 
-The actor fleet is a vectorized batch of environments; each "actor" is
-a slice running under a (possibly stale, possibly quantized) copy of
-the learner weights.  The learner updates with PPO.  Checkpoints make
-the loop restart-safe.
+The actor fleet is shard_map'd over the data axes of a real device mesh
+(``--mesh host`` by default — whatever this host exposes, e.g. 8 CPU
+devices under ``XLA_FLAGS=--xla_force_host_platform_device_count=8``;
+``--mesh production`` for the 16x16 pod shape).  Each device dequantizes
+the broadcast int8 weight sync locally and rolls ``n_envs/n_devices``
+environments; per-device trajectories come back as one global batch
+whose per-device slots carry a liveness mask into the PPO loss (and out
+of the advantage statistics).  This synchronous driver always reports
+every slot alive — an async aggregator only has to flip mask bits to
+drop a straggler, it never has to reshape the loss.  The learner
+updates with PPO.  Checkpoints make the loop restart-safe (including
+mid-stage restarts of ``--two-stage`` runs).
 """
 from __future__ import annotations
 
@@ -21,13 +29,14 @@ import jax.numpy as jnp
 from repro.checkpoint import CheckpointManager
 from repro.configs.e2hrl import HRLConfig
 from repro.core.policy import get_policy
+from repro.distributed.sharding import data_axis_size
+from repro.launch.mesh import describe, make_host_mesh, make_production_mesh
 from repro.models import hrl
 from repro.nn.module import unbox
 from repro.optim import AdamWConfig, adamw_init, adamw_update, constant
-from repro.rl import PPOConfig, batch_from_traj, init_envs, rollout
-from repro.rl.actor_learner import (ActorLearnerConfig, VersionBuffer,
-                                    pack_weights, sync_bytes,
-                                    unpack_weights)
+from repro.rl import PPOConfig, batch_from_traj, init_envs
+from repro.rl.actor_learner import (VersionBuffer, collect_sharded,
+                                    fleet_mask, pack_weights, sync_bytes)
 from repro.rl.dists import distribution_for
 from repro.rl.envs import Environment, make, registered
 from repro.rl.envs.spaces import head_dim
@@ -63,52 +72,110 @@ def make_agent(agent: str, env: Environment, key,
     return params, apply_fn
 
 
+def build_mesh(mesh_kind: str = "host",
+               mesh_devices: Optional[int] = None):
+    if mesh_kind == "production":
+        if mesh_devices is not None:
+            raise ValueError("--mesh-devices restricts the host mesh "
+                             "only; the production mesh shape is fixed")
+        return make_production_mesh()
+    if mesh_kind == "host":
+        return make_host_mesh(mesh_devices)
+    raise ValueError(f"unknown mesh kind {mesh_kind!r} "
+                     "(expected 'host' or 'production')")
+
+
 def rl_train(env_name: str = "cartpole", agent: str = "mlp",
              iters: int = 40, n_envs: int = 32, rollout_len: int = 128,
              actor_policy: Optional[str] = "fxp8", lr: float = 3e-3,
              comm_bits: int = 8, max_lag: int = 1, seed: int = 0,
              two_stage: bool = False, ckpt_dir: Optional[str] = None,
+             save_every: int = 10, mesh_kind: str = "host",
+             mesh_devices: Optional[int] = None,
              log_every: int = 5, verbose: bool = True):
+    if two_stage and agent != "hrl":
+        raise ValueError("--two-stage trains the HRL sub-goal curriculum "
+                         "and requires --agent hrl")
     env = make(env_name)
     dist = distribution_for(env.action_space)
     key = jax.random.PRNGKey(seed)
     params, apply_fn = make_agent(agent, env, key, actor_policy)
     a_policy = get_policy(actor_policy) if actor_policy else None
 
+    if mesh_kind == "host" and mesh_devices is None:
+        # default: the largest device prefix that divides n_envs, so
+        # odd host device counts degrade to fewer slots instead of
+        # failing (explicit --mesh-devices keeps the hard error below)
+        mesh_devices = len(jax.devices())
+        while mesh_devices > 1 and n_envs % mesh_devices != 0:
+            mesh_devices -= 1
+    mesh = build_mesh(mesh_kind, mesh_devices)
+    n_slots = data_axis_size(mesh)
+    if n_envs % n_slots != 0:
+        raise ValueError(f"--n-envs {n_envs} must be divisible by the "
+                         f"mesh's {n_slots} data slot(s)")
+    if verbose:
+        print(f"{describe(mesh)}: {n_slots} actor slot(s) x "
+              f"{n_envs // n_slots} envs")
+
     opt = adamw_init(params)
     ocfg = AdamWConfig(weight_decay=0.0, max_grad_norm=0.5)
     pcfg = PPOConfig()
     sched = constant(lr)
+    stage_list = (["action", "subgoal"] if two_stage else [None])
+    stage_names = [s or "all" for s in stage_list]
     start = 0
     mgr = None
     if ckpt_dir:
-        mgr = CheckpointManager(ckpt_dir, keep=2, save_every=10)
+        mgr = CheckpointManager(ckpt_dir, keep=2, save_every=save_every)
         if mgr.latest_step() is not None:
             (params, opt), md = mgr.restore((params, opt))
-            start = int(md.get("step", 0))
+            md_stage = str(md.get("stage", "all"))
+            if md_stage not in stage_names:
+                raise ValueError(
+                    f"checkpoint in {ckpt_dir} was saved in stage "
+                    f"{md_stage!r} but this run's stages are "
+                    f"{stage_names} — relaunch with the original "
+                    "--two-stage/--agent flags")
+            # the checkpoint holds post-update state for its step, so
+            # training continues at the NEXT step (re-running the saved
+            # one would apply its optimizer update twice); the global
+            # step is rebuilt from the recorded (stage, stage_iter) so
+            # a changed --iters cannot land the resume in the wrong
+            # stage
+            it = int(md.get("stage_iter", md.get("step", 0)))
+            # clamp for a shrunken --iters: the recorded stage already
+            # met the new budget, so continue at the next stage rather
+            # than skipping past the end of the whole run
+            start = stage_names.index(md_stage) * iters + min(it + 1,
+                                                              iters)
             if verbose:
-                print(f"resumed from iter {start}")
+                print(f"resumed at global iter {start} "
+                      f"(stage {md_stage}, iter {it} done)")
 
-    est, obs = init_envs(env, jax.random.PRNGKey(seed + 1), n_envs)
+    est, obs = init_envs(env, jax.random.PRNGKey(seed + 1), n_envs,
+                         mesh=mesh)
     versions = VersionBuffer(max_lag)
     learner_apply = lambda p, o: apply_fn(p, o, None)
+    # synchronous driver: every device delivers; the mask still flows
+    # through the loss so an async aggregator only has to flip bits
+    alive = jnp.ones((n_slots,), bool)
 
     total_sync_payload = 0
 
     @jax.jit
-    def iteration(params, opt, est, obs, packed, key):
+    def iteration(params, opt, est, obs, packed, key, gmask, alive):
         k1, k2 = jax.random.split(key)
-        actor_params = unpack_weights(packed)
-        actor_apply = lambda p, o: apply_fn(p, o, a_policy)
-        res = rollout(actor_params, env, actor_apply, k1, est, obs,
-                      rollout_len, dist)
-        batch = batch_from_traj(res.traj, res.last_value, pcfg)
+        res = collect_sharded(packed, env, apply_fn, a_policy, k1, est,
+                              obs, rollout_len, mesh, dist)
+        mask = fleet_mask(alive, n_envs // n_slots)
+        batch = batch_from_traj(res.traj, res.last_value, pcfg,
+                                actor_mask=mask)
 
         def opt_step(p, s, g):
             p, s, _ = adamw_update(g, s, p, sched, ocfg)
             return p, s
 
-        gmask = None
         params, opt, stats = minibatch_epochs(
             k2, params, opt, batch, learner_apply, pcfg, opt_step,
             grad_mask=gmask, dist=dist)
@@ -117,10 +184,14 @@ def rl_train(env_name: str = "cartpole", agent: str = "mlp",
 
     history = []
     t0 = time.time()
-    stage_list = (["action", "subgoal"] if two_stage and agent == "hrl"
-                  else [None])
-    for stage in stage_list:
-        for it in range(start, iters):
+    for si, stage in enumerate(stage_list):
+        # the stage grad-mask actually freezes the off-stage subtree
+        # (zero grads keep adam state at zero -> bitwise-frozen params)
+        gmask = stage_mask(params, stage) if stage else None
+        for it in range(iters):
+            g = si * iters + it   # global step: stages never collide
+            if g < start:
+                continue          # resume lands mid-stage, not at stage 1
             # learner -> actors: quantized weight sync (staleness-aware)
             packed = pack_weights(params, comm_bits)
             versions.push(packed)
@@ -129,7 +200,7 @@ def rl_train(env_name: str = "cartpole", agent: str = "mlp",
             total_sync_payload += payload
             key, sub = jax.random.split(key)
             params, opt, est, obs, ret, n_ep = iteration(
-                params, opt, est, obs, stale, sub)
+                params, opt, est, obs, stale, sub, gmask, alive)
             history.append(float(ret))
             if verbose and (it % log_every == 0 or it == iters - 1):
                 sfx = f" [stage={stage}]" if stage else ""
@@ -137,8 +208,10 @@ def rl_train(env_name: str = "cartpole", agent: str = "mlp",
                       f"episodes {int(n_ep):4d}  "
                       f"sync {payload / 2**20:.2f} MiB "
                       f"(fp32 {fp32_eq / 2**20:.2f}){sfx}")
-            if mgr and mgr.should_save(it):
-                mgr.save(it, (params, opt))
+            if mgr and mgr.should_save(g):
+                mgr.save(g, (params, opt),
+                         metadata={"stage": stage or "all",
+                                   "stage_iter": it})
     if verbose:
         print(f"done in {time.time() - t0:.0f}s; "
               f"total sync payload {total_sync_payload / 2**20:.1f} MiB")
@@ -160,12 +233,19 @@ def main(argv=None):
     ap.add_argument("--lr", type=float, default=3e-3)
     ap.add_argument("--two-stage", action="store_true")
     ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--save-every", type=int, default=10)
+    ap.add_argument("--mesh", default="host",
+                    choices=["host", "production"])
+    ap.add_argument("--mesh-devices", type=int, default=None,
+                    help="restrict the host mesh to the first N devices")
     args = ap.parse_args(argv)
     rl_train(args.env, args.agent, args.iters, args.n_envs,
              args.rollout_len,
              None if args.fp32_actors else args.actor_policy,
              args.lr, args.comm_bits, args.max_lag,
-             two_stage=args.two_stage, ckpt_dir=args.ckpt_dir)
+             two_stage=args.two_stage, ckpt_dir=args.ckpt_dir,
+             save_every=args.save_every, mesh_kind=args.mesh,
+             mesh_devices=args.mesh_devices)
 
 
 if __name__ == "__main__":

@@ -1,3 +1,6 @@
+from repro.rl.actor_learner import (collect, collect_sharded, fleet_mask,
+                                    merge_results, pack_weights,
+                                    sync_bytes, unpack_weights)
 from repro.rl.dists import (ActionDist, Categorical, TanhGaussian,
                             distribution_for)
 from repro.rl.envs import Environment, EnvSpec, make, register, registered

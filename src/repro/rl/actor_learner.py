@@ -14,9 +14,11 @@ Policy lag: a FIFO of the last ``max_lag`` packed versions lets actors
 run k versions stale (asynchrony without an actual async runtime — the
 math, staleness and payloads are faithful; transport is jit-internal).
 
-On the production mesh the actor fleet is shard_map'd over the data
-axes, so each device hosts B/n_devices environments; see
-launch/rl_train.py.
+On a real mesh the actor fleet is shard_map'd over the data axes by
+``collect_sharded``: the packed int8 weights are broadcast once per
+sync, each device dequantizes locally and rolls B/n_devices
+environments, and the outputs come back as one global (batch-sharded)
+``RolloutResult`` — see launch/rl_train.py for the driver.
 """
 from __future__ import annotations
 
@@ -25,12 +27,14 @@ from typing import Callable, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.fxp import QTensor
 from repro.core.policy import QuantPolicy
 from repro.core.quantizer import (dequantize_params, quantize_params,
                                   quantized_nbytes)
-from repro.rl.dists import ActionDist
+from repro.distributed.sharding import data_axes, data_axis_size, shard_map
+from repro.rl.dists import ActionDist, distribution_for
 from repro.rl.envs.base import Environment
 from repro.rl.rollout import RolloutResult, rollout
 
@@ -96,6 +100,12 @@ def collect(packed, env: Environment, apply_fn: Callable,
     return rollout(params, env, fn, key, env_state, obs, n_steps, dist)
 
 
+def fleet_mask(alive: Array, envs_per_slot: int) -> Array:
+    """Env-level float mask [n_slots * envs_per_slot] from a per-slot
+    liveness vector (slot = actor in the emulation, device on a mesh)."""
+    return jnp.repeat(alive.astype(jnp.float32), envs_per_slot)
+
+
 def merge_results(results: List[RolloutResult],
                   alive: Array) -> Tuple[RolloutResult, Array]:
     """Stack per-actor results along the env axis; return (merged,
@@ -103,13 +113,71 @@ def merge_results(results: List[RolloutResult],
 
     ``alive`` [n_actors] bool — False marks a straggler whose batch is
     present (shape-stable) but masked to zero weight.
+
+    The merged result honors the full ``RolloutResult`` contract: the
+    env-state leaves are tree-concatenated along the env axis, so the
+    merged ``final_env``/``final_obs`` resume collection directly.
     """
     traj = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=1),
                         *[r.traj for r in results])
     last_value = jnp.concatenate([r.last_value for r in results])
+    final_env = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0),
+                             *[r.final_env for r in results])
     n_envs = results[0].last_value.shape[0]
-    mask = jnp.repeat(alive.astype(jnp.float32), n_envs)
-    merged = RolloutResult(traj, last_value,
-                           [r.final_env for r in results],
+    mask = fleet_mask(alive, n_envs)
+    merged = RolloutResult(traj, last_value, final_env,
                            jnp.concatenate([r.final_obs for r in results]))
     return merged, mask
+
+
+# -- sharded execution on a device mesh --------------------------------------
+
+def collect_sharded(packed, env: Environment, apply_fn: Callable,
+                    actor_policy: Optional[QuantPolicy], key: Array,
+                    env_state, obs, n_steps: int, mesh: Mesh,
+                    dist: Optional[ActionDist] = None) -> RolloutResult:
+    """shard_map the actor fleet over the mesh's data axes.
+
+    Global [B, ...] ``env_state``/``obs`` in, one global (batch-sharded)
+    ``RolloutResult`` out.  The packed int8 weights and the key are
+    broadcast; device ``d`` dequantizes locally and rolls envs
+    ``[d*B/n, (d+1)*B/n)`` under the stream ``fold_in(key, d)`` — so the
+    per-device RNG streams are independent by construction, and on a
+    1-device mesh the result is bit-identical to
+    ``collect(..., key=fold_in(key, 0), ...)``.
+    """
+    axes = data_axes(mesh)
+    if not axes:
+        raise ValueError(f"mesh {mesh.axis_names} has no data axes to "
+                         "shard the actor fleet over")
+    n_slots = data_axis_size(mesh)
+    B = jax.tree.leaves(obs)[0].shape[0]
+    if B % n_slots != 0:
+        raise ValueError(
+            f"n_envs={B} does not divide evenly over the mesh's "
+            f"{n_slots} data slot(s) "
+            f"({dict(zip(mesh.axis_names, mesh.devices.shape))})")
+    if dist is None:
+        dist = distribution_for(env.action_space)
+
+    def slot_index():
+        idx = jax.lax.axis_index(axes[0])
+        for a in axes[1:]:
+            idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
+        return idx
+
+    def body(packed, key, est, obs):
+        key = jax.random.fold_in(key, slot_index())
+        return collect(packed, env, apply_fn, actor_policy, key, est, obs,
+                       n_steps, dist)
+
+    batch = P(axes)             # env axis (axis 0) over the data axes
+    time_major = P(None, axes)  # trajectory leaves are [T, B, ...]
+    fn = shard_map(body, mesh=mesh,
+                   in_specs=(P(), P(), batch, batch),
+                   out_specs=RolloutResult(traj=time_major,
+                                           last_value=batch,
+                                           final_env=batch,
+                                           final_obs=batch),
+                   check_replication=False)
+    return fn(packed, key, env_state, obs)

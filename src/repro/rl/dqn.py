@@ -44,17 +44,30 @@ def replay_init(capacity: int, obs_shape) -> Replay:
 
 
 def replay_add(buf: Replay, obs, action, reward, next_obs, done) -> Replay:
-    """Add a batch of B transitions (contiguous circular write)."""
+    """Add a batch of B transitions (contiguous circular write).
+
+    ``B >= capacity`` keeps exactly the last ``capacity`` transitions:
+    a full-batch write would produce duplicate scatter indices, whose
+    write order XLA leaves unspecified, so the survivors are sliced out
+    first and the scatter indices stay unique (deterministic).
+    """
     B = obs.shape[0]
     cap = buf.obs.shape[0]
-    idx = (buf.ptr + jnp.arange(B)) % cap
+    ptr = buf.ptr
+    if B >= cap:
+        drop = B - cap
+        obs, action, reward, next_obs, done = (
+            x[drop:] for x in (obs, action, reward, next_obs, done))
+        ptr = ptr + drop        # slots the dropped prefix would have used
+        B = cap
+    idx = (ptr + jnp.arange(B)) % cap
     return Replay(
         buf.obs.at[idx].set(obs),
         buf.actions.at[idx].set(action),
         buf.rewards.at[idx].set(reward),
         buf.next_obs.at[idx].set(next_obs),
         buf.dones.at[idx].set(done),
-        (buf.ptr + B) % cap,
+        (ptr + B) % cap,
         jnp.minimum(buf.size + B, cap),
     )
 

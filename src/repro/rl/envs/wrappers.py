@@ -94,6 +94,16 @@ def flatten_observation(env: Environment) -> Environment:
     return env.replace(spec=spec, reset=reset, step=step)
 
 
+def ensure_vector_obs(env: Environment) -> Environment:
+    """The MLP-policy view of any env: identity for vector observations,
+    ``flatten_observation`` for image grids.  The one place the
+    'what can an MLP agent consume' rule lives — benchmarks and tests
+    share it rather than re-deriving the shape check."""
+    if len(env.obs_shape) == 1:
+        return env
+    return flatten_observation(env)
+
+
 # ---------------------------------------------------------------------------
 # time limit
 # ---------------------------------------------------------------------------

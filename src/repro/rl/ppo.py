@@ -87,12 +87,23 @@ def batch_from_traj(traj: Trajectory, last_value: Array,
     """GAE over [T, B] then flatten to [T*B, ...].
 
     ``actor_mask`` [B] (1 = actor delivered, 0 = straggler/dead): masked
-    actors contribute zero loss — the aggregator's timeout semantics.
+    actors contribute zero loss — the aggregator's timeout semantics —
+    and are excluded from the advantage-normalization statistics so a
+    dead slot's stale trajectory cannot skew the live envs' updates.
     """
     advs, rets = gae(traj.rewards, traj.values, traj.dones, last_value,
                      cfg.gamma, cfg.lam)
     if cfg.normalize_adv:
-        advs = normalize(advs)
+        if actor_mask is not None:
+            w = jnp.broadcast_to(actor_mask[None].astype(jnp.float32),
+                                 advs.shape)
+            n = jnp.maximum(w.sum(), 1.0)
+            mu = (advs * w).sum() / n
+            std = jnp.sqrt(jnp.maximum(
+                (jnp.square(advs - mu) * w).sum() / n, 0.0))
+            advs = (advs - mu) / (std + 1e-8)
+        else:
+            advs = normalize(advs)
     T, B = traj.rewards.shape
     flat = lambda x: x.reshape((T * B,) + x.shape[2:])
     batch = {

@@ -36,9 +36,18 @@ class RolloutResult(NamedTuple):
     final_obs: Array
 
 
-def init_envs(env: Environment, key: Array, n_envs: int):
+def init_envs(env: Environment, key: Array, n_envs: int, mesh=None):
+    """Reset ``n_envs`` environments; with ``mesh``, place every state
+    leaf sharded over the mesh's data axes (env axis 0) so the sharded
+    collection path starts without a reshard."""
     keys = jax.random.split(key, n_envs)
     state, obs = jax.vmap(env.reset)(keys)
+    if mesh is not None:
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.distributed.sharding import data_axes
+        sharding = NamedSharding(mesh, P(data_axes(mesh) or None))
+        state, obs = jax.tree.map(
+            lambda x: jax.device_put(x, sharding), (state, obs))
     return state, obs
 
 

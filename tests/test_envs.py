@@ -27,9 +27,7 @@ ALL_ENVS = registered()
 
 def _vectorized(env: Environment) -> Environment:
     """MLP-policy view: ravel image observations."""
-    if len(env.obs_shape) == 1:
-        return env
-    return wrappers.flatten_observation(env)
+    return wrappers.ensure_vector_obs(env)
 
 
 # ---------------------------------------------------------------------------

@@ -18,7 +18,8 @@ from repro.rl.envs import Box, Discrete, Environment, make
 from repro.rl.envs.spaces import head_dim
 from repro.rl.nets import (mlp_ac_apply, mlp_ac_init, mlp_q_apply,
                            mlp_q_init)
-from repro.rl.ppo import a2c_loss, apply_stage_mask, ppo_loss, stage_mask
+from repro.rl.ppo import (a2c_loss, apply_stage_mask, minibatch_epochs,
+                          ppo_loss, stage_mask)
 from repro.rl.rollout import episode_returns
 
 
@@ -275,6 +276,93 @@ def test_stage_mask_freezes_subgoal():
     assert float(jnp.sum(g2["action"]["w"])) == 0
 
 
+def test_two_stage_grad_mask_freezes_offstage_subtree():
+    """The exact wiring rl_train --two-stage uses: minibatch_epochs with
+    a stage_mask grad mask bitwise-freezes the off-stage subtree while
+    the on-stage subtrees train (param-delta test on the real agent)."""
+    from repro.launch.rl_train import make_agent
+    from repro.optim import AdamWConfig, adamw_init, adamw_update, constant
+
+    env = make("catch")                      # smallest image env
+    dist = distribution_for(env.action_space)
+    params, apply_fn = make_agent("hrl", env, jax.random.PRNGKey(0), None)
+    fn = lambda p, o: apply_fn(p, o, None)
+    est, obs = init_envs(env, jax.random.PRNGKey(1), 4)
+    res = rollout(params, env, fn, jax.random.PRNGKey(2), est, obs, 8,
+                  dist)
+    batch = batch_from_traj(res.traj, res.last_value, PPOConfig())
+    opt = adamw_init(params)
+    sched = constant(3e-3)
+    ocfg = AdamWConfig(weight_decay=0.0, max_grad_norm=0.5)
+
+    def opt_step(p, s, g):
+        p, s, _ = adamw_update(g, s, p, sched, ocfg)
+        return p, s
+
+    for stage, frozen, trained in (("action", "subgoal", "action"),
+                                   ("subgoal", "action", "subgoal")):
+        gmask = stage_mask(params, stage)
+        new_params, _, _ = minibatch_epochs(
+            jax.random.PRNGKey(3), params, opt, batch, fn, PPOConfig(),
+            opt_step, grad_mask=gmask, dist=dist)
+        for a, b in zip(jax.tree.leaves(params[frozen]),
+                        jax.tree.leaves(new_params[frozen])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        delta = sum(float(jnp.sum(jnp.abs(a - b)))
+                    for a, b in zip(jax.tree.leaves(params[trained]),
+                                    jax.tree.leaves(new_params[trained])))
+        assert delta > 0, f"stage {stage} did not train {trained}"
+
+
+def test_two_stage_checkpoint_records_stage_and_resumes_in_stage(
+        tmp_path, capsys):
+    """Two-stage steps are namespaced (g = stage*iters + it) and tagged
+    with the stage, so a resume lands mid-stage-2 instead of silently
+    restarting stage 1."""
+    from repro.checkpoint import CheckpointManager
+    from repro.launch.rl_train import make_agent, rl_train
+    from repro.optim import adamw_init
+
+    d = str(tmp_path / "ck")
+    kw = dict(env_name="catch", agent="hrl", iters=2, n_envs=4,
+              rollout_len=4, two_stage=True, ckpt_dir=d, save_every=1)
+    rl_train(verbose=False, **kw)
+    capsys.readouterr()
+
+    mgr = CheckpointManager(d)
+    assert mgr.latest_step() == 3            # 2 stages x 2 iters - 1
+    env = make("catch")
+    params, _ = make_agent("hrl", env, jax.random.PRNGKey(0), "fxp8")
+    (_, _), md = mgr.restore((params, adamw_init(params)))
+    assert md["stage"] == "subgoal"
+    assert md["stage_iter"] == 1
+
+    # simulate preemption right after g=2 (stage 2, iter 0) and
+    # relaunch with the same command line: must resume inside stage 2
+    # at g=3, never re-running stage 1 or the checkpointed step
+    import os
+    for sfx in (".npz", ".npz.json"):
+        os.unlink(os.path.join(d, f"step_3{sfx}"))
+    _, hist = rl_train(verbose=True, **kw)
+    out = capsys.readouterr().out
+    assert "resumed at global iter 3 (stage subgoal, iter 0 done)" in out
+    assert "[stage=action]" not in out
+    assert "[stage=subgoal]" in out
+    assert len(hist) == 1                    # exactly the missing iter
+
+    # resuming a two-stage checkpoint without --two-stage must refuse
+    # loudly, not silently reinterpret the step in single-stage terms
+    with pytest.raises(ValueError, match="saved in stage"):
+        rl_train(verbose=False, **{**kw, "two_stage": False})
+
+
+def test_two_stage_requires_hrl_agent():
+    from repro.launch.rl_train import rl_train
+    with pytest.raises(ValueError, match="requires --agent hrl"):
+        rl_train(env_name="cartpole", agent="mlp", iters=1,
+                 two_stage=True, verbose=False)
+
+
 def test_masked_batch_zeroes_straggler_loss():
     """A batch whose mask is all-zero produces zero pg/v loss."""
     from repro.rl.rollout import Trajectory
@@ -306,6 +394,32 @@ def test_replay_circular_and_sample():
     assert int(buf.size) == 8 and int(buf.ptr) == 4   # wrapped
     s = replay_sample(buf, jax.random.PRNGKey(0), 16)
     assert s["obs"].shape == (16, 4)
+
+
+def test_replay_add_overflow_keeps_last_capacity_deterministically():
+    """B >= capacity: only the newest `capacity` transitions survive, at
+    well-defined slots (duplicate scatter indices have unspecified write
+    order in XLA — the overflow path must never produce them)."""
+    cap = 4
+    buf = replay_init(cap, (1,))
+    obs = jnp.arange(6.0).reshape(6, 1)
+    add = jax.jit(replay_add)
+    buf = add(buf, obs, jnp.arange(6, dtype=jnp.int32), jnp.arange(6.0),
+              obs + 100.0, jnp.zeros(6, bool))
+    assert int(buf.size) == cap
+    assert int(buf.ptr) == 6 % cap            # ptr advances by full B
+    # transitions 2..5 land at slots (0+2..5) % 4 = [2, 3, 0, 1]
+    np.testing.assert_array_equal(np.asarray(buf.obs[:, 0]),
+                                  [4.0, 5.0, 2.0, 3.0])
+    np.testing.assert_array_equal(np.asarray(buf.actions), [4, 5, 2, 3])
+    np.testing.assert_array_equal(np.asarray(buf.next_obs[:, 0]),
+                                  [104.0, 105.0, 102.0, 103.0])
+    # and a non-zero ptr start still wraps correctly
+    buf = add(buf, obs, jnp.arange(6, dtype=jnp.int32), jnp.arange(6.0),
+              obs, jnp.zeros(6, bool))
+    assert int(buf.ptr) == (6 + 6) % cap
+    np.testing.assert_array_equal(np.asarray(buf.obs[:, 0]),
+                                  [2.0, 3.0, 4.0, 5.0])
 
 
 def test_dqn_loss_and_epsilon_schedule():
@@ -368,3 +482,36 @@ def test_merge_results_masks_stragglers():
     assert merged.traj.rewards.shape == (8, 12)
     np.testing.assert_array_equal(
         np.asarray(mask), np.repeat([1.0, 0.0, 1.0], 4))
+
+
+def test_merge_results_final_env_resumes_collection():
+    """merged.final_env honors the RolloutResult contract: env-state
+    leaves are tree-concatenated along the env axis (not a python list)
+    and resume a rollout at the merged fleet size."""
+    from repro.rl.actor_learner import collect, unpack_weights
+    env = make("cartpole")
+    params = unbox(mlp_ac_init(jax.random.PRNGKey(0), 4, 2))
+    packed = pack_weights(params, 8)
+    results, states = [], []
+    for i in range(2):
+        est, obs = init_envs(env, jax.random.PRNGKey(i), 4)
+        results.append(collect(packed, env, mlp_ac_apply, FXP8,
+                               jax.random.PRNGKey(10 + i), est, obs, 8))
+        states.append(results[-1].final_env)
+    merged, _ = merge_results(results, jnp.array([True, True]))
+    # same tree structure as a batched env state, leaves stacked [8, ...]
+    assert (jax.tree.structure(merged.final_env)
+            == jax.tree.structure(states[0]))
+    for leaf, a, b in zip(jax.tree.leaves(merged.final_env),
+                          jax.tree.leaves(states[0]),
+                          jax.tree.leaves(states[1])):
+        assert leaf.shape[0] == 8
+        np.testing.assert_array_equal(np.asarray(leaf),
+                                      np.concatenate([np.asarray(a),
+                                                      np.asarray(b)]))
+    # resume: roll the merged fleet onward without any re-reset
+    fn = lambda p, o: mlp_ac_apply(p, o, FXP8)
+    res = rollout(unpack_weights(packed), env, fn, jax.random.PRNGKey(7),
+                  merged.final_env, merged.final_obs, 4)
+    assert res.traj.rewards.shape == (4, 8)
+    assert np.all(np.isfinite(np.asarray(res.traj.log_probs)))
