@@ -1,29 +1,32 @@
 """Paper Fig. 3a analogue — reward parity: quantized vs FP32 actors.
 
-PPO (the paper's training algorithm), A2C and DQN on pure-JAX CartPole
-with the actor's rollout policy at FP32 vs FxP8 (int8 weights AND
-activations + V-ACT activations).  The claim under test: Q8 actors
-reach the same reward, enabling the throughput/energy savings for free.
+PPO (the paper's training algorithm) and A2C on pure-JAX CartPole, plus
+the off-policy value-based family — Double-DQN and QR-DQN on CartPole,
+TD3-style DDPG on the continuous Pendulum — with the behaviour actor's
+rollout policy at FP32 vs FxP8 (int8 weights AND activations + V-ACT
+activations).  The claim under test: Q8 actors reach the same reward,
+enabling the throughput/energy savings for free.
 
-Budgets are CPU-friendly; the criterion is parity (Q8 within ~15% of
-FP32 at equal step budget), not absolute SOTA returns.
+Value-based runs train through :func:`repro.launch.rl_train.value_train`
+(truncation-aware n-step replay, polyak targets) and report a greedy
+evaluation under the same actor precision.
+
+Budgets are CPU-friendly; the criterion is parity (Q8 close to FP32 at
+equal step budget), not absolute SOTA returns.
 """
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from benchmarks.common import emit
 from repro.core.policy import get_policy
+from repro.launch.rl_train import value_eval, value_train
 from repro.nn.module import unbox
 from repro.optim import AdamWConfig, adamw_init, adamw_update, constant
 from repro.rl import PPOConfig, batch_from_traj, init_envs, rollout
 from repro.rl.actor_learner import pack_weights, unpack_weights
-from repro.rl.dqn import (DQNConfig, dqn_loss, egreedy, epsilon,
-                          replay_add, replay_init, replay_sample)
 from repro.rl.envs import make
-from repro.rl.nets import (mlp_ac_apply, mlp_ac_init, mlp_q_apply,
-                           mlp_q_init)
+from repro.rl.nets import mlp_ac_apply, mlp_ac_init
 from repro.rl.ppo import a2c_loss, minibatch_epochs, ppo_loss
 from repro.rl.rollout import episode_returns
 
@@ -51,7 +54,9 @@ def train_pg(algo: str, actor_policy, iters: int, seed: int = 0):
             params, 8 if actor_policy else 32))
         actor_apply = lambda p, o: mlp_ac_apply(p, o, actor_policy)
         res = rollout(actor_params, ENV, actor_apply, k1, est, obs, T)
-        batch = batch_from_traj(res.traj, res.last_value, pcfg)
+        batch = batch_from_traj(
+            res.traj, res.last_value, pcfg,
+            value_fn=lambda o: learner_apply(params, o)[1])
 
         def opt_step(p, s, g):
             p, s, _ = adamw_update(g, s, p, sched, ocfg)
@@ -72,49 +77,16 @@ def train_pg(algo: str, actor_policy, iters: int, seed: int = 0):
     return sum(tail) / len(tail), rets
 
 
-def train_dqn(actor_policy, iters: int, seed: int = 0):
-    key = jax.random.PRNGKey(seed)
-    params = unbox(mlp_q_init(key, 4, ENV.spec.n_actions))
-    target = params
-    opt = adamw_init(params)
-    ocfg = AdamWConfig(weight_decay=0.0)
-    cfg = DQNConfig(eps_decay_steps=iters // 2)
-    sched = constant(1e-3)
-    buf = replay_init(8192, (4,))
-    est, obs = init_envs(ENV, jax.random.PRNGKey(seed + 1), N_ENVS)
-    returns, acc, done_cnt = [], jnp.zeros(N_ENVS), 0
-
-    @jax.jit
-    def step(params, target, opt, buf, est, obs, i, key):
-        k1, k2 = jax.random.split(key)
-        ap = unpack_weights(pack_weights(params,
-                                         8 if actor_policy else 32))
-        q = mlp_q_apply(ap, obs, actor_policy)
-        a = egreedy(k1, q, epsilon(i, cfg))
-        est2, obs2, r, d = jax.vmap(ENV.step)(est, a)
-        buf = replay_add(buf, obs, a, r, obs2, d)
-        batch = replay_sample(buf, k2, cfg.batch_size)
-        g = jax.grad(dqn_loss)(params, target,
-                               lambda p, o: mlp_q_apply(p, o, None),
-                               batch, cfg)
-        params, opt, _ = adamw_update(g, opt, params, sched, ocfg)
-        return params, opt, buf, est2, obs2, r, d
-
-    ep_returns = []
-    for i in range(iters):
-        key, sub = jax.random.split(key)
-        params, opt, buf, est, obs, r, d = step(
-            params, target, opt, buf, est, obs, jnp.asarray(i), sub)
-        acc = acc + r
-        finished = acc * d.astype(jnp.float32)
-        n = int(d.sum())
-        if n:
-            ep_returns.extend([float(x) for x in finished[d] if x > 0])
-        acc = acc * (1.0 - d.astype(jnp.float32))
-        if i % cfg.target_update_every == 0:
-            target = params
-    tail = ep_returns[-20:] or [0.0]
-    return sum(tail) / len(tail), ep_returns
+def train_value(algo: str, env_name: str, actor_policy_name, iters: int,
+                seed: int = 0):
+    """Train via the value subsystem, report a greedy eval return
+    under the same actor precision the fleet would deploy with."""
+    params, _ = value_train(algo, env_name, iters=iters, n_envs=N_ENVS,
+                            rollout_len=8, actor_policy=actor_policy_name,
+                            seed=seed, verbose=False)
+    ret, _ = value_eval(algo, env_name, params, n_envs=16,
+                        actor_policy=actor_policy_name, seed=seed)
+    return ret
 
 
 def run(fast: bool = True):
@@ -127,10 +99,12 @@ def run(fast: bool = True):
              fp32_return=round(fp32_ret, 1),
              q8_return=round(q8_ret, 1),
              parity=round(q8_ret / max(fp32_ret, 1e-9), 2))
-    dqn_iters = 1500 if fast else 4000
-    fp32_ret, _ = train_dqn(None, dqn_iters)
-    q8_ret, _ = train_dqn(fxp8, dqn_iters)
-    emit("rewards", "dqn_cartpole",
-         fp32_return=round(fp32_ret, 1),
-         q8_return=round(q8_ret, 1),
-         parity=round(q8_ret / max(fp32_ret, 1e-9), 2))
+    value_iters = 200 if fast else 600
+    for algo, env_name in (("dqn", "cartpole"), ("qrdqn", "cartpole"),
+                           ("ddpg", "pendulum")):
+        fp32_ret = train_value(algo, env_name, None, value_iters)
+        q8_ret = train_value(algo, env_name, "fxp8", value_iters)
+        emit("rewards", f"{algo}_{env_name}",
+             fp32_return=round(fp32_ret, 1),
+             q8_return=round(q8_ret, 1),
+             gap=round(q8_ret - fp32_ret, 1))

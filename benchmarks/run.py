@@ -6,7 +6,8 @@
   qmac        Table II/III  Q-MAC precision->throughput/energy scaling
   vact        Table IV      V-ACT CORDIC accuracy/latency per AF+precision
   arch        Table V       E2HRL agent FPS/energy per precision + sync
-  rewards     Fig. 3a       FP32 vs Q8 reward parity (PPO/A2C/DQN)
+  rewards     Fig. 3a       FP32 vs Q8 reward parity (PPO/A2C +
+                            DQN/QR-DQN/DDPG via the value subsystem)
   env_throughput  Fig. 2    sharded-fleet env-steps/s: every registered
                             env x fp32/fxp8 x device count + sync MiB
   lm          Sec. IV       the fabric generalized to LM train/serve

@@ -53,7 +53,9 @@ def main():
         def iteration(params, opt, est, obs, key):
             k1, k2 = jax.random.split(key)
             res = rollout(params, env, apply_fn, k1, est, obs, 64)
-            batch = batch_from_traj(res.traj, res.last_value, pcfg)
+            value_fn = lambda o: learner_fn(params, o)[1]
+            batch = batch_from_traj(res.traj, res.last_value, pcfg,
+                                    value_fn=value_fn)
 
             def opt_step(p, s, g):
                 p, s, _ = adamw_update(g, s, p, sched, ocfg)

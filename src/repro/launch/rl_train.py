@@ -2,26 +2,42 @@
 learner + int8 weight sync (the paper's Fig. 2 system).
 
     PYTHONPATH=src python -m repro.launch.rl_train --env cartpole \
-        --iters 40 --actor-policy fxp8 [--agent hrl] [--two-stage]
+        --iters 40 --actor-policy fxp8 [--algo ppo|a2c|dqn|qrdqn|ddpg] \
+        [--agent hrl] [--two-stage]
 
-The actor fleet is shard_map'd over the data axes of a real device mesh
-(``--mesh host`` by default — whatever this host exposes, e.g. 8 CPU
-devices under ``XLA_FLAGS=--xla_force_host_platform_device_count=8``;
-``--mesh production`` for the 16x16 pod shape).  Each device dequantizes
-the broadcast int8 weight sync locally and rolls ``n_envs/n_devices``
-environments; per-device trajectories come back as one global batch
-whose per-device slots carry a liveness mask into the PPO loss (and out
-of the advantage statistics).  This synchronous driver always reports
-every slot alive — an async aggregator only has to flip mask bits to
-drop a straggler, it never has to reshape the loss.  The learner
-updates with PPO.  Checkpoints make the loop restart-safe (including
-mid-stage restarts of ``--two-stage`` runs).
+Two training families share the quantized-actor/fp32-learner split:
+
+  * on-policy (``--algo ppo|a2c``): the actor fleet is shard_map'd over
+    the data axes of a real device mesh (``--mesh host`` by default —
+    whatever this host exposes, e.g. 8 CPU devices under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``; ``--mesh
+    production`` for the 16x16 pod shape).  Each device dequantizes the
+    broadcast int8 weight sync locally and rolls ``n_envs/n_devices``
+    environments; per-device trajectories come back as one global batch
+    whose per-device slots carry a liveness mask into the PPO loss (and
+    out of the advantage statistics).  This synchronous driver always
+    reports every slot alive — an async aggregator only has to flip
+    mask bits to drop a straggler, it never has to reshape the loss.
+    Truncated episodes bootstrap through the timeout (GAE consumes the
+    env's terminated/truncated split).
+  * off-policy value-based (``--algo dqn|qrdqn|ddpg``): the quantized
+    behaviour actor (epsilon-greedy Q net, or deterministic actor +
+    exploration noise for Box envs) fills a truncation-aware n-step
+    replay; the fp32 learner updates Double-DQN / QR-DQN / TD3-style
+    twin-critic DDPG against polyak target networks — see
+    :mod:`repro.rl.value`.
+
+Checkpoints make both loops restart-safe (including mid-stage restarts
+of ``--two-stage`` runs and the replay/target state of value-based
+runs).
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
-from typing import Optional
+from functools import partial
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -36,13 +52,26 @@ from repro.nn.module import unbox
 from repro.optim import AdamWConfig, adamw_init, adamw_update, constant
 from repro.rl import PPOConfig, batch_from_traj, init_envs
 from repro.rl.actor_learner import (VersionBuffer, collect_sharded,
-                                    fleet_mask, pack_weights, sync_bytes)
+                                    fleet_mask, pack_weights, sync_bytes,
+                                    unpack_weights)
 from repro.rl.dists import distribution_for
-from repro.rl.envs import Environment, make, registered
+from repro.rl.envs import Discrete, Environment, make, registered
 from repro.rl.envs.spaces import head_dim
-from repro.rl.nets import mlp_ac_apply, mlp_ac_init
-from repro.rl.ppo import minibatch_epochs, stage_mask
-from repro.rl.rollout import episode_returns
+from repro.rl.envs.wrappers import ensure_vector_obs
+from repro.rl.nets import (mlp_ac_apply, mlp_ac_init, mlp_pi_apply,
+                           mlp_pi_init, mlp_q_apply, mlp_q_init,
+                           mlp_qr_apply, mlp_qr_init, mlp_twin_q_apply,
+                           mlp_twin_q_init)
+from repro.rl.ppo import a2c_loss, minibatch_epochs, ppo_loss, stage_mask
+from repro.rl.rollout import episode_returns, episode_returns_from
+from repro.rl.value import (DDPGConfig, DQNConfig, QRDQNConfig,
+                            ddpg_actor_loss, ddpg_critic_loss, dqn_loss,
+                            egreedy, epsilon, nstep_targets, polyak,
+                            qrdqn_loss, replay_add, replay_init,
+                            replay_sample)
+
+ON_POLICY_ALGOS = ("ppo", "a2c")
+VALUE_ALGOS = ("dqn", "qrdqn", "ddpg")
 
 
 def make_agent(agent: str, env: Environment, key,
@@ -92,7 +121,12 @@ def rl_train(env_name: str = "cartpole", agent: str = "mlp",
              two_stage: bool = False, ckpt_dir: Optional[str] = None,
              save_every: int = 10, mesh_kind: str = "host",
              mesh_devices: Optional[int] = None,
-             log_every: int = 5, verbose: bool = True):
+             log_every: int = 5, verbose: bool = True,
+             algo: str = "ppo"):
+    if algo not in ON_POLICY_ALGOS:
+        raise ValueError(f"rl_train drives the on-policy family "
+                         f"{ON_POLICY_ALGOS}; use value_train for "
+                         f"{VALUE_ALGOS} (or the --algo CLI dispatch)")
     if two_stage and agent != "hrl":
         raise ValueError("--two-stage trains the HRL sub-goal curriculum "
                          "and requires --agent hrl")
@@ -120,7 +154,10 @@ def rl_train(env_name: str = "cartpole", agent: str = "mlp",
 
     opt = adamw_init(params)
     ocfg = AdamWConfig(weight_decay=0.0, max_grad_norm=0.5)
-    pcfg = PPOConfig()
+    # a2c: one pass over the whole batch, no clipping surrogate
+    pcfg = (PPOConfig() if algo == "ppo"
+            else PPOConfig(epochs=1, minibatches=1))
+    loss_fn = ppo_loss if algo == "ppo" else a2c_loss
     sched = constant(lr)
     stage_list = (["action", "subgoal"] if two_stage else [None])
     stage_names = [s or "all" for s in stage_list]
@@ -169,8 +206,11 @@ def rl_train(env_name: str = "cartpole", agent: str = "mlp",
         res = collect_sharded(packed, env, apply_fn, a_policy, k1, est,
                               obs, rollout_len, mesh, dist)
         mask = fleet_mask(alive, n_envs // n_slots)
+        # the learner's fp32 value head prices the truncation bootstrap
         batch = batch_from_traj(res.traj, res.last_value, pcfg,
-                                actor_mask=mask)
+                                actor_mask=mask,
+                                value_fn=lambda o: learner_apply(params,
+                                                                 o)[1])
 
         def opt_step(p, s, g):
             p, s, _ = adamw_update(g, s, p, sched, ocfg)
@@ -178,7 +218,7 @@ def rl_train(env_name: str = "cartpole", agent: str = "mlp",
 
         params, opt, stats = minibatch_epochs(
             k2, params, opt, batch, learner_apply, pcfg, opt_step,
-            grad_mask=gmask, dist=dist)
+            loss_fn=loss_fn, grad_mask=gmask, dist=dist)
         ret, n_ep = episode_returns(res.traj)
         return params, opt, res.final_env, res.final_obs, ret, n_ep
 
@@ -218,34 +258,384 @@ def rl_train(env_name: str = "cartpole", agent: str = "mlp",
     return params, history
 
 
+@dataclasses.dataclass
+class ValueAgent:
+    """Nets + behaviour/greedy policies for one value-based algo.
+
+    ``behave`` is the *quantized* exploration policy the actor fleet
+    runs (epsilon-greedy over Q, or deterministic actor + noise);
+    ``greedy`` is the same policy with exploration off (evaluation).
+    """
+
+    algo: str
+    cfg: object
+    params: object
+    discrete: bool
+    qvals: Optional[Callable] = None      # (p, obs, policy) -> [B, A]
+    act: Optional[Callable] = None        # (p, obs, policy) -> [B, d]
+    q_apply: Optional[Callable] = None    # raw apply for the loss
+    critic_apply: Optional[Callable] = None
+    loss_fn: Optional[Callable] = None
+
+    def behave(self, behaviour_params, obs, key, eps, policy):
+        """``behaviour_params`` is the synced subtree only: the Q net
+        (discrete) or the bare actor net (ddpg) — the twin critics
+        never ship to the fleet."""
+        if self.discrete:
+            return egreedy(key,
+                           self.qvals(behaviour_params, obs, policy),
+                           eps)
+        a = self.act(behaviour_params, obs, policy)
+        noise = (jax.random.normal(key, a.shape)
+                 * self.cfg.explore_noise * self.cfg.half_range)
+        return jnp.clip(a + noise, self.cfg.low, self.cfg.high)
+
+    def behaviour_subtree(self, params):
+        """The weights the learner actually syncs to the actor fleet."""
+        return params["actor"] if self.algo == "ddpg" else params
+
+    def greedy(self, params, obs, policy=None):
+        if self.discrete:
+            return jnp.argmax(self.qvals(params, obs, policy), axis=-1)
+        return self.act(params["actor"], obs, policy)
+
+
+def make_value_agent(algo: str, spec, key=None,
+                     n_step: int = 3,
+                     eps_decay_steps: int = 2_000,
+                     learn_start: Optional[int] = None) -> ValueAgent:
+    """Build the nets/policies for one value algo.  ``key=None`` skips
+    the parameter init (``agent.params`` is None) — for callers that
+    only need the apply closures and config, e.g. evaluation of
+    already-trained params."""
+    def tune(cfg):
+        if learn_start is None:
+            return cfg
+        return dataclasses.replace(cfg, learn_start=learn_start)
+
+    obs_dim = spec.obs_shape[0]
+    discrete = isinstance(spec.action_space, Discrete)
+    if algo in ("dqn", "qrdqn") and not discrete:
+        raise ValueError(f"--algo {algo} needs a Discrete action space; "
+                         f"{spec.name} is continuous — use --algo ddpg")
+    if algo == "ddpg" and discrete:
+        raise ValueError(f"--algo ddpg needs a Box action space; "
+                         f"{spec.name} is discrete — use dqn/qrdqn")
+
+    if algo == "qrdqn":
+        cfg = tune(QRDQNConfig(n_step=n_step,
+                               eps_decay_steps=eps_decay_steps))
+        params = None if key is None else unbox(
+            mlp_qr_init(key, obs_dim, spec.n_actions, cfg.n_quantiles))
+
+        def q_apply(p, o, pol=None):
+            return mlp_qr_apply(p, o, spec.n_actions, cfg.n_quantiles,
+                                pol)
+
+        return ValueAgent(algo, cfg, params, True,
+                          qvals=lambda p, o, pol=None:
+                              q_apply(p, o, pol).mean(-1),
+                          q_apply=q_apply, loss_fn=qrdqn_loss)
+    if algo == "dqn":
+        cfg = tune(DQNConfig(n_step=n_step,
+                             eps_decay_steps=eps_decay_steps))
+        params = None if key is None else unbox(
+            mlp_q_init(key, obs_dim, spec.n_actions))
+        return ValueAgent(algo, cfg, params, True, qvals=mlp_q_apply,
+                          q_apply=mlp_q_apply, loss_fn=dqn_loss)
+    if algo != "ddpg":
+        raise ValueError(f"unknown value algo {algo!r} "
+                         f"(expected one of {VALUE_ALGOS})")
+    space = spec.action_space
+    if not space.bounded:
+        raise ValueError("ddpg needs finite Box action bounds")
+    act_dim = space.shape[0]
+    cfg = tune(DDPGConfig(low=space.low, high=space.high,
+                          n_step=n_step))
+    if key is None:
+        params = None
+    else:
+        ka, kc = jax.random.split(key)
+        params = {"actor": unbox(mlp_pi_init(ka, obs_dim, act_dim)),
+                  "critic": unbox(mlp_twin_q_init(kc, obs_dim, act_dim))}
+    return ValueAgent(
+        algo, cfg, params, False,
+        act=lambda p, o, pol=None: mlp_pi_apply(p, o, cfg.low, cfg.high,
+                                                pol),
+        critic_apply=lambda p, o, a, pol=None:
+            mlp_twin_q_apply(p, o, a, pol))
+
+
+def value_eval(algo: str, env_name: str, params,
+               n_envs: int = 16, n_steps: Optional[int] = None,
+               actor_policy: Optional[str] = None, seed: int = 0):
+    """Greedy-policy evaluation: (mean episode return, episode count).
+
+    Runs the trained policy with exploration off for ``n_steps``
+    (default: one full episode horizon plus slack) — the training-loop
+    returns only count episodes that *complete inside a chunk*, which
+    undercounts long-horizon envs; this is the clean measurement.
+    """
+    env = ensure_vector_obs(make(env_name))
+    spec = env.spec
+    agent = make_value_agent(algo, spec)      # closures only, no init
+    policy = get_policy(actor_policy) if actor_policy else None
+    n_steps = n_steps or spec.max_steps + spec.max_steps // 4
+
+    @jax.jit
+    def run(params, key):
+        est, obs = init_envs(env, key, n_envs)
+
+        def one(carry, _):
+            est, o = carry
+            a = agent.greedy(params, o, policy)
+            est, nxt, r, d, tr, _ = jax.vmap(env.step)(est, a)
+            return (est, nxt), (r, d | tr)
+
+        (_, _), (rews, bounds) = jax.lax.scan(one, (est, obs), None,
+                                              length=n_steps)
+        return episode_returns_from(rews, bounds)
+
+    ret, n_ep = run(params, jax.random.PRNGKey(seed + 17))
+    return float(ret), int(n_ep)
+
+
+def value_train(algo: str = "dqn", env_name: str = "cartpole",
+                iters: int = 300, n_envs: int = 32, rollout_len: int = 8,
+                actor_policy: Optional[str] = "fxp8", lr: float = 1e-3,
+                comm_bits: int = 8, seed: int = 0,
+                ckpt_dir: Optional[str] = None, save_every: int = 50,
+                replay_capacity: int = 50_000, n_step: int = 3,
+                updates_per_iter: int = 4, log_every: int = 20,
+                verbose: bool = True,
+                learn_start: Optional[int] = None):
+    """Off-policy value-based training (paper Fig. 2 split, replay
+    flavour): the *quantized* behaviour actor collects ``rollout_len``
+    steps per iteration into a truncation-aware n-step replay; the
+    fp32 learner runs ``updates_per_iter`` sampled updates against
+    polyak target networks.  Checkpoints capture params, targets,
+    optimizer state AND the replay buffer (pointers included), so a
+    relaunch with the same command line resumes exactly.
+    """
+    if algo not in VALUE_ALGOS:
+        raise ValueError(f"value_train drives {VALUE_ALGOS}, got "
+                         f"{algo!r}; use rl_train for {ON_POLICY_ALGOS}")
+    env = ensure_vector_obs(make(env_name))
+    spec = env.spec
+    key = jax.random.PRNGKey(seed)
+    a_policy = get_policy(actor_policy) if actor_policy else None
+    comm = comm_bits if a_policy else 32
+    # epsilon anneals over the first half of the step budget
+    decay = max((iters * rollout_len) // 2, 1)
+
+    agent = make_value_agent(algo, spec, key, n_step=n_step,
+                             eps_decay_steps=decay,
+                             learn_start=learn_start)
+    cfg, params = agent.cfg, agent.params
+    discrete = agent.discrete
+    # fresh buffers, not an alias: params and target are both donated
+    # to the jitted iteration, and a shared buffer cannot donate twice
+    target = jax.tree.map(jnp.copy, params)
+    if algo == "ddpg":
+        opt = {"actor": adamw_init(params["actor"]),
+               "critic": adamw_init(params["critic"])}
+        buf = replay_init(replay_capacity, spec.obs_shape,
+                          spec.action_space.shape, jnp.float32)
+    else:
+        opt = adamw_init(params)
+        buf = replay_init(replay_capacity, spec.obs_shape)
+    ocfg = AdamWConfig(weight_decay=0.0, max_grad_norm=10.0)
+    sched = constant(lr)
+
+    start = 0
+    mgr = None
+    if ckpt_dir:
+        mgr = CheckpointManager(ckpt_dir, keep=2, save_every=save_every)
+        if mgr.latest_step() is not None:
+            (params, target, opt, buf), md = mgr.restore(
+                (params, target, opt, buf))
+            md_algo = str(md.get("algo", ""))
+            if md_algo != algo:
+                raise ValueError(
+                    f"checkpoint in {ckpt_dir} was saved by --algo "
+                    f"{md_algo!r}, not {algo!r} — relaunch with the "
+                    "original flags")
+            start = int(md.get("it", md.get("step", 0))) + 1
+            if verbose:
+                print(f"resumed at iter {start} "
+                      f"(replay size {int(buf.size)})")
+
+    est, obs = init_envs(env, jax.random.PRNGKey(seed + 1), n_envs)
+
+    # donate the threaded state: without it XLA copies the whole
+    # replay buffer (capacity x obs, the dominant allocation) on every
+    # iteration just to apply the circular write.  `params` is NOT
+    # donated — `packed` aliases its unquantized leaves (biases, or the
+    # whole tree under fp32 actors), and a buffer cannot be both
+    # donated and passed as a second argument
+    @partial(jax.jit, donate_argnums=(1, 2, 3, 5, 6))
+    def iteration(params, target, opt, buf, packed, est, obs, key, it):
+        k_collect, k_update = jax.random.split(key)
+        actor_params = unpack_weights(packed)
+        eps = (epsilon(it * rollout_len, cfg) if discrete
+               else jnp.zeros(()))
+
+        def one_full(carry, k):
+            est, o = carry
+            a = agent.behave(actor_params, o, k, eps, a_policy)
+            est, nxt, r, d, tr, fo = jax.vmap(env.step)(est, a)
+            return (est, nxt), (o, a, r, d, tr, fo)
+
+        keys = jax.random.split(k_collect, rollout_len)
+        (est, obs), (O, A, R, D, Tr, FO) = jax.lax.scan(
+            one_full, (est, obs), keys)
+
+        rets, nxt, disc = nstep_targets(R, D, Tr, FO, cfg.gamma,
+                                        cfg.n_step)
+        T, B = R.shape
+        flat = lambda x: x.reshape((T * B,) + x.shape[2:])
+        buf = replay_add(buf, flat(O), flat(A), flat(rets), flat(nxt),
+                         flat(disc))
+
+        def opt_step(p, s, g):
+            p, s, _ = adamw_update(g, s, p, sched, ocfg)
+            return p, s
+
+        for _ in range(updates_per_iter):
+            k_update, k_s, k_n = jax.random.split(k_update, 3)
+            batch = replay_sample(buf, k_s, cfg.batch_size,
+                                  min_size=cfg.learn_start)
+            if algo == "ddpg":
+                g_c = jax.grad(ddpg_critic_loss)(
+                    params["critic"], target["critic"], target["actor"],
+                    agent.critic_apply, agent.act, batch, cfg, k_n)
+                c_p, c_s = opt_step(params["critic"], opt["critic"], g_c)
+                g_a = jax.grad(ddpg_actor_loss)(
+                    params["actor"], c_p, agent.critic_apply, agent.act,
+                    batch)
+                a_p, a_s = opt_step(params["actor"], opt["actor"], g_a)
+                params = {"actor": a_p, "critic": c_p}
+                opt = {"actor": a_s, "critic": c_s}
+                target = polyak(target, params, cfg.tau)
+            else:
+                g = jax.grad(agent.loss_fn)(
+                    params, target,
+                    lambda p, o: agent.q_apply(p, o, None), batch, cfg)
+                params, opt = opt_step(params, opt, g)
+                target = polyak(target, params, cfg.target_tau)
+
+        ret, n_ep = episode_returns_from(R, D | Tr)
+        return params, target, opt, buf, est, obs, ret, n_ep
+
+    history = []
+    total_sync_payload = 0
+    t0 = time.time()
+    if verbose:
+        pol = actor_policy if a_policy else "fp32"
+        print(f"{algo} on {spec.name}: {n_envs} envs x {rollout_len} "
+              f"steps/iter, n_step={cfg.n_step}, {pol} behaviour actor")
+    for it in range(start, iters):
+        # only the behaviour net ships to the fleet (ddpg: the actor
+        # alone — syncing the twin critics would triple the payload)
+        packed = pack_weights(agent.behaviour_subtree(params), comm)
+        payload, _ = sync_bytes(packed)
+        total_sync_payload += payload
+        # key derived from the iteration index, not a running split:
+        # a resumed run at iteration k draws the same stream the
+        # uninterrupted run would have (sequential splits would replay
+        # the stream from 0 after every preemption)
+        sub = jax.random.fold_in(key, it)
+        params, target, opt, buf, est, obs, ret, n_ep = iteration(
+            params, target, opt, buf, packed, est, obs, sub,
+            jnp.asarray(it))
+        history.append(float(ret))
+        if verbose and (it % log_every == 0 or it == iters - 1):
+            print(f"iter {it:4d}  return {float(ret):8.2f}  "
+                  f"episodes {int(n_ep):4d}  "
+                  f"replay {int(buf.size):6d}")
+        if mgr and mgr.should_save(it):
+            mgr.save(it, (params, target, opt, buf),
+                     metadata={"algo": algo, "it": it})
+    if verbose:
+        print(f"done in {time.time() - t0:.0f}s; "
+              f"total sync payload {total_sync_payload / 2**20:.1f} MiB")
+    return params, history
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
+    ap.add_argument("--algo", default="ppo",
+                    choices=list(ON_POLICY_ALGOS + VALUE_ALGOS))
     ap.add_argument("--env", default="cartpole",
                     choices=list(registered()))
     ap.add_argument("--agent", default="mlp", choices=["mlp", "hrl"])
-    ap.add_argument("--iters", type=int, default=40)
+    ap.add_argument("--iters", type=int, default=None,
+                    help="default: 40 (on-policy) / 300 (value-based)")
     ap.add_argument("--n-envs", type=int, default=32)
-    ap.add_argument("--rollout-len", type=int, default=128)
+    ap.add_argument("--rollout-len", type=int, default=None,
+                    help="default: 128 (on-policy) / 8 (value-based)")
     ap.add_argument("--actor-policy", default="fxp8")
     ap.add_argument("--fp32-actors", action="store_true")
     ap.add_argument("--comm-bits", type=int, default=8)
     ap.add_argument("--max-lag", type=int, default=1)
-    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--lr", type=float, default=None,
+                    help="default: 3e-3 (on-policy) / 1e-3 (value-based)")
     ap.add_argument("--two-stage", action="store_true")
     ap.add_argument("--ckpt-dir", default=None)
-    ap.add_argument("--save-every", type=int, default=10)
+    ap.add_argument("--save-every", type=int, default=None)
     ap.add_argument("--mesh", default="host",
                     choices=["host", "production"])
     ap.add_argument("--mesh-devices", type=int, default=None,
                     help="restrict the host mesh to the first N devices")
+    # value-based knobs (--algo dqn|qrdqn|ddpg)
+    ap.add_argument("--replay-capacity", type=int, default=50_000)
+    ap.add_argument("--n-step", type=int, default=3)
+    ap.add_argument("--updates-per-iter", type=int, default=4)
+    ap.add_argument("--learn-start", type=int, default=None,
+                    help="min replay size before updates (default: the "
+                         "algo config's, 256)")
     args = ap.parse_args(argv)
-    rl_train(args.env, args.agent, args.iters, args.n_envs,
-             args.rollout_len,
-             None if args.fp32_actors else args.actor_policy,
-             args.lr, args.comm_bits, args.max_lag,
-             two_stage=args.two_stage, ckpt_dir=args.ckpt_dir,
-             save_every=args.save_every, mesh_kind=args.mesh,
-             mesh_devices=args.mesh_devices)
+    actor_policy = None if args.fp32_actors else args.actor_policy
+    if args.algo in VALUE_ALGOS:
+        if args.two_stage or args.agent == "hrl":
+            raise ValueError("--two-stage/--agent hrl are on-policy "
+                             "(PPO) features; value-based algos drive "
+                             "the MLP nets")
+        if (args.mesh != "host" or args.mesh_devices is not None
+                or args.max_lag != 1):
+            raise ValueError(
+                "--mesh/--mesh-devices/--max-lag configure the sharded "
+                "on-policy driver; the value-based loop is single-host "
+                "— drop these flags (sharded value collection is a "
+                "ROADMAP follow-up)")
+        value_train(args.algo, args.env,
+                    iters=args.iters if args.iters is not None else 300,
+                    n_envs=args.n_envs,
+                    rollout_len=(args.rollout_len
+                                 if args.rollout_len is not None else 8),
+                    actor_policy=actor_policy,
+                    lr=args.lr if args.lr is not None else 1e-3,
+                    comm_bits=args.comm_bits, ckpt_dir=args.ckpt_dir,
+                    save_every=(args.save_every
+                                if args.save_every is not None else 50),
+                    replay_capacity=args.replay_capacity,
+                    n_step=args.n_step,
+                    updates_per_iter=args.updates_per_iter,
+                    learn_start=args.learn_start)
+    else:
+        rl_train(args.env, args.agent,
+                 args.iters if args.iters is not None else 40,
+                 args.n_envs,
+                 args.rollout_len if args.rollout_len is not None
+                 else 128,
+                 actor_policy,
+                 args.lr if args.lr is not None else 3e-3,
+                 args.comm_bits, args.max_lag,
+                 two_stage=args.two_stage, ckpt_dir=args.ckpt_dir,
+                 save_every=(args.save_every
+                             if args.save_every is not None else 10),
+                 mesh_kind=args.mesh, mesh_devices=args.mesh_devices,
+                 algo=args.algo)
 
 
 if __name__ == "__main__":

@@ -1,103 +1,33 @@
-"""DQN with a pure-JAX circular replay buffer + target network.
+"""Backward-compat shim — the DQN family grew into :mod:`repro.rl.value`.
 
-Included because Fig. 3a's parity claim spans value-based methods too;
-the quantized actor here is the epsilon-greedy *behaviour* policy.
+The value-based subsystem (replay, n-step targets, Double-DQN, QR-DQN,
+DDPG) lives in ``repro.rl.value``; import from there.  This module
+keeps the ``repro.rl.dqn`` import path alive, but note one SEMANTIC
+change: the replay buffer now stores a *discount*
+(``gamma^K * (1 - terminated)``) per transition instead of a done
+flag, and ``replay_sample`` returns a ``"discounts"`` column (plus a
+``"weight"`` guard) instead of ``"dones"``.  Passing the old boolean
+``done`` array to ``replay_add`` is a loud error here — storing it as
+a discount would silently invert every TD target.  ``dqn_loss`` still
+accepts legacy ``"dones"`` batches.
 """
-from __future__ import annotations
-
-import dataclasses
-from typing import Callable, NamedTuple, Tuple
-
-import jax
 import jax.numpy as jnp
 
-Array = jax.Array
+from repro.rl.value import (DQNConfig, Replay, dqn_loss, egreedy,
+                            epsilon, replay_init, replay_sample)
+from repro.rl.value import replay_add as _replay_add
+
+__all__ = ["DQNConfig", "Replay", "dqn_loss", "egreedy", "epsilon",
+           "replay_add", "replay_init", "replay_sample"]
 
 
-@dataclasses.dataclass(frozen=True)
-class DQNConfig:
-    gamma: float = 0.99
-    eps_start: float = 1.0
-    eps_end: float = 0.05
-    eps_decay_steps: int = 2_000
-    target_update_every: int = 100
-    batch_size: int = 64
-
-
-class Replay(NamedTuple):
-    obs: Array          # [N, ...]
-    actions: Array      # [N]
-    rewards: Array      # [N]
-    next_obs: Array     # [N, ...]
-    dones: Array        # [N]
-    ptr: Array          # scalar int32: next write slot
-    size: Array         # scalar int32: valid entries
-
-
-def replay_init(capacity: int, obs_shape) -> Replay:
-    z = jnp.zeros
-    return Replay(z((capacity,) + tuple(obs_shape)),
-                  z((capacity,), jnp.int32), z((capacity,)),
-                  z((capacity,) + tuple(obs_shape)),
-                  z((capacity,), bool),
-                  jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32))
-
-
-def replay_add(buf: Replay, obs, action, reward, next_obs, done) -> Replay:
-    """Add a batch of B transitions (contiguous circular write).
-
-    ``B >= capacity`` keeps exactly the last ``capacity`` transitions:
-    a full-batch write would produce duplicate scatter indices, whose
-    write order XLA leaves unspecified, so the survivors are sliced out
-    first and the scatter indices stay unique (deterministic).
-    """
-    B = obs.shape[0]
-    cap = buf.obs.shape[0]
-    ptr = buf.ptr
-    if B >= cap:
-        drop = B - cap
-        obs, action, reward, next_obs, done = (
-            x[drop:] for x in (obs, action, reward, next_obs, done))
-        ptr = ptr + drop        # slots the dropped prefix would have used
-        B = cap
-    idx = (ptr + jnp.arange(B)) % cap
-    return Replay(
-        buf.obs.at[idx].set(obs),
-        buf.actions.at[idx].set(action),
-        buf.rewards.at[idx].set(reward),
-        buf.next_obs.at[idx].set(next_obs),
-        buf.dones.at[idx].set(done),
-        (ptr + B) % cap,
-        jnp.minimum(buf.size + B, cap),
-    )
-
-
-def replay_sample(buf: Replay, key: Array, n: int) -> dict:
-    idx = jax.random.randint(key, (n,), 0, jnp.maximum(buf.size, 1))
-    return {"obs": buf.obs[idx], "actions": buf.actions[idx],
-            "rewards": buf.rewards[idx], "next_obs": buf.next_obs[idx],
-            "dones": buf.dones[idx]}
-
-
-def epsilon(step: Array, cfg: DQNConfig) -> Array:
-    frac = jnp.clip(step / cfg.eps_decay_steps, 0.0, 1.0)
-    return cfg.eps_start + frac * (cfg.eps_end - cfg.eps_start)
-
-
-def egreedy(key: Array, qvals: Array, eps: Array) -> Array:
-    B, A = qvals.shape
-    k1, k2 = jax.random.split(key)
-    rand = jax.random.randint(k1, (B,), 0, A)
-    greedy = jnp.argmax(qvals, axis=-1)
-    return jnp.where(jax.random.uniform(k2, (B,)) < eps, rand, greedy)
-
-
-def dqn_loss(params, target_params, apply_fn: Callable, batch: dict,
-             cfg: DQNConfig) -> Array:
-    q = apply_fn(params, batch["obs"])
-    q_sel = q[jnp.arange(q.shape[0]), batch["actions"]]
-    q_next = apply_fn(target_params, batch["next_obs"])
-    target = batch["rewards"] + cfg.gamma * (
-        1.0 - batch["dones"].astype(jnp.float32)) * q_next.max(-1)
-    target = jax.lax.stop_gradient(target)
-    return jnp.mean(jnp.square(q_sel - target))
+def replay_add(buf, obs, action, reward, next_obs, discount):
+    """:func:`repro.rl.value.replay_add`, guarding the old signature:
+    the 6th argument is a per-transition DISCOUNT now, not ``done``."""
+    if jnp.asarray(discount).dtype == jnp.bool_:
+        raise TypeError(
+            "replay_add now stores a per-transition discount "
+            "(gamma^K * (1 - terminated)), not a boolean done flag — "
+            "build it with repro.rl.value.nstep_targets (or "
+            "gamma * (1 - done) for plain 1-step transitions)")
+    return _replay_add(buf, obs, action, reward, next_obs, discount)

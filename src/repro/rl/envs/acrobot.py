@@ -95,8 +95,7 @@ def _rk4(y0: Array, torque: Array, dt: float) -> Array:
     return y0 + dt / 6.0 * (k1 + 2 * k2 + 2 * k3 + k4)
 
 
-def step(s: EnvState, action: Array
-         ) -> Tuple[EnvState, Array, Array, Array]:
+def step(s: EnvState, action: Array):
     """action in {0, 1, 2} -> torque {-1, 0, +1}."""
     torque = action.astype(jnp.float32) - 1.0
     y0 = jnp.stack([s.theta1, s.theta2, s.dtheta1, s.dtheta2])
@@ -109,12 +108,13 @@ def step(s: EnvState, action: Array
     t = s.t + 1
 
     solved = -jnp.cos(theta1) - jnp.cos(theta2 + theta1) > 1.0
-    done = solved | (t >= MAX_STEPS)
+    done = solved
+    truncated = (t >= MAX_STEPS) & ~solved
     reward = jnp.where(solved, 0.0, -1.0).astype(jnp.float32)
 
     nxt = EnvState(theta1, theta2, dtheta1, dtheta2, t, s.key)
-    out = auto_reset(done, _fresh(s.key), nxt)
-    return out, _obs(out), reward, done
+    out = auto_reset(done | truncated, _fresh(s.key), nxt)
+    return out, _obs(out), reward, done, truncated, _obs(nxt)
 
 
 def make() -> Environment:

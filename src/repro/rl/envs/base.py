@@ -5,15 +5,31 @@ an :class:`EnvSpec` describing its interface:
 
     env = make("cartpole")
     state, obs = env.reset(key)                       # unbatched
-    state, obs, reward, done = env.step(state, action)
+    state, obs, reward, done, truncated, final_obs = \
+        env.step(state, action)
 
 Both functions are unbatched and jax.lax-level: batch with ``vmap``,
 iterate with ``scan``, and the whole fleet jits into one program — the
 substrate the quantized-actor throughput claims are measured on.
 
-Auto-reset contract: the state returned by a ``done`` transition is a
-fresh episode (and ``obs`` is the fresh episode's first observation);
-``done`` marks the boundary for GAE.  Wrappers preserve this.
+Termination vs truncation (the signals value targets bootstrap on):
+
+  * ``done``       — the env reached a *terminal* state (pole fell,
+    goal reached).  Value targets must NOT bootstrap across it.
+  * ``truncated``  — the episode was cut by a pure time limit while
+    still alive.  Value targets MUST bootstrap through it (from
+    ``final_obs``); folding timeouts into ``done`` systematically
+    biases GAE and every replay target.
+  * ``done`` and ``truncated`` are mutually exclusive: a step that
+    hits a terminal state on the time-limit tick reports ``done``.
+  * episode boundary = ``done | truncated`` — what auto-reset,
+    frame-stack refills and episode accounting key off.
+
+Auto-reset contract: the state returned by a boundary transition is a
+fresh episode and ``obs`` is the fresh episode's first observation;
+``final_obs`` is the *pre-reset* observation of the transition itself
+(``final_obs == obs`` off-boundary), so bootstrap targets always see
+the state the episode actually ended in.  Wrappers preserve this.
 """
 from __future__ import annotations
 
@@ -29,8 +45,9 @@ Array = jax.Array
 
 # reset(key) -> (state, obs)
 ResetFn = Callable[[Array], Tuple[Any, Array]]
-# step(state, action) -> (state, obs, reward, done)
-StepFn = Callable[[Any, Array], Tuple[Any, Array, Array, Array]]
+# step(state, action) -> (state, obs, reward, done, truncated, final_obs)
+StepFn = Callable[[Any, Array],
+                  Tuple[Any, Array, Array, Array, Array, Array]]
 
 
 def auto_reset(done: Array, fresh: Any, nxt: Any) -> Any:

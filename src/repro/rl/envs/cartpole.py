@@ -4,12 +4,15 @@ Functional API, vmap/scan friendly:
 
     env = make()
     state, obs = env.reset(key)
-    state, obs, reward, done = env.step(state, action)
+    state, obs, reward, done, truncated, final_obs = \
+        env.step(state, action)
 
-Auto-reset on termination (the returned state of a done transition is a
-fresh episode; ``done`` marks the boundary for GAE).  All ops are
-jax.lax level so thousands of environments run inside one jit — this is
-what the quantized-actor throughput claims are measured on.
+``done`` fires only when the pole/cart leave their limits (terminal);
+the 500-step horizon reports ``truncated`` instead, so value targets
+bootstrap through it (from ``final_obs``, the pre-reset observation).
+Auto-reset on either boundary.  All ops are jax.lax level so thousands
+of environments run inside one jit — this is what the quantized-actor
+throughput claims are measured on.
 """
 from __future__ import annotations
 
@@ -66,9 +69,8 @@ def reset(key: Array) -> Tuple[EnvState, Array]:
     return s, _obs(s)
 
 
-def step(s: EnvState, action: Array
-         ) -> Tuple[EnvState, Array, Array, Array]:
-    """action in {0, 1}. Returns (state, obs, reward, done)."""
+def step(s: EnvState, action: Array):
+    """action in {0, 1}."""
     force = jnp.where(action == 1, FORCE_MAG, -FORCE_MAG)
     cos, sin = jnp.cos(s.theta), jnp.sin(s.theta)
     tmp = (force + POLEMASS_LEN * s.theta_dot ** 2 * sin) / TOTAL_MASS
@@ -82,13 +84,13 @@ def step(s: EnvState, action: Array
     theta_dot = s.theta_dot + DT * theta_acc
     t = s.t + 1
 
-    done = ((jnp.abs(x) > X_LIMIT) | (jnp.abs(theta) > THETA_LIMIT)
-            | (t >= MAX_STEPS))
+    done = (jnp.abs(x) > X_LIMIT) | (jnp.abs(theta) > THETA_LIMIT)
+    truncated = (t >= MAX_STEPS) & ~done
     reward = jnp.ones((), jnp.float32)          # +1 per surviving step
 
     nxt = EnvState(x, x_dot, theta, theta_dot, t, s.key)
-    out = auto_reset(done, _fresh(s.key), nxt)
-    return out, _obs(out), reward, done
+    out = auto_reset(done | truncated, _fresh(s.key), nxt)
+    return out, _obs(out), reward, done, truncated, _obs(nxt)
 
 
 def make() -> Environment:

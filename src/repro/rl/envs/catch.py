@@ -54,8 +54,7 @@ def reset(key: Array) -> Tuple[EnvState, Array]:
     return s, _render(s)
 
 
-def step(s: EnvState, action: Array
-         ) -> Tuple[EnvState, Array, Array, Array]:
+def step(s: EnvState, action: Array):
     """action in {0, 1, 2} -> paddle move {-1, 0, +1}."""
     paddle = jnp.clip(s.paddle_col + action.astype(jnp.int32) - 1,
                       0, COLS - 1)
@@ -67,11 +66,12 @@ def step(s: EnvState, action: Array
     reward = jnp.where(at_bottom,
                        jnp.where(caught, 1.0, -1.0), 0.0
                        ).astype(jnp.float32)
-    done = at_bottom | (t >= MAX_STEPS)
+    done = at_bottom
+    truncated = (t >= MAX_STEPS) & ~at_bottom
 
     nxt = EnvState(ball_row, s.ball_col, paddle, t, s.key)
-    out = auto_reset(done, _fresh(s.key), nxt)
-    return out, _render(out), reward, done
+    out = auto_reset(done | truncated, _fresh(s.key), nxt)
+    return out, _render(out), reward, done, truncated, _render(nxt)
 
 
 def make() -> Environment:

@@ -62,8 +62,7 @@ def reset(key: Array) -> Tuple[EnvState, Array]:
 _MOVES = jnp.array([[-1, 0], [1, 0], [0, -1], [0, 1]], jnp.int32)
 
 
-def step(s: EnvState, action: Array
-         ) -> Tuple[EnvState, Array, Array, Array]:
+def step(s: EnvState, action: Array):
     agent = jnp.clip(s.agent + _MOVES[action], 0, GRID - 1)
     at_key = jnp.all(agent == s.key_pos)
     picked = at_key & ~s.has_key
@@ -74,11 +73,12 @@ def step(s: EnvState, action: Array
 
     reward = (-0.01 + 0.5 * picked.astype(jnp.float32)
               + 1.0 * opened.astype(jnp.float32))
-    done = opened | (t >= MAX_STEPS)
+    done = opened
+    truncated = (t >= MAX_STEPS) & ~opened
 
     nxt = EnvState(agent, s.key_pos, s.door, has_key, t, s.key)
-    out = auto_reset(done, _fresh(s.key), nxt)
-    return out, _render(out), reward, done
+    out = auto_reset(done | truncated, _fresh(s.key), nxt)
+    return out, _render(out), reward, done, truncated, _render(nxt)
 
 
 def subgoal_reached(s: EnvState) -> Array:

@@ -51,8 +51,7 @@ def reset(key: Array) -> Tuple[EnvState, Array]:
     return s, _obs(s)
 
 
-def step(s: EnvState, action: Array
-         ) -> Tuple[EnvState, Array, Array, Array]:
+def step(s: EnvState, action: Array):
     """action in {0, 1, 2} -> force {-1, 0, +1} * FORCE."""
     velocity = (s.velocity + (action.astype(jnp.float32) - 1.0) * FORCE
                 - jnp.cos(3 * s.position) * GRAVITY)
@@ -63,12 +62,13 @@ def step(s: EnvState, action: Array
                          0.0, velocity)
     t = s.t + 1
 
-    done = (position >= GOAL_POS) | (t >= MAX_STEPS)
+    done = position >= GOAL_POS
+    truncated = (t >= MAX_STEPS) & ~done
     reward = jnp.full((), -1.0, jnp.float32)
 
     nxt = EnvState(position, velocity, t, s.key)
-    out = auto_reset(done, _fresh(s.key), nxt)
-    return out, _obs(out), reward, done
+    out = auto_reset(done | truncated, _fresh(s.key), nxt)
+    return out, _obs(out), reward, done, truncated, _obs(nxt)
 
 
 def make() -> Environment:

@@ -5,7 +5,9 @@ tanh-squashed Gaussian (see :mod:`repro.rl.dists`), exercising the
 continuous path through PPO that "Learning Quantized Continuous
 Controllers for Integer Hardware" needs.  Observation is
 [cos θ, sin θ, θ̇]; reward is the negative quadratic cost; episodes are
-pure time-limit (200 steps) with auto-reset.
+pure time-limit (200 steps) with auto-reset — so ``done`` is *never*
+set: the 200-step horizon reports ``truncated``, and value targets
+bootstrap through it from ``final_obs`` (the pre-reset observation).
 """
 from __future__ import annotations
 
@@ -57,8 +59,7 @@ def reset(key: Array) -> Tuple[EnvState, Array]:
     return s, _obs(s)
 
 
-def step(s: EnvState, action: Array
-         ) -> Tuple[EnvState, Array, Array, Array]:
+def step(s: EnvState, action: Array):
     """action: float tensor of shape (1,), torque in [-2, 2]."""
     u = jnp.clip(action.reshape(()), -MAX_TORQUE, MAX_TORQUE)
     cost = (angle_wrap(s.theta) ** 2 + 0.1 * s.theta_dot ** 2
@@ -71,12 +72,13 @@ def step(s: EnvState, action: Array
     theta = s.theta + DT * theta_dot
     t = s.t + 1
 
-    done = t >= MAX_STEPS
+    done = jnp.zeros((), bool)          # swing-up never terminates
+    truncated = t >= MAX_STEPS
     reward = (-cost).astype(jnp.float32)
 
     nxt = EnvState(theta, theta_dot, t, s.key)
-    out = auto_reset(done, _fresh(s.key), nxt)
-    return out, _obs(out), reward, done
+    out = auto_reset(truncated, _fresh(s.key), nxt)
+    return out, _obs(out), reward, done, truncated, _obs(nxt)
 
 
 def make() -> Environment:

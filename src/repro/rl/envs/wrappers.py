@@ -39,6 +39,8 @@ def normalize_observation(env: Environment, mean, std) -> Environment:
     """
     mean = jnp.asarray(mean, jnp.float32)
     std = jnp.asarray(std, jnp.float32)
+    if bool(jnp.any(std == 0)):
+        raise ValueError("normalize_observation: std must be non-zero")
 
     def norm(obs):
         return (obs.astype(jnp.float32) - mean) / std
@@ -48,15 +50,20 @@ def normalize_observation(env: Environment, mean, std) -> Environment:
         return state, norm(obs)
 
     def step(state, action):
-        state, obs, reward, done = env.step(state, action)
-        return state, norm(obs), reward, done
+        state, obs, reward, done, truncated, final_obs = \
+            env.step(state, action)
+        return state, norm(obs), reward, done, truncated, norm(final_obs)
 
     in_space = env.observation_space
-    if (isinstance(in_space, Box) and in_space.bounded
-            and mean.ndim == 0 and std.ndim == 0):
-        lo = (in_space.low - float(mean)) / float(std)
-        hi = (in_space.high - float(mean)) / float(std)
-        space = Box(min(lo, hi), max(lo, hi), env.obs_shape)
+    if isinstance(in_space, Box) and in_space.bounded:
+        # elementwise transformed bounds (mean/std may be obs-shaped,
+        # and a negative std flips low/high per element); Box carries
+        # scalar bounds, so keep the tightest enclosing interval —
+        # finite whenever the input is bounded
+        lo = (in_space.low - mean) / std
+        hi = (in_space.high - mean) / std
+        space = Box(float(jnp.minimum(lo, hi).min()),
+                    float(jnp.maximum(lo, hi).max()), env.obs_shape)
     else:
         space = Box(-math.inf, math.inf, env.obs_shape)
     spec = dataclasses.replace(env.spec, observation_space=space)
@@ -67,8 +74,10 @@ def scale_reward(env: Environment, scale: float) -> Environment:
     """Multiply rewards by a constant (loss-scale style conditioning)."""
 
     def step(state, action):
-        state, obs, reward, done = env.step(state, action)
-        return state, obs, reward * jnp.float32(scale), done
+        state, obs, reward, done, truncated, final_obs = \
+            env.step(state, action)
+        return (state, obs, reward * jnp.float32(scale), done, truncated,
+                final_obs)
 
     return env.replace(step=step)
 
@@ -77,13 +86,17 @@ def flatten_observation(env: Environment) -> Environment:
     """Ravel observations to 1-D — lets MLP policies drive pixel envs."""
     flat = int(math.prod(env.obs_shape))
 
+    def ravel(obs):
+        return obs.reshape(flat).astype(jnp.float32)
+
     def reset(key):
         state, obs = env.reset(key)
-        return state, obs.reshape(flat).astype(jnp.float32)
+        return state, ravel(obs)
 
     def step(state, action):
-        state, obs, reward, done = env.step(state, action)
-        return state, obs.reshape(flat).astype(jnp.float32), reward, done
+        state, obs, reward, done, truncated, final_obs = \
+            env.step(state, action)
+        return state, ravel(obs), reward, done, truncated, ravel(final_obs)
 
     in_space = env.observation_space
     if isinstance(in_space, Box):
@@ -117,9 +130,13 @@ class TimeLimitState(NamedTuple):
 def time_limit(env: Environment, max_steps: int) -> Environment:
     """Truncate episodes after ``max_steps`` wrapper-level steps.
 
-    On timeout the inner env is force-reset (fresh key from the wrapper
-    carry), so the auto-reset contract holds even for envs whose own
-    horizon is longer.
+    A pure timeout is reported as ``truncated`` — NOT folded into
+    ``done`` — so value targets keep bootstrapping through it (the
+    episode was cut, not terminated).  If the inner env terminates on
+    the timeout tick, ``done`` wins.  On a pure timeout the inner env
+    is force-reset (fresh key from the wrapper carry), so the
+    auto-reset contract holds even for envs whose own horizon is
+    longer; ``final_obs`` stays the pre-reset observation.
     """
 
     def reset(key):
@@ -128,19 +145,23 @@ def time_limit(env: Environment, max_steps: int) -> Environment:
         return TimeLimitState(state, jnp.zeros((), jnp.int32), k_carry), obs
 
     def step(state, action):
-        inner, obs, reward, done = env.step(state.inner, action)
+        inner, obs, reward, done, truncated, final_obs = \
+            env.step(state.inner, action)
         t = state.t + 1
-        timeout = t >= max_steps
-        done = done | timeout
+        # pure wrapper timeout: episode still alive at the limit
+        timeout = (t >= max_steps) & ~done & ~truncated
+        truncated = truncated | timeout
 
         key, sub = jax.random.split(state.key)
         fresh_inner, fresh_obs = env.reset(sub)
-        # inner auto-resets on its own `done`; only the pure timeout
-        # needs the forced reset
+        # inner auto-resets on its own boundary; only the wrapper
+        # timeout needs the forced reset (final_obs keeps the inner
+        # pre-reset observation either way)
         inner = auto_reset(timeout, fresh_inner, inner)
         obs = jnp.where(timeout, fresh_obs, obs)
-        t = jnp.where(done, 0, t)
-        return TimeLimitState(inner, t, key), obs, reward, done
+        t = jnp.where(done | truncated, 0, t)
+        return TimeLimitState(inner, t, key), obs, reward, done, \
+            truncated, final_obs
 
     spec = dataclasses.replace(env.spec,
                                max_steps=min(env.spec.max_steps,
@@ -177,12 +198,16 @@ def frame_stack(env: Environment, k: int) -> Environment:
         return FrameStackState(state, frames), stacked(frames)
 
     def step(state, action):
-        inner, obs, reward, done = env.step(state.inner, action)
+        inner, obs, reward, done, truncated, final_obs = \
+            env.step(state.inner, action)
+        # the episode's true last stack ends in the pre-reset final_obs
+        final = jnp.concatenate([state.frames[1:], final_obs[None]],
+                                axis=0)
         rolled = jnp.concatenate([state.frames[1:], obs[None]], axis=0)
         fresh = jnp.stack([obs] * k)        # obs is already post-reset
-        frames = jnp.where(done, fresh, rolled)
+        frames = jnp.where(done | truncated, fresh, rolled)
         return (FrameStackState(inner, frames), stacked(frames),
-                reward, done)
+                reward, done, truncated, stacked(final))
 
     in_space = env.observation_space
     shape = in_space.shape[:-1] + (in_space.shape[-1] * k,)

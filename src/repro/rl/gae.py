@@ -10,23 +10,47 @@ Array = jax.Array
 
 
 def gae(rewards: Array, values: Array, dones: Array, last_value: Array,
-        gamma: float = 0.99, lam: float = 0.95) -> Tuple[Array, Array]:
+        gamma: float = 0.99, lam: float = 0.95,
+        truncated: Array = None,
+        bootstrap_values: Array = None) -> Tuple[Array, Array]:
     """rewards/dones: [T, B]; values: [T, B]; last_value: [B].
 
-    Returns (advantages [T,B], returns [T,B]).  ``dones[t]`` marks that
-    the transition at t ended an episode: no bootstrapping across it.
+    Returns (advantages [T,B], returns [T,B]).  ``dones[t]`` marks a
+    TERMINATION at t: no bootstrapping across it.  ``truncated[t]``
+    marks a pure time-limit cut: the advantage chain still breaks (the
+    next row belongs to a fresh episode) but the one-step target keeps
+    bootstrapping — from ``bootstrap_values[t]`` = V(final_obs[t]), the
+    value of the state the episode was actually cut in (the row below
+    holds the *fresh* episode's value, which would be wrong).
+
+    With ``truncated=None`` (legacy callers) every done is treated as a
+    full cut — pass the trajectory's truncation signal to get unbiased
+    targets at timeouts.
     """
-    not_done = 1.0 - dones.astype(jnp.float32)
-    next_values = jnp.concatenate([values[1:], last_value[None]], axis=0)
+    term = dones.astype(jnp.float32)
+    if truncated is None:
+        boundary = term
+        next_values = jnp.concatenate([values[1:], last_value[None]],
+                                      axis=0)
+    else:
+        if bootstrap_values is None:
+            raise ValueError(
+                "gae: truncated given without bootstrap_values — the "
+                "truncation rows need V(final_obs) to bootstrap from")
+        boundary = (dones | truncated).astype(jnp.float32)
+        next_values = jnp.concatenate([values[1:], last_value[None]],
+                                      axis=0)
+        next_values = jnp.where(truncated, bootstrap_values, next_values)
 
     def back(carry, xs):
-        r, v, nv, nd = xs
-        delta = r + gamma * nv * nd - v
-        adv = delta + gamma * lam * nd * carry
+        r, v, nv, nterm, nbound = xs
+        delta = r + gamma * nv * nterm - v
+        adv = delta + gamma * lam * nbound * carry
         return adv, adv
 
     _, advs = jax.lax.scan(back, jnp.zeros_like(last_value),
-                           (rewards, values, next_values, not_done),
+                           (rewards, values, next_values, 1.0 - term,
+                            1.0 - boundary),
                            reverse=True)
     return advs, advs + values
 

@@ -70,3 +70,66 @@ def mlp_q_apply(params, obs: Array,
     h = activation(linear_apply(params["fc2"], h, policy), "relu",
                    policy)
     return linear_apply(params["q"], h, policy)
+
+
+def mlp_qr_init(key, obs_dim: int, n_actions: int, n_quantiles: int,
+                hidden: int = 64, dtype=jnp.float32):
+    """QR-DQN: the plain Q net with a widened [n_actions * n_quantiles]
+    head — same quantized torso, reshaped by :func:`mlp_qr_apply`."""
+    return mlp_q_init(key, obs_dim, n_actions * n_quantiles, hidden,
+                      dtype)
+
+
+def mlp_qr_apply(params, obs: Array, n_actions: int, n_quantiles: int,
+                 policy: Optional[QuantPolicy] = None) -> Array:
+    """obs [B, D] -> quantile values [B, n_actions, n_quantiles]."""
+    q = mlp_q_apply(params, obs, policy)
+    return q.reshape(q.shape[:-1] + (n_actions, n_quantiles))
+
+
+def mlp_pi_init(key, obs_dim: int, act_dim: int, hidden: int = 64,
+                dtype=jnp.float32):
+    """Deterministic DDPG actor: obs -> tanh-squashed action."""
+    ks = KeySeq(key)
+    return {
+        "fc1": linear_init(ks(), obs_dim, hidden, axes=(None, None),
+                           dtype=dtype),
+        "fc2": linear_init(ks(), hidden, hidden, axes=(None, None),
+                           dtype=dtype),
+        "out": linear_init(ks(), hidden, act_dim, axes=(None, None),
+                           dtype=dtype),
+    }
+
+
+def mlp_pi_apply(params, obs: Array, low: float, high: float,
+                 policy: Optional[QuantPolicy] = None) -> Array:
+    """obs [B, D] -> action [B, act_dim] rescaled into [low, high].
+    The tanh squash runs through V-ACT like every other activation."""
+    h = activation(linear_apply(params["fc1"], obs, policy), "relu",
+                   policy)
+    h = activation(linear_apply(params["fc2"], h, policy), "relu",
+                   policy)
+    u = activation(linear_apply(params["out"], h, policy), "tanh",
+                   policy)
+    mid, half = 0.5 * (high + low), 0.5 * (high - low)
+    return mid + half * u
+
+
+def mlp_twin_q_init(key, obs_dim: int, act_dim: int, hidden: int = 64,
+                    dtype=jnp.float32):
+    """TD3-style twin critics Q(s, a) — two independent Q torsos over
+    the concatenated (obs, action) input."""
+    ks = KeySeq(key)
+    return {"q1": mlp_q_init(ks(), obs_dim + act_dim, 1, hidden, dtype),
+            "q2": mlp_q_init(ks(), obs_dim + act_dim, 1, hidden, dtype)}
+
+
+def mlp_twin_q_apply(params, obs: Array, act: Array,
+                     policy: Optional[QuantPolicy] = None
+                     ) -> Tuple[Array, Array]:
+    """(obs [B, D], act [B, d]) -> (q1 [B], q2 [B])."""
+    x = jnp.concatenate(
+        [obs, act.reshape(obs.shape[0], -1).astype(obs.dtype)], axis=-1)
+    q1 = mlp_q_apply(params["q1"], x, policy)[..., 0]
+    q2 = mlp_q_apply(params["q2"], x, policy)[..., 0]
+    return q1, q2

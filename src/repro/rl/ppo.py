@@ -73,9 +73,16 @@ def a2c_loss(params, apply_fn: Callable, batch: dict, cfg: PPOConfig,
     dparams, values = apply_fn(params, batch["obs"])
     dparams = dparams.astype(jnp.float32)
     logp = dist.log_prob(dparams, batch["actions"])
-    pg_loss = -jnp.mean(logp * batch["advantages"])
-    v_loss = 0.5 * jnp.mean(jnp.square(values - batch["returns"]))
-    entropy = jnp.mean(dist.entropy(dparams))
+
+    # same liveness-mask contract as ppo_loss: a masked (dead/straggler)
+    # slot contributes zero loss
+    mask = batch.get("mask")
+    mean = (lambda x: (x * mask).sum() / jnp.maximum(mask.sum(), 1)) \
+        if mask is not None else jnp.mean
+
+    pg_loss = -mean(logp * batch["advantages"])
+    v_loss = 0.5 * mean(jnp.square(values - batch["returns"]))
+    entropy = mean(dist.entropy(dparams))
     loss = pg_loss + cfg.vf_coef * v_loss - cfg.ent_coef * entropy
     return loss, {"pg_loss": pg_loss, "v_loss": v_loss,
                   "entropy": entropy}
@@ -83,16 +90,32 @@ def a2c_loss(params, apply_fn: Callable, batch: dict, cfg: PPOConfig,
 
 def batch_from_traj(traj: Trajectory, last_value: Array,
                     cfg: PPOConfig,
-                    actor_mask: Optional[Array] = None) -> dict:
+                    actor_mask: Optional[Array] = None,
+                    value_fn: Optional[Callable] = None) -> dict:
     """GAE over [T, B] then flatten to [T*B, ...].
 
     ``actor_mask`` [B] (1 = actor delivered, 0 = straggler/dead): masked
     actors contribute zero loss — the aggregator's timeout semantics —
     and are excluded from the advantage-normalization statistics so a
     dead slot's stale trajectory cannot skew the live envs' updates.
+
+    ``value_fn`` (obs [N, ...] -> values [N]) prices the truncation
+    bootstrap: one extra forward over ``traj.next_obs`` so timed-out
+    rows bootstrap from V(final_obs) instead of being cut like
+    terminations.  Pass the learner's value head (the rollout hot path
+    stays untouched).  Without it, truncations fall back to the legacy
+    cut-at-boundary targets (biased at timeouts).
     """
-    advs, rets = gae(traj.rewards, traj.values, traj.dones, last_value,
-                     cfg.gamma, cfg.lam)
+    if value_fn is not None:
+        T, B = traj.rewards.shape
+        nobs = traj.next_obs.reshape((T * B,) + traj.next_obs.shape[2:])
+        boot = value_fn(nobs).reshape(T, B)
+        advs, rets = gae(traj.rewards, traj.values, traj.dones,
+                         last_value, cfg.gamma, cfg.lam,
+                         truncated=traj.truncated, bootstrap_values=boot)
+    else:
+        advs, rets = gae(traj.rewards, traj.values, traj.boundary,
+                         last_value, cfg.gamma, cfg.lam)
     if cfg.normalize_adv:
         if actor_mask is not None:
             w = jnp.broadcast_to(actor_mask[None].astype(jnp.float32),
@@ -154,6 +177,13 @@ def minibatch_epochs(key, params, opt_state, batch, apply_fn, cfg,
     """Standard PPO epochs x minibatches loop (python loop: trace-time
     constants, jit the caller)."""
     n = batch["obs"].shape[0]
+    if n % cfg.minibatches != 0:
+        raise ValueError(
+            f"minibatch_epochs: batch of {n} samples (rollout T*B) does "
+            f"not divide into cfg.minibatches={cfg.minibatches} — the "
+            f"tail {n % cfg.minibatches} samples would be silently "
+            "dropped every epoch. Pick n_envs*rollout_len divisible by "
+            "the minibatch count, or adjust PPOConfig.minibatches.")
     mb = n // cfg.minibatches
     stats = None
     # keep the historical 4-arg loss_fn contract intact when no dist

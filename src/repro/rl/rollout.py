@@ -26,7 +26,14 @@ class Trajectory(NamedTuple):
     log_probs: Array    # [T, B]
     values: Array       # [T, B]
     rewards: Array      # [T, B]
-    dones: Array        # [T, B]
+    dones: Array        # [T, B] terminations (no bootstrap across)
+    truncated: Array    # [T, B] pure timeouts (bootstrap through)
+    next_obs: Array     # [T, B, ...] true successor obs (pre-reset)
+
+    @property
+    def boundary(self) -> Array:
+        """Episode boundaries — what auto-reset/episode stats key off."""
+        return self.dones | self.truncated
 
 
 class RolloutResult(NamedTuple):
@@ -64,8 +71,10 @@ def rollout(params, env: Environment, apply_fn: Callable, key: Array,
         dparams = dparams.astype(jnp.float32)
         action = dist.sample(step_key, dparams)
         logp = dist.log_prob(dparams, action)
-        state, next_obs, reward, done = jax.vmap(env.step)(state, action)
-        tr = Trajectory(obs, action, logp, value, reward, done)
+        state, next_obs, reward, done, truncated, final_obs = \
+            jax.vmap(env.step)(state, action)
+        tr = Trajectory(obs, action, logp, value, reward, done,
+                        truncated, final_obs)
         return (state, next_obs), tr
 
     keys = jax.random.split(key, n_steps)
@@ -75,8 +84,19 @@ def rollout(params, env: Environment, apply_fn: Callable, key: Array,
 
 
 def episode_returns(traj: Trajectory) -> Tuple[Array, Array]:
-    """Mean undiscounted return and count of COMPLETED episodes."""
-    T, B = traj.rewards.shape
+    """Mean undiscounted return and count of COMPLETED episodes.
+
+    An episode completes at any boundary — termination OR truncation
+    (a timed-out episode still has a return; only its value targets
+    differ).
+    """
+    return episode_returns_from(traj.rewards, traj.boundary)
+
+
+def episode_returns_from(rewards: Array, boundary: Array
+                         ) -> Tuple[Array, Array]:
+    """``episode_returns`` on raw [T, B] arrays (for collection loops
+    that don't build a :class:`Trajectory`, e.g. the replay drivers)."""
 
     def per_env(rew, done):
         def f(carry, x):
@@ -91,6 +111,6 @@ def episode_returns(traj: Trajectory) -> Tuple[Array, Array]:
         (_, total, n), _ = jax.lax.scan(f, (0.0, 0.0, 0), (rew, done))
         return total, n
 
-    totals, ns = jax.vmap(per_env, in_axes=1)(traj.rewards, traj.dones)
+    totals, ns = jax.vmap(per_env, in_axes=1)(rewards, boundary)
     n = ns.sum()
     return totals.sum() / jnp.maximum(n, 1), n

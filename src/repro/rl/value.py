@@ -1,0 +1,334 @@
+"""Off-policy value-based RL on the quantized compute fabric.
+
+The paper's Fig. 3a parity claim spans value-based methods, so this
+module grows the old DQN loss stub into a family that trains end to
+end under the fxp8-behaviour-actor / fp32-learner split:
+
+  * a pure-JAX circular replay whose transitions carry a *discount*
+    instead of a done flag — ``discount = gamma^K * (1 - terminated)``
+    folds the n-step horizon, truncation (bootstrap: discount stays
+    ``gamma^K``) and termination (no bootstrap: 0) into one number, so
+    every target below is the same ``r + discount * Q(next_obs)``;
+  * :func:`nstep_targets` — truncation-aware n-step returns computed
+    from a fresh [T, B] rollout chunk before insertion (windows stop at
+    episode boundaries; ``next_obs`` is the true pre-reset successor);
+  * Double-DQN (:func:`dqn_loss`), QR-DQN quantile regression
+    (:func:`qrdqn_loss`, à la fqf-iqn-qrdqn) for Discrete envs;
+  * DDPG/TD3-style continuous control (twin critics, target-policy
+    smoothing, polyak targets) for Box envs.
+
+The behaviour policy (epsilon-greedy over the quantized Q net, or the
+quantized deterministic actor + exploration noise) is the quantized
+actor; the learner updates in fp32 — exactly the split the PPO driver
+uses.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# configs
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DQNConfig:
+    gamma: float = 0.99
+    eps_start: float = 1.0
+    eps_end: float = 0.05
+    eps_decay_steps: int = 2_000
+    target_update_every: int = 100   # hard-update period (legacy loops)
+    target_tau: float = 0.01         # polyak rate (the jitted driver)
+    batch_size: int = 64
+    double: bool = True              # Double-DQN action selection
+    n_step: int = 1
+    learn_start: int = 256           # min replay size before updates
+
+
+@dataclasses.dataclass(frozen=True)
+class QRDQNConfig(DQNConfig):
+    n_quantiles: int = 32
+    kappa: float = 1.0               # quantile-Huber threshold
+
+
+@dataclasses.dataclass(frozen=True)
+class DDPGConfig:
+    """TD3-flavoured DDPG: twin critics + target-policy smoothing."""
+
+    low: float = -1.0                # action bounds (Box envs)
+    high: float = 1.0
+    gamma: float = 0.99
+    tau: float = 0.005               # polyak rate for both targets
+    batch_size: int = 128
+    n_step: int = 1
+    learn_start: int = 256
+    explore_noise: float = 0.1       # behaviour noise, x half-range
+    policy_noise: float = 0.2        # target smoothing noise, x half-range
+    noise_clip: float = 0.5          # smoothing clip, x half-range
+
+    @property
+    def half_range(self) -> float:
+        return 0.5 * (self.high - self.low)
+
+
+# ---------------------------------------------------------------------------
+# replay (circular, discount-encoded transitions)
+# ---------------------------------------------------------------------------
+
+class Replay(NamedTuple):
+    obs: Array          # [N, ...]
+    actions: Array      # [N] (Discrete) or [N, d] (Box)
+    rewards: Array      # [N] (n-step accumulated)
+    next_obs: Array     # [N, ...] true successor (pre-reset at bounds)
+    discounts: Array    # [N] gamma^K * (1 - terminated)
+    ptr: Array          # scalar int32: next write slot
+    size: Array         # scalar int32: valid entries
+
+
+def replay_init(capacity: int, obs_shape,
+                action_shape: Tuple[int, ...] = (),
+                action_dtype=jnp.int32) -> Replay:
+    z = jnp.zeros
+    return Replay(z((capacity,) + tuple(obs_shape)),
+                  z((capacity,) + tuple(action_shape), action_dtype),
+                  z((capacity,)),
+                  z((capacity,) + tuple(obs_shape)),
+                  z((capacity,)),
+                  jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32))
+
+
+def replay_add(buf: Replay, obs, action, reward, next_obs,
+               discount) -> Replay:
+    """Add a batch of B transitions (contiguous circular write).
+
+    ``B >= capacity`` keeps exactly the last ``capacity`` transitions:
+    a full-batch write would produce duplicate scatter indices, whose
+    write order XLA leaves unspecified, so the survivors are sliced out
+    first and the scatter indices stay unique (deterministic).
+    """
+    B = obs.shape[0]
+    cap = buf.obs.shape[0]
+    ptr = buf.ptr
+    if B >= cap:
+        drop = B - cap
+        obs, action, reward, next_obs, discount = (
+            x[drop:] for x in (obs, action, reward, next_obs, discount))
+        ptr = ptr + drop        # slots the dropped prefix would have used
+        B = cap
+    idx = (ptr + jnp.arange(B)) % cap
+    return Replay(
+        buf.obs.at[idx].set(obs),
+        buf.actions.at[idx].set(action),
+        buf.rewards.at[idx].set(reward),
+        buf.next_obs.at[idx].set(next_obs),
+        buf.discounts.at[idx].set(discount),
+        (ptr + B) % cap,
+        jnp.minimum(buf.size + B, cap),
+    )
+
+
+def replay_sample(buf: Replay, key: Array, n: int,
+                  min_size: int = 1) -> dict:
+    """Sample ``n`` transitions uniformly from the valid prefix.
+
+    A buffer below ``min_size`` (e.g. the driver's ``learn_start``)
+    must not train: eagerly that's a hard error; under jit (where
+    ``size`` is a tracer) the returned ``"weight"`` column is 0 so a
+    weighted loss masks the whole batch instead of silently training
+    on all-zero transitions.
+    """
+    min_size = max(int(min_size), 1)
+    if not isinstance(buf.size, jax.core.Tracer) \
+            and int(buf.size) < min_size:
+        raise ValueError(
+            f"replay_sample: buffer holds {int(buf.size)} transitions "
+            f"but min_size={min_size} — sampling would return "
+            "uninitialized (all-zero) transitions; collect more steps "
+            "first (learn_start)")
+    idx = jax.random.randint(key, (n,), 0, jnp.maximum(buf.size, 1))
+    weight = jnp.broadcast_to(
+        (buf.size >= min_size).astype(jnp.float32), (n,))
+    return {"obs": buf.obs[idx], "actions": buf.actions[idx],
+            "rewards": buf.rewards[idx], "next_obs": buf.next_obs[idx],
+            "discounts": buf.discounts[idx], "weight": weight}
+
+
+# ---------------------------------------------------------------------------
+# n-step targets from a rollout chunk (truncation-aware)
+# ---------------------------------------------------------------------------
+
+def nstep_targets(rewards: Array, dones: Array, truncated: Array,
+                  next_obs: Array, gamma: float, n: int):
+    """Fold a fresh [T, B] chunk into n-step transitions.
+
+    For each start row t the window runs ``K = min(n, steps to the
+    first episode boundary, T - t)`` steps.  Returns
+
+      * ``returns``  [T, B]      sum_{k<K} gamma^k r_{t+k}
+      * ``next_obs`` [T, B, ...] the true successor of the window's
+        last step (pre-reset ``final_obs`` at boundaries)
+      * ``discount`` [T, B]      gamma^K * (1 - terminated_at_end)
+
+    so the target is always ``returns + discount * Q(next_obs)``:
+    terminations zero the bootstrap, truncations keep it (through the
+    pre-reset observation), and the chunk tail degrades to valid
+    shorter-horizon targets rather than crossing into the next chunk.
+    """
+    if n < 1:
+        raise ValueError(f"nstep_targets needs n >= 1, got {n}")
+    T = rewards.shape[0]
+    f32 = jnp.float32
+    boundary = dones | truncated
+
+    returns = rewards.astype(f32)
+    nxt = next_obs
+    term_end = dones
+    gpow = jnp.full(rewards.shape, gamma, f32)       # gamma^K, K=1
+    open_ = ~boundary                                # window extendable
+
+    for k in range(1, min(n, T)):
+        def shift(x, fill):
+            pad = jnp.full((k,) + x.shape[1:], fill, x.dtype)
+            return jnp.concatenate([x[k:], pad], axis=0)
+
+        in_range = shift(jnp.ones_like(boundary), False)
+        ext = open_ & in_range                       # extend to step t+k
+        extm = ext.reshape(ext.shape + (1,) * (nxt.ndim - ext.ndim))
+        returns = returns + jnp.where(
+            ext, (gamma ** k) * shift(rewards.astype(f32), 0.0), 0.0)
+        nxt = jnp.where(extm, shift(next_obs, 0.0), nxt)
+        term_end = jnp.where(ext, shift(dones, False), term_end)
+        gpow = jnp.where(ext, gamma ** (k + 1), gpow)
+        open_ = ext & ~shift(boundary, True)
+
+    discount = gpow * (1.0 - term_end.astype(f32))
+    return returns, nxt, discount
+
+
+# ---------------------------------------------------------------------------
+# behaviour policy pieces
+# ---------------------------------------------------------------------------
+
+def epsilon(step: Array, cfg: DQNConfig) -> Array:
+    frac = jnp.clip(step / cfg.eps_decay_steps, 0.0, 1.0)
+    return cfg.eps_start + frac * (cfg.eps_end - cfg.eps_start)
+
+
+def egreedy(key: Array, qvals: Array, eps: Array) -> Array:
+    B, A = qvals.shape
+    k1, k2 = jax.random.split(key)
+    rand = jax.random.randint(k1, (B,), 0, A)
+    greedy = jnp.argmax(qvals, axis=-1)
+    return jnp.where(jax.random.uniform(k2, (B,)) < eps, rand, greedy)
+
+
+def polyak(target, online, tau: float):
+    """Soft target-network update: target += tau * (online - target)."""
+    return jax.tree.map(lambda t, o: t + tau * (o - t), target, online)
+
+
+def _weighted_mean(x: Array, weight: Optional[Array]) -> Array:
+    if weight is None:
+        return jnp.mean(x)
+    return (x * weight).sum() / jnp.maximum(weight.sum(), 1.0)
+
+
+def _batch_discount(batch: dict, cfg) -> Array:
+    """Discount column; legacy batches carry ``dones`` instead."""
+    if "discounts" in batch:
+        return batch["discounts"]
+    return cfg.gamma * (1.0 - batch["dones"].astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+def dqn_loss(params, target_params, apply_fn: Callable, batch: dict,
+             cfg: DQNConfig) -> Array:
+    """(Double-)DQN TD error. ``apply_fn(params, obs) -> [B, A]``."""
+    q = apply_fn(params, batch["obs"])
+    q_sel = q[jnp.arange(q.shape[0]), batch["actions"]]
+    q_next_t = apply_fn(target_params, batch["next_obs"])
+    if cfg.double:
+        a_star = jnp.argmax(apply_fn(params, batch["next_obs"]), axis=-1)
+        q_next = q_next_t[jnp.arange(q_next_t.shape[0]), a_star]
+    else:
+        q_next = q_next_t.max(-1)
+    target = batch["rewards"] + _batch_discount(batch, cfg) * q_next
+    target = jax.lax.stop_gradient(target)
+    return _weighted_mean(jnp.square(q_sel - target),
+                          batch.get("weight"))
+
+
+def quantile_taus(n: int) -> Array:
+    """Quantile midpoints tau_i = (2i + 1) / 2n."""
+    return (jnp.arange(n, dtype=jnp.float32) + 0.5) / n
+
+
+def qrdqn_loss(params, target_params, apply_fn: Callable, batch: dict,
+               cfg: QRDQNConfig) -> Array:
+    """Quantile-regression DQN (Dabney et al.) with Double-DQN action
+    selection.  ``apply_fn(params, obs) -> [B, A, n_quantiles]``."""
+    theta = apply_fn(params, batch["obs"])            # [B, A, N]
+    B, _, N = theta.shape
+    rows = jnp.arange(B)
+    theta_a = theta[rows, batch["actions"]]           # [B, N]
+
+    next_t = apply_fn(target_params, batch["next_obs"])
+    if cfg.double:
+        a_star = jnp.argmax(
+            apply_fn(params, batch["next_obs"]).mean(-1), axis=-1)
+    else:
+        a_star = jnp.argmax(next_t.mean(-1), axis=-1)
+    next_q = next_t[rows, a_star]                     # [B, N]
+    target = (batch["rewards"][:, None]
+              + _batch_discount(batch, cfg)[:, None] * next_q)
+    target = jax.lax.stop_gradient(target)
+
+    # pairwise TD errors u[b, i, j] = target_j - theta_i
+    u = target[:, None, :] - theta_a[:, :, None]      # [B, N, N]
+    absu = jnp.abs(u)
+    huber = jnp.where(absu <= cfg.kappa,
+                      0.5 * jnp.square(u),
+                      cfg.kappa * (absu - 0.5 * cfg.kappa))
+    taus = quantile_taus(N)[None, :, None]
+    rho = jnp.abs(taus - (u < 0).astype(jnp.float32)) * huber / cfg.kappa
+    per_sample = rho.mean(axis=2).sum(axis=1)         # [B]
+    return _weighted_mean(per_sample, batch.get("weight"))
+
+
+def ddpg_critic_loss(critic_params, target_critic, target_actor,
+                     critic_apply: Callable, actor_apply: Callable,
+                     batch: dict, cfg: DDPGConfig, key: Array) -> Array:
+    """Twin-critic TD error with target-policy smoothing (TD3 eq. 14).
+
+    ``critic_apply(params, obs, act) -> (q1, q2)``;
+    ``actor_apply(params, obs) -> action`` already inside the bounds.
+    """
+    na = actor_apply(target_actor, batch["next_obs"])
+    noise = jnp.clip(jax.random.normal(key, na.shape) * cfg.policy_noise,
+                     -cfg.noise_clip, cfg.noise_clip) * cfg.half_range
+    na = jnp.clip(na + noise, cfg.low, cfg.high)
+    q1_t, q2_t = critic_apply(target_critic, batch["next_obs"], na)
+    target = (batch["rewards"]
+              + _batch_discount(batch, cfg) * jnp.minimum(q1_t, q2_t))
+    target = jax.lax.stop_gradient(target)
+    q1, q2 = critic_apply(critic_params, batch["obs"], batch["actions"])
+    err = jnp.square(q1 - target) + jnp.square(q2 - target)
+    return _weighted_mean(err, batch.get("weight"))
+
+
+def ddpg_actor_loss(actor_params, critic_params,
+                    critic_apply: Callable, actor_apply: Callable,
+                    batch: dict) -> Array:
+    """Deterministic policy gradient: maximize Q1(s, pi(s))."""
+    a = actor_apply(actor_params, batch["obs"])
+    q1, _ = critic_apply(critic_params, batch["obs"], a)
+    return -_weighted_mean(q1, batch.get("weight"))

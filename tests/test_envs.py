@@ -55,11 +55,15 @@ def test_reset_step_shapes_and_dtypes(name):
     action = act_space.sample(jax.random.PRNGKey(1))
     assert action.shape == act_space.shape
 
-    state, obs2, reward, done = env.step(state, action)
+    state, obs2, reward, done, truncated, final_obs = \
+        env.step(state, action)
     assert obs2.shape == obs_space.shape
     assert obs2.dtype == obs_space.dtype
     assert reward.shape == () and reward.dtype == jnp.float32
     assert done.shape == () and done.dtype == jnp.bool_
+    assert truncated.shape == () and truncated.dtype == jnp.bool_
+    assert final_obs.shape == obs_space.shape
+    assert final_obs.dtype == obs_space.dtype
     assert bool(obs_space.contains(obs2))
 
 
@@ -71,12 +75,14 @@ def test_determinism_and_jit_purity(name):
     s2, o2 = env.reset(jax.random.PRNGKey(0))
     np.testing.assert_allclose(np.asarray(o1), np.asarray(o2))
 
-    _, eo, er, ed = env.step(s1, action)
-    _, jo, jr, jd = jax.jit(env.step)(s2, action)
+    _, eo, er, ed, et, ef = env.step(s1, action)
+    _, jo, jr, jd, jt, jf = jax.jit(env.step)(s2, action)
     np.testing.assert_allclose(np.asarray(eo), np.asarray(jo),
                                rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(ef), np.asarray(jf),
+                               rtol=1e-5, atol=1e-6)
     assert float(er) == pytest.approx(float(jr), rel=1e-5)
-    assert bool(ed) == bool(jd)
+    assert bool(ed) == bool(jd) and bool(et) == bool(jt)
 
 
 @pytest.mark.parametrize("name", ALL_ENVS)
@@ -87,32 +93,65 @@ def test_vmap_batching(name):
     assert obs.shape == (n,) + env.obs_shape
     keys = jax.random.split(jax.random.PRNGKey(1), n)
     actions = jax.vmap(env.action_space.sample)(keys)
-    state, obs, reward, done = jax.jit(jax.vmap(env.step))(state, actions)
+    state, obs, reward, done, truncated, final_obs = \
+        jax.jit(jax.vmap(env.step))(state, actions)
     assert obs.shape == (n,) + env.obs_shape
+    assert final_obs.shape == (n,) + env.obs_shape
     assert reward.shape == (n,) and done.shape == (n,)
+    assert truncated.shape == (n,)
 
 
 @pytest.mark.parametrize("name", ALL_ENVS)
 def test_auto_reset_semantics(name):
-    """Within max_steps+1 random steps at least one episode ends, and
-    the state returned by every done transition is a fresh episode
-    (step counter back to zero)."""
+    """Within max_steps+1 random steps at least one episode boundary
+    (termination OR truncation) occurs, and the state returned by every
+    boundary transition is a fresh episode (step counter back to
+    zero)."""
     env = make(name)
     T = env.spec.max_steps + 1
     s0, _ = env.reset(jax.random.PRNGKey(0))
 
     def one(state, key):
         action = env.action_space.sample(key)
-        state, _, _, done = env.step(state, action)
-        return state, (done, state.t)
+        state, _, _, done, truncated, _ = env.step(state, action)
+        return state, (done | truncated, state.t)
 
     keys = jax.random.split(jax.random.PRNGKey(1), T)
-    _, (dones, ts) = jax.jit(
+    _, (bounds, ts) = jax.jit(
         lambda s, k: jax.lax.scan(one, s, k))(s0, keys)
-    dones, ts = np.asarray(dones), np.asarray(ts)
-    assert dones.any(), f"{name}: no episode ended in {T} steps"
-    assert (ts[dones] == 0).all(), \
-        f"{name}: done transition did not return a fresh episode"
+    bounds, ts = np.asarray(bounds), np.asarray(ts)
+    assert bounds.any(), f"{name}: no episode ended in {T} steps"
+    assert (ts[bounds] == 0).all(), \
+        f"{name}: boundary transition did not return a fresh episode"
+
+
+@pytest.mark.parametrize("name", ALL_ENVS)
+def test_termination_truncation_contract(name):
+    """done and truncated are mutually exclusive, final_obs equals obs
+    off-boundary, and the pure time limit reports truncated — never
+    done — so value targets can bootstrap through it."""
+    env = make(name)
+    T = env.spec.max_steps + 1
+    s0, _ = env.reset(jax.random.PRNGKey(0))
+
+    def one(state, key):
+        action = env.action_space.sample(key)
+        state, obs, _, done, truncated, final_obs = \
+            env.step(state, action)
+        off = ~(done | truncated)
+        same = jnp.all(jnp.abs(obs - final_obs) == 0.0) | ~off
+        return state, (done, truncated, same)
+
+    keys = jax.random.split(jax.random.PRNGKey(1), T)
+    _, (dones, truncs, same) = jax.jit(
+        lambda s, k: jax.lax.scan(one, s, k))(s0, keys)
+    dones, truncs = np.asarray(dones), np.asarray(truncs)
+    assert not (dones & truncs).any(), \
+        f"{name}: a step reported done AND truncated"
+    assert np.asarray(same).all(), \
+        f"{name}: final_obs differed from obs off-boundary"
+    if name == "pendulum":       # pure time-limit env: never terminates
+        assert not dones.any() and truncs.any()
 
 
 @pytest.mark.parametrize("name", ALL_ENVS)
@@ -163,11 +202,38 @@ def test_normalize_observation_affine():
                                rtol=1e-6)
 
 
+def test_normalize_observation_array_stats_keep_finite_bounds():
+    """Obs-shaped mean/std must not collapse a bounded space to
+    Box(-inf, inf): the bounds are transformed elementwise and the
+    tightest enclosing interval kept (finite, and still containing
+    every normalized observation)."""
+    base = make("mountain_car")              # Box(-1.2, 0.6, (2,))
+    mean = np.array([-0.3, 0.0], np.float32)
+    std = np.array([0.9, 0.035], np.float32)
+    env = wrappers.normalize_observation(base, mean, std)
+    space = env.observation_space
+    assert space.bounded, "array stats collapsed the space to inf bounds"
+    lo = (np.array([base.observation_space.low] * 2) - mean) / std
+    hi = (np.array([base.observation_space.high] * 2) - mean) / std
+    assert space.low == pytest.approx(float(np.minimum(lo, hi).min()))
+    assert space.high == pytest.approx(float(np.maximum(lo, hi).max()))
+    _, obs = env.reset(jax.random.PRNGKey(0))
+    assert bool(space.contains(obs))
+    # a negative std flips the interval per element; bounds stay ordered
+    env2 = wrappers.normalize_observation(base, 0.0,
+                                          np.array([-1.0, 1.0], np.float32))
+    assert env2.observation_space.bounded
+    assert env2.observation_space.low < env2.observation_space.high
+    with pytest.raises(ValueError, match="non-zero"):
+        wrappers.normalize_observation(base, 0.0,
+                                       np.array([1.0, 0.0], np.float32))
+
+
 def test_scale_reward():
     base = make("cartpole")            # reward is +1 per step
     env = wrappers.scale_reward(base, 0.25)
     s, _ = env.reset(jax.random.PRNGKey(0))
-    _, _, r, _ = env.step(s, jnp.asarray(0))
+    _, _, r, _, _, _ = env.step(s, jnp.asarray(0))
     assert float(r) == pytest.approx(0.25)
 
 
@@ -177,10 +243,14 @@ def test_time_limit_truncates_and_force_resets():
     s, _ = env.reset(jax.random.PRNGKey(0))
     step = jax.jit(env.step)
     for i in range(5):
-        s, obs, r, d = step(s, jnp.zeros((1,)))
-    assert bool(d), "episode must truncate at the wrapper limit"
+        s, obs, r, d, tr, final_obs = step(s, jnp.zeros((1,)))
+    # a pure timeout is TRUNCATED, never folded into done
+    assert bool(tr), "episode must truncate at the wrapper limit"
+    assert not bool(d), "a pure timeout must not report done"
     assert int(s.t) == 0 and int(s.inner.t) == 0   # forced inner reset
     assert bool(env.observation_space.contains(obs))
+    # final_obs is the pre-reset observation, not the fresh episode's
+    assert not np.allclose(np.asarray(final_obs), np.asarray(obs))
 
 
 def test_frame_stack_shape_and_episode_boundary():
@@ -195,8 +265,8 @@ def test_frame_stack_shape_and_episode_boundary():
     step = jax.jit(env.step)
     done = False
     for _ in range(12):                # catch ends within 10 steps
-        s, obs, r, d = step(s, jnp.asarray(1))
-        if bool(d):
+        s, obs, r, d, tr, _ = step(s, jnp.asarray(1))
+        if bool(d | tr):
             done = True
             break
     assert done

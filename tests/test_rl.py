@@ -12,12 +12,17 @@ from repro.rl import PPOConfig, batch_from_traj, gae, init_envs, rollout
 from repro.rl.actor_learner import (merge_results, pack_weights,
                                     sync_bytes, unpack_weights)
 from repro.rl.dists import Categorical, TanhGaussian, distribution_for
-from repro.rl.dqn import (DQNConfig, dqn_loss, egreedy, epsilon,
-                          replay_add, replay_init, replay_sample)
 from repro.rl.envs import Box, Discrete, Environment, make
 from repro.rl.envs.spaces import head_dim
-from repro.rl.nets import (mlp_ac_apply, mlp_ac_init, mlp_q_apply,
-                           mlp_q_init)
+from repro.rl.nets import (mlp_ac_apply, mlp_ac_init, mlp_pi_apply,
+                           mlp_pi_init, mlp_q_apply, mlp_q_init,
+                           mlp_qr_apply, mlp_qr_init, mlp_twin_q_apply,
+                           mlp_twin_q_init)
+from repro.rl.value import (DDPGConfig, DQNConfig, QRDQNConfig,
+                            ddpg_actor_loss, ddpg_critic_loss, dqn_loss,
+                            egreedy, epsilon, nstep_targets, polyak,
+                            qrdqn_loss, replay_add, replay_init,
+                            replay_sample)
 from repro.rl.ppo import (a2c_loss, apply_stage_mask, minibatch_epochs,
                           ppo_loss, stage_mask)
 from repro.rl.rollout import episode_returns
@@ -44,10 +49,11 @@ def test_cartpole_terminates_on_angle():
     s, _ = env.reset(jax.random.PRNGKey(0))
     done = False
     for _ in range(500):          # always push right -> falls over
-        s, _, _, d = jax.jit(env.step)(s, jnp.asarray(1))
+        s, _, _, d, tr, _ = jax.jit(env.step)(s, jnp.asarray(1))
         done = done or bool(d)
         if done:
             break
+        assert not bool(tr)       # falls well before the 500-step limit
     assert done
 
 
@@ -72,9 +78,9 @@ def test_keydoor_subgoal_then_goal():
                 a = 3
             else:
                 break
-            s, _, r, d = step(s, jnp.asarray(a))
+            s, _, r, d, tr, _ = step(s, jnp.asarray(a))
             total += float(r)
-            if bool(d):
+            if bool(d | tr):
                 break
         return s, total
 
@@ -255,6 +261,30 @@ def test_ppo_clipping_caps_ratio_gradient():
     assert gnorm < 1e-5
 
 
+def test_minibatch_epochs_rejects_indivisible_batch():
+    """A batch that does not divide into cfg.minibatches would silently
+    drop the tail every epoch — it must be a loud error instead."""
+    from repro.optim import AdamWConfig, adamw_init, adamw_update, constant
+    params = unbox(mlp_ac_init(jax.random.PRNGKey(0), 4, 2))
+    fn = lambda p, o: mlp_ac_apply(p, o)
+    batch = _tiny_batch(n=10)                 # 10 % 4 != 0
+    opt = adamw_init(params)
+    sched = constant(1e-3)
+    ocfg = AdamWConfig()
+
+    def opt_step(p, s, g):
+        p, s, _ = adamw_update(g, s, p, sched, ocfg)
+        return p, s
+
+    with pytest.raises(ValueError, match="silently"):
+        minibatch_epochs(jax.random.PRNGKey(0), params, opt, batch, fn,
+                         PPOConfig(), opt_step)
+    # the divisible case still runs
+    out = minibatch_epochs(jax.random.PRNGKey(0), params, opt,
+                           _tiny_batch(n=16), fn, PPOConfig(), opt_step)
+    assert len(out) == 3
+
+
 def test_a2c_loss_finite():
     params = unbox(mlp_ac_init(jax.random.PRNGKey(0), 4, 2))
     fn = lambda p, o: mlp_ac_apply(p, o)
@@ -370,7 +400,8 @@ def test_masked_batch_zeroes_straggler_loss():
     traj = Trajectory(
         obs=jnp.zeros((T, B, 4)), actions=jnp.zeros((T, B), jnp.int32),
         log_probs=jnp.zeros((T, B)), values=jnp.zeros((T, B)),
-        rewards=jnp.ones((T, B)), dones=jnp.zeros((T, B), bool))
+        rewards=jnp.ones((T, B)), dones=jnp.zeros((T, B), bool),
+        truncated=jnp.zeros((T, B), bool), next_obs=jnp.zeros((T, B, 4)))
     batch = batch_from_traj(traj, jnp.zeros((B,)), PPOConfig(),
                             actor_mask=jnp.zeros((B,)))
     params = unbox(mlp_ac_init(jax.random.PRNGKey(0), 4, 2))
@@ -379,21 +410,165 @@ def test_masked_batch_zeroes_straggler_loss():
     loss, stats = ppo_loss(params, fn, batch, cfg)
     assert float(stats["pg_loss"]) == 0.0
     assert float(stats["v_loss"]) == 0.0
+    # a2c honours the same liveness-mask contract (--algo a2c runs
+    # through the identical masked sharded driver)
+    loss, stats = a2c_loss(params, fn, batch, cfg)
+    assert float(stats["pg_loss"]) == 0.0
+    assert float(stats["v_loss"]) == 0.0
 
 
-# -- DQN ----------------------------------------------------------------
+# -- truncation-aware GAE (the headline bugfix) --------------------------
+
+def test_gae_bootstraps_through_truncation_not_termination():
+    """Identical rewards/values, one env truncated vs one terminated at
+    t=0: the truncated row's advantage must include the discounted
+    bootstrap value of its final (pre-reset) observation; the
+    terminated row must not."""
+    r = jnp.array([[1.0, 1.0], [1.0, 1.0]])
+    v = jnp.zeros((2, 2))
+    dones = jnp.array([[False, True], [False, False]])
+    trunc = jnp.array([[True, False], [False, False]])
+    boot = jnp.full((2, 2), 10.0)          # V(final_obs) everywhere
+    lastv = jnp.zeros((2,))
+    adv, _ = gae(r, v, dones, lastv, gamma=0.9, lam=0.95,
+                 truncated=trunc, bootstrap_values=boot)
+    # env 0 truncated at t=0: adv = r + gamma * V(final_obs)
+    assert float(adv[0, 0]) == pytest.approx(1.0 + 0.9 * 10.0)
+    # env 1 terminated at t=0: no bootstrap
+    assert float(adv[0, 1]) == pytest.approx(1.0)
+    # the advantage chain still breaks at the truncation: row 1 of
+    # env 0 (the fresh episode) must not leak into row 0 beyond the
+    # bootstrap — identical to a lam=0 one-step target here
+    adv_no_chain, _ = gae(r, v, dones, lastv, gamma=0.9, lam=0.0,
+                          truncated=trunc, bootstrap_values=boot)
+    assert float(adv[0, 0]) == pytest.approx(float(adv_no_chain[0, 0]))
+
+    # truncated without bootstrap values is a loud error, not a bias
+    with pytest.raises(ValueError, match="bootstrap_values"):
+        gae(r, v, dones, lastv, truncated=trunc)
+
+
+def test_gae_truncation_end_to_end_on_pendulum():
+    """A pendulum rollout across the 200-step horizon: dones stay
+    False, the boundary row is truncated, and batch_from_traj with a
+    value_fn produces targets that bootstrap V(final_obs) there."""
+    env = make("pendulum")
+    dist = distribution_for(env.action_space)
+    params = unbox(mlp_ac_init(jax.random.PRNGKey(0), 3,
+                               head_dim(env.action_space)))
+    fn = lambda p, o: mlp_ac_apply(p, o)
+    est, obs = init_envs(env, jax.random.PRNGKey(1), 2)
+    res = jax.jit(lambda p, e, o: rollout(
+        p, env, fn, jax.random.PRNGKey(2), e, o, 202,
+        dist))(params, est, obs)
+    assert not bool(res.traj.dones.any())
+    assert bool(res.traj.truncated.any())
+    t, b = map(int, np.argwhere(np.asarray(res.traj.truncated))[0])
+    # next_obs at the truncation is the pre-reset state, not the fresh
+    # episode's first observation (which the next row acts on)
+    assert not np.allclose(np.asarray(res.traj.next_obs[t, b]),
+                           np.asarray(res.traj.obs[t + 1, b]))
+
+    cfg = PPOConfig(gamma=0.9, lam=0.95)
+    value_fn = lambda o: fn(params, o)[1]
+    batch = batch_from_traj(res.traj, res.last_value, cfg,
+                            value_fn=value_fn)
+    T, B = res.traj.rewards.shape
+    rets = batch["returns"].reshape(T, B)
+    boot = value_fn(res.traj.next_obs.reshape(T * B, 3)).reshape(T, B)
+    # at the truncation row return = r + gamma * V(final_obs) exactly
+    # (the recursion restarts there, so lam plays no role in that row)
+    expect = float(res.traj.rewards[t, b] + 0.9 * boot[t, b])
+    assert float(rets[t, b]) == pytest.approx(expect, rel=1e-5)
+
+
+def test_nstep_targets_windows_and_discounts():
+    """3-step windows stop at boundaries: termination zeroes the
+    discount, truncation keeps gamma^K, the tail degrades to shorter
+    valid windows."""
+    g = 0.5
+    T, B = 5, 1
+    r = jnp.arange(1.0, 6.0).reshape(T, B)          # 1..5
+    dones = jnp.array([[False], [True], [False], [False], [False]])
+    trunc = jnp.array([[False], [False], [False], [True], [False]])
+    nobs = jnp.arange(10.0, 15.0).reshape(T, B, 1)  # distinct markers
+    rets, nxt, disc = nstep_targets(r, dones, trunc, nobs, g, 3)
+    rets, nxt, disc = (np.asarray(rets)[:, 0], np.asarray(nxt)[:, 0, 0],
+                       np.asarray(disc)[:, 0])
+    # t=0: window hits the termination at t=1 -> K=2, no bootstrap
+    assert rets[0] == pytest.approx(1.0 + g * 2.0)
+    assert disc[0] == 0.0 and nxt[0] == 11.0
+    # t=1: terminated immediately -> K=1, no bootstrap
+    assert rets[1] == pytest.approx(2.0) and disc[1] == 0.0
+    # t=2: window hits the truncation at t=3 -> K=2, bootstrap gamma^2
+    assert rets[2] == pytest.approx(3.0 + g * 4.0)
+    assert disc[2] == pytest.approx(g ** 2) and nxt[2] == 13.0
+    # t=3: truncated immediately -> K=1, bootstrap gamma
+    assert disc[3] == pytest.approx(g) and nxt[3] == 13.0
+    # t=4: chunk tail -> K=1 one-step target
+    assert rets[4] == pytest.approx(5.0)
+    assert disc[4] == pytest.approx(g) and nxt[4] == 14.0
+
+
+# -- replay + value-based losses -----------------------------------------
 
 def test_replay_circular_and_sample():
     buf = replay_init(8, (4,))
     obs = jnp.arange(24.0).reshape(6, 4)
     buf = replay_add(buf, obs, jnp.zeros(6, jnp.int32), jnp.ones(6),
-                     obs, jnp.zeros(6, bool))
+                     obs, jnp.full(6, 0.99))
     assert int(buf.size) == 6 and int(buf.ptr) == 6
     buf = replay_add(buf, obs, jnp.zeros(6, jnp.int32), jnp.ones(6),
-                     obs, jnp.zeros(6, bool))
+                     obs, jnp.full(6, 0.99))
     assert int(buf.size) == 8 and int(buf.ptr) == 4   # wrapped
     s = replay_sample(buf, jax.random.PRNGKey(0), 16)
     assert s["obs"].shape == (16, 4)
+    np.testing.assert_array_equal(np.asarray(s["weight"]), 1.0)
+
+
+def test_replay_sample_guards_underfilled_buffer():
+    """The empty/underfilled buffer is never silently trained on:
+    eager sampling raises, and under jit the weight column masks the
+    whole batch (so a weighted loss is exactly zero)."""
+    buf = replay_init(8, (4,))
+    with pytest.raises(ValueError, match="min_size"):
+        replay_sample(buf, jax.random.PRNGKey(0), 4)
+    obs = jnp.ones((2, 4))
+    buf = replay_add(buf, obs, jnp.zeros(2, jnp.int32), jnp.ones(2),
+                     obs, jnp.zeros(2))
+    with pytest.raises(ValueError, match="min_size"):
+        replay_sample(buf, jax.random.PRNGKey(0), 4, min_size=4)
+    # under jit size is a tracer: the guard becomes a zero weight...
+    s = jax.jit(lambda b, k: replay_sample(b, k, 4, min_size=4))(
+        buf, jax.random.PRNGKey(0))
+    np.testing.assert_array_equal(np.asarray(s["weight"]), 0.0)
+    # ...which zeroes the masked losses
+    params = unbox(mlp_q_init(jax.random.PRNGKey(0), 4, 2))
+    fn = lambda p, o: mlp_q_apply(p, o)
+    assert float(dqn_loss(params, params, fn, s, DQNConfig())) == 0.0
+    # and once filled past min_size the same call trains normally
+    obs = jnp.ones((6, 4))
+    buf = replay_add(buf, obs, jnp.zeros(6, jnp.int32), jnp.ones(6),
+                     obs, jnp.zeros(6))
+    s = jax.jit(lambda b, k: replay_sample(b, k, 4, min_size=4))(
+        buf, jax.random.PRNGKey(0))
+    np.testing.assert_array_equal(np.asarray(s["weight"]), 1.0)
+    assert float(dqn_loss(params, params, fn, s, DQNConfig())) > 0.0
+
+
+def test_dqn_shim_rejects_boolean_done_column():
+    """repro.rl.dqn.replay_add stored done flags pre-PR3; the column is
+    a discount now — a legacy bool argument must be a loud TypeError,
+    not silently-inverted TD targets."""
+    from repro.rl import dqn as dqn_shim
+    buf = dqn_shim.replay_init(8, (4,))
+    obs = jnp.ones((2, 4))
+    with pytest.raises(TypeError, match="discount"):
+        dqn_shim.replay_add(buf, obs, jnp.zeros(2, jnp.int32),
+                            jnp.ones(2), obs, jnp.zeros(2, bool))
+    buf = dqn_shim.replay_add(buf, obs, jnp.zeros(2, jnp.int32),
+                              jnp.ones(2), obs, jnp.full(2, 0.99))
+    assert int(buf.size) == 2
 
 
 def test_replay_add_overflow_keeps_last_capacity_deterministically():
@@ -405,7 +580,7 @@ def test_replay_add_overflow_keeps_last_capacity_deterministically():
     obs = jnp.arange(6.0).reshape(6, 1)
     add = jax.jit(replay_add)
     buf = add(buf, obs, jnp.arange(6, dtype=jnp.int32), jnp.arange(6.0),
-              obs + 100.0, jnp.zeros(6, bool))
+              obs + 100.0, jnp.zeros(6))
     assert int(buf.size) == cap
     assert int(buf.ptr) == 6 % cap            # ptr advances by full B
     # transitions 2..5 land at slots (0+2..5) % 4 = [2, 3, 0, 1]
@@ -416,7 +591,7 @@ def test_replay_add_overflow_keeps_last_capacity_deterministically():
                                   [104.0, 105.0, 102.0, 103.0])
     # and a non-zero ptr start still wraps correctly
     buf = add(buf, obs, jnp.arange(6, dtype=jnp.int32), jnp.arange(6.0),
-              obs, jnp.zeros(6, bool))
+              obs, jnp.zeros(6))
     assert int(buf.ptr) == (6 + 6) % cap
     np.testing.assert_array_equal(np.asarray(buf.obs[:, 0]),
                                   [2.0, 3.0, 4.0, 5.0])
@@ -425,17 +600,97 @@ def test_replay_add_overflow_keeps_last_capacity_deterministically():
 def test_dqn_loss_and_epsilon_schedule():
     params = unbox(mlp_q_init(jax.random.PRNGKey(0), 4, 2))
     fn = lambda p, o: mlp_q_apply(p, o)
-    batch = {"obs": jnp.zeros((8, 4)), "actions": jnp.zeros((8,), jnp.int32),
-             "rewards": jnp.ones((8,)), "next_obs": jnp.zeros((8, 4)),
-             "dones": jnp.zeros((8,), bool)}
+    # legacy batches carry `dones`; discount-encoded ones `discounts` —
+    # both must produce finite losses with gradients
+    legacy = {"obs": jnp.zeros((8, 4)),
+              "actions": jnp.zeros((8,), jnp.int32),
+              "rewards": jnp.ones((8,)), "next_obs": jnp.zeros((8, 4)),
+              "dones": jnp.zeros((8,), bool)}
     cfg = DQNConfig()
-    loss = dqn_loss(params, params, fn, batch, cfg)
-    assert np.isfinite(float(loss))
+    for batch in (legacy,
+                  {**{k: v for k, v in legacy.items() if k != "dones"},
+                   "discounts": jnp.full((8,), 0.99)}):
+        loss = dqn_loss(params, params, fn, batch, cfg)
+        assert np.isfinite(float(loss))
+    # Double-DQN selects with the ONLINE argmax but prices with the
+    # target net: with q(obs) = obs + params, online argmax on
+    # next_obs=[1, 0] is action 0, where the (shifted) target net says
+    # 1.0 — vanilla max over the target net would say 2.0
+    table_fn = lambda p, o: o + p
+    tbatch = {"obs": jnp.zeros((1, 2)),
+              "actions": jnp.zeros((1,), jnp.int32),
+              "rewards": jnp.zeros((1,)),
+              "next_obs": jnp.array([[1.0, 0.0]]),
+              "discounts": jnp.ones((1,))}
+    online_p = jnp.zeros((2,))
+    target_p = jnp.array([0.0, 2.0])
+    l_double = dqn_loss(online_p, target_p, table_fn, tbatch, cfg)
+    l_vanilla = dqn_loss(online_p, target_p, table_fn, tbatch,
+                         DQNConfig(double=False))
+    assert float(l_double) == pytest.approx(1.0)    # (0 - 1*1.0)^2
+    assert float(l_vanilla) == pytest.approx(4.0)   # (0 - 1*2.0)^2
     assert float(epsilon(jnp.asarray(0), cfg)) == pytest.approx(1.0)
     assert float(epsilon(jnp.asarray(10**6), cfg)) == pytest.approx(0.05)
     acts = egreedy(jax.random.PRNGKey(0),
                    jnp.array([[0.0, 9.9]] * 100), jnp.asarray(0.0))
     assert int(acts.sum()) == 100          # greedy when eps=0
+
+
+def test_qrdqn_loss_finite_and_head_shape():
+    n_act, n_q = 3, 8
+    params = unbox(mlp_qr_init(jax.random.PRNGKey(0), 4, n_act, n_q))
+    fn = lambda p, o: mlp_qr_apply(p, o, n_act, n_q)
+    out = fn(params, jnp.zeros((5, 4)))
+    assert out.shape == (5, n_act, n_q)
+    batch = {"obs": jax.random.normal(jax.random.PRNGKey(1), (8, 4)),
+             "actions": jnp.zeros((8,), jnp.int32),
+             "rewards": jnp.ones((8,)),
+             "next_obs": jax.random.normal(jax.random.PRNGKey(2), (8, 4)),
+             "discounts": jnp.full((8,), 0.99)}
+    cfg = QRDQNConfig(n_quantiles=n_q)
+    (loss, ), grads = (qrdqn_loss(params, params, fn, batch, cfg),), \
+        jax.grad(qrdqn_loss)(params, params, fn, batch, cfg)
+    assert np.isfinite(float(loss))
+    gnorm = sum(float(jnp.sum(jnp.abs(g)))
+                for g in jax.tree.leaves(grads))
+    assert gnorm > 0
+
+
+def test_ddpg_losses_and_polyak():
+    obs_dim, act_dim = 3, 1
+    ka, kc = jax.random.split(jax.random.PRNGKey(0))
+    cfg = DDPGConfig(low=-2.0, high=2.0)
+    actor = unbox(mlp_pi_init(ka, obs_dim, act_dim))
+    critic = unbox(mlp_twin_q_init(kc, obs_dim, act_dim))
+    actor_apply = lambda p, o, pol=None: mlp_pi_apply(p, o, cfg.low,
+                                                      cfg.high, pol)
+    critic_apply = lambda p, o, a, pol=None: mlp_twin_q_apply(p, o, a,
+                                                              pol)
+    a = actor_apply(actor, jnp.zeros((4, obs_dim)))
+    assert a.shape == (4, act_dim)
+    assert bool(jnp.all((a >= cfg.low) & (a <= cfg.high)))
+    batch = {"obs": jax.random.normal(jax.random.PRNGKey(1), (8, obs_dim)),
+             "actions": jax.random.uniform(jax.random.PRNGKey(2),
+                                           (8, act_dim), minval=-2.0,
+                                           maxval=2.0),
+             "rewards": jnp.ones((8,)),
+             "next_obs": jax.random.normal(jax.random.PRNGKey(3),
+                                           (8, obs_dim)),
+             "discounts": jnp.full((8,), 0.99)}
+    c_loss = ddpg_critic_loss(critic, critic, actor, critic_apply,
+                              actor_apply, batch, cfg,
+                              jax.random.PRNGKey(4))
+    assert np.isfinite(float(c_loss))
+    g = jax.grad(ddpg_actor_loss)(actor, critic, critic_apply,
+                                  actor_apply, batch)
+    gnorm = sum(float(jnp.sum(jnp.abs(x))) for x in jax.tree.leaves(g))
+    assert gnorm > 0
+    # polyak moves the target a tau-fraction toward the online params
+    tgt = jax.tree.map(jnp.zeros_like, actor)
+    moved = polyak(tgt, actor, 0.25)
+    for t, o in zip(jax.tree.leaves(moved), jax.tree.leaves(actor)):
+        np.testing.assert_allclose(np.asarray(t), 0.25 * np.asarray(o),
+                                   rtol=1e-6)
 
 
 # -- actor-learner sync --------------------------------------------------
