@@ -103,6 +103,8 @@ def main(argv=None):
                     help="comma-separated, e.g. 1,8 (default: powers of "
                          "two up to the host device count)")
     ap.add_argument("--csv", default=None)
+    ap.add_argument("--json", default=None,
+                    help="write the emit rows as JSON (CI gate input)")
     args = ap.parse_args(argv)
     counts = ([int(c) for c in args.device_counts.split(",")]
               if args.device_counts else None)
@@ -111,6 +113,9 @@ def main(argv=None):
     if args.csv:
         from benchmarks.common import dump_csv
         dump_csv(args.csv)
+    if args.json:
+        from benchmarks.common import dump_json
+        dump_json(args.json)
 
 
 if __name__ == "__main__":

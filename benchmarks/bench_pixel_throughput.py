@@ -1,0 +1,125 @@
+"""Pixel-pipeline throughput sweep: env x frame_stack x precision x net.
+
+For each pixel env (catch, keydoor) the quantized actor fleet rolls
+through ``collect_sharded`` with the observation stack the training
+launch paths actually use:
+
+  * ``net=conv`` — running-normalize + frame_stack(k) feeding the
+    Q-Conv stem (the paper's raw-image path, no flatten);
+  * ``net=mlp``  — the same stack flattened for the MLP actor (the
+    historical baseline the conv stem replaces).
+
+Each leg reports env-steps/s and the int8 weight-sync payload (MiB) —
+the conv-stem counterpart of ``bench_env_throughput``'s MLP sweep, so
+the quantized vision path is measured with the same instrument.
+
+Standalone:
+
+    PYTHONPATH=src:. python -m benchmarks.bench_pixel_throughput \
+        [--full] [--json out.json]
+
+or via the orchestrator: ``python -m benchmarks.run --only pixel``.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from benchmarks.common import emit, timeit
+from repro.core.policy import get_policy
+from repro.launch.mesh import describe, make_host_mesh
+from repro.nn.module import unbox
+from repro.rl import init_envs
+from repro.rl.actor_learner import collect_sharded, pack_weights, sync_bytes
+from repro.rl.envs import make
+from repro.rl.envs.spaces import head_dim
+from repro.rl.envs.wrappers import flatten_observation, pixel_pipeline
+from repro.rl.nets import (conv_ac_apply, conv_ac_init, mlp_ac_apply,
+                           mlp_ac_init)
+
+PIXEL_ENVS = ("catch", "keydoor")
+
+
+def bench_one(env_name: str, policy_name: str, net: str, k: int,
+              n_envs: int, rollout_len: int, n_dev: int = 1) -> float:
+    base = pixel_pipeline(make(env_name), k)
+    key = jax.random.PRNGKey(0)
+    if net == "conv":
+        env = base
+        params = unbox(conv_ac_init(key, env.obs_shape,
+                                    head_dim(env.action_space)))
+        apply_fn = conv_ac_apply
+    else:
+        env = flatten_observation(base)
+        params = unbox(mlp_ac_init(key, env.obs_shape[0],
+                                   head_dim(env.action_space)))
+        apply_fn = mlp_ac_apply
+    policy = get_policy(policy_name) if policy_name != "fp32" else None
+    packed = pack_weights(params, 8 if policy else 32)
+    payload, fp32_eq = sync_bytes(packed)
+    mesh = make_host_mesh(n_dev)
+    est, obs = init_envs(env, jax.random.PRNGKey(1), n_envs, mesh=mesh)
+
+    fn = jax.jit(lambda packed, key, est, obs: collect_sharded(
+        packed, env, apply_fn, policy, key, est, obs, rollout_len, mesh))
+    sec = timeit(fn, packed, jax.random.PRNGKey(2), est, obs,
+                 warmup=1, iters=5)
+    steps_per_s = n_envs * rollout_len / sec
+    emit("pixel_throughput",
+         f"{env_name}/k{k}/{policy_name}/{net}",
+         env=env_name, policy=policy_name, net=net, frame_stack=k,
+         n_envs=n_envs, rollout_len=rollout_len,
+         steps_per_s=int(steps_per_s),
+         sync_mib=round(payload / 2**20, 4),
+         sync_fp32_mib=round(fp32_eq / 2**20, 4))
+    return steps_per_s
+
+
+def run(fast: bool = True, n_envs: int = 0, rollout_len: int = 0,
+        envs=PIXEL_ENVS, stacks=(1, 4)):
+    n_envs = n_envs or (64 if fast else 256)
+    rollout_len = rollout_len or (16 if fast else 64)
+    print(f"{describe(make_host_mesh(1))}; n_envs={n_envs}, "
+          f"rollout_len={rollout_len}, frame_stacks={list(stacks)}")
+    for env_name in envs:
+        for k in stacks:
+            results = {}
+            for policy_name in ("fp32", "fxp8"):
+                for net in ("conv", "mlp"):
+                    results[(policy_name, net)] = bench_one(
+                        env_name, policy_name, net, k, n_envs,
+                        rollout_len)
+            for net in ("conv", "mlp"):
+                emit("pixel_throughput_q_speedup",
+                     f"{env_name}/k{k}/{net}",
+                     fxp8_vs_fp32=round(results[("fxp8", net)]
+                                        / results[("fp32", net)], 2))
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--n-envs", type=int, default=0)
+    ap.add_argument("--rollout-len", type=int, default=0)
+    ap.add_argument("--envs", default=",".join(PIXEL_ENVS),
+                    help="comma-separated subset of the pixel envs")
+    ap.add_argument("--stacks", default="1,4",
+                    help="comma-separated frame_stack depths")
+    ap.add_argument("--csv", default=None)
+    ap.add_argument("--json", default=None,
+                    help="write the emit rows as JSON (CI gate input)")
+    args = ap.parse_args(argv)
+    run(fast=not args.full, n_envs=args.n_envs,
+        rollout_len=args.rollout_len, envs=args.envs.split(","),
+        stacks=[int(s) for s in args.stacks.split(",")])
+    if args.csv:
+        from benchmarks.common import dump_csv
+        dump_csv(args.csv)
+    if args.json:
+        from benchmarks.common import dump_json
+        dump_json(args.json)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,119 @@
+"""Benchmark regression gate: diff a fresh ``--json`` emit log against
+the committed baseline.
+
+    PYTHONPATH=src:. python -m benchmarks.check_regression \
+        --current bench.json [bench2.json ...] \
+        --baseline benchmarks/baselines/ci_cpu.json \
+        [--max-slowdown 2.0] [--max-sync-growth 1.05] [--update]
+
+Rows are keyed by ``(table, name)``.  The gate is deliberately
+*generous* on timing — CI runners vary wildly, so only a >
+``max-slowdown``x drop in any ``steps_per_s`` fails — but *tight* on
+``sync_mib``: the int8 weight-sync payload is machine-independent, so
+any growth beyond ``max-sync-growth``x (float slack) means the packed
+sync actually got bigger and fails.  New rows (new benches/legs) pass
+with a note; rows that *disappear* from the current run fail, so a
+silently-dropped bench leg can't hide a regression.
+
+``--update`` rewrites the baseline from the current rows instead of
+checking (run it locally when a change legitimately shifts the
+numbers, and commit the result).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+RATE_FIELDS = ("steps_per_s",)          # higher is better, noisy
+PAYLOAD_FIELDS = ("sync_mib",)          # lower is better, deterministic
+
+
+def _load_rows(paths):
+    rows = {}
+    for path in paths:
+        with open(path) as f:
+            data = json.load(f)
+        for row in data["rows"]:
+            rows[(row["table"], row["name"])] = row
+    return rows
+
+
+def check(current: dict, baseline: dict, max_slowdown: float,
+          max_sync_growth: float):
+    failures, notes = [], []
+    for key, base_row in sorted(baseline.items()):
+        cur_row = current.get(key)
+        if cur_row is None:
+            failures.append(f"{key[0]}/{key[1]}: row missing from the "
+                            "current run (bench leg dropped?)")
+            continue
+        for f in RATE_FIELDS:
+            if f not in base_row:
+                continue
+            base, cur = float(base_row[f]), float(cur_row.get(f, 0.0))
+            if base > 0 and cur < base / max_slowdown:
+                failures.append(
+                    f"{key[0]}/{key[1]}: {f} {cur:.0f} is more than "
+                    f"{max_slowdown:.1f}x below baseline {base:.0f}")
+        for f in PAYLOAD_FIELDS:
+            if f not in base_row:
+                continue
+            if f not in cur_row:
+                # a dropped field must not skip the exact payload check
+                failures.append(f"{key[0]}/{key[1]}: {f} missing from "
+                                "the current row")
+                continue
+            base, cur = float(base_row[f]), float(cur_row[f])
+            if cur > base * max_sync_growth:
+                failures.append(
+                    f"{key[0]}/{key[1]}: {f} grew {base:.4f} -> "
+                    f"{cur:.4f} MiB (payload regressions are exact)")
+    for key in sorted(set(current) - set(baseline)):
+        notes.append(f"{key[0]}/{key[1]}: new row (not in baseline)")
+    return failures, notes
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--current", nargs="+", required=True,
+                    help="one or more --json emit logs from this run")
+    ap.add_argument("--baseline",
+                    default="benchmarks/baselines/ci_cpu.json")
+    ap.add_argument("--max-slowdown", type=float, default=2.0,
+                    help="fail when steps_per_s drops by more than this "
+                         "factor (generous: CI runners are noisy)")
+    ap.add_argument("--max-sync-growth", type=float, default=1.05,
+                    help="fail when sync_mib grows by more than this "
+                         "factor (payloads are machine-independent)")
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the baseline from the current rows")
+    args = ap.parse_args(argv)
+
+    current = _load_rows(args.current)
+    if args.update:
+        rows = [current[k] for k in sorted(current)]
+        with open(args.baseline, "w") as f:
+            json.dump({"rows": rows}, f, indent=1, sort_keys=True)
+        print(f"baseline updated: {len(rows)} rows -> {args.baseline}")
+        return 0
+
+    baseline = _load_rows([args.baseline])
+    failures, notes = check(current, baseline, args.max_slowdown,
+                            args.max_sync_growth)
+    for n in notes:
+        print(f"NOTE  {n}")
+    for f in failures:
+        print(f"FAIL  {f}")
+    if failures:
+        print(f"\nbenchmark regression gate: {len(failures)} failure(s) "
+              f"vs {args.baseline}")
+        return 1
+    print(f"benchmark regression gate: {len(baseline)} row(s) OK "
+          f"(slowdown tol {args.max_slowdown}x, sync tol "
+          f"{args.max_sync_growth}x)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -43,6 +43,25 @@ def dump_csv(path: str):
     print(f"wrote {len(ROWS)} rows -> {path}")
 
 
+def dump_json(path: str):
+    """Machine-readable emit log — what the CI regression gate diffs
+    against the committed baseline (benchmarks/check_regression.py)."""
+    import json
+    import platform
+    out = {
+        "meta": {
+            "python": platform.python_version(),
+            "machine": platform.machine(),
+            "devices": len(jax.devices()),
+            "backend": jax.default_backend(),
+        },
+        "rows": ROWS,
+    }
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1, sort_keys=True)
+    print(f"wrote {len(ROWS)} rows -> {path}")
+
+
 # energy proxy: on modern silicon, data movement dominates; a standard
 # first-order model charges pJ per byte moved between levels and pJ per
 # MAC by operand width (Horowitz ISSCC'14 scaled to ~7nm-class nodes).

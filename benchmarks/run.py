@@ -10,6 +10,8 @@
                             DQN/QR-DQN/DDPG via the value subsystem)
   env_throughput  Fig. 2    sharded-fleet env-steps/s: every registered
                             env x fp32/fxp8 x device count + sync MiB
+  pixel       Sec. III      pixel-pipeline env-steps/s: catch/keydoor x
+                            frame_stack x fp32/fxp8 x conv/mlp net
   lm          Sec. IV       the fabric generalized to LM train/serve
   roofline    §Roofline     dry-run derived terms (needs dryrun JSON)
 """
@@ -19,8 +21,8 @@ import argparse
 import time
 
 from benchmarks import (bench_arch, bench_env_throughput, bench_lm,
-                        bench_qmac, bench_rewards, bench_roofline,
-                        bench_vact)
+                        bench_pixel_throughput, bench_qmac,
+                        bench_rewards, bench_roofline, bench_vact)
 from benchmarks.common import dump_csv
 
 SUITES = {
@@ -29,6 +31,7 @@ SUITES = {
     "arch": lambda full: bench_arch.run(),
     "rewards": lambda full: bench_rewards.run(fast=not full),
     "env_throughput": lambda full: bench_env_throughput.run(fast=not full),
+    "pixel": lambda full: bench_pixel_throughput.run(fast=not full),
     "lm": lambda full: bench_lm.run(),
     "roofline": lambda full: bench_roofline.run(),
 }

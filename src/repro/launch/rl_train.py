@@ -57,8 +57,11 @@ from repro.rl.actor_learner import (VersionBuffer, collect_sharded,
 from repro.rl.dists import distribution_for
 from repro.rl.envs import Discrete, Environment, make, registered
 from repro.rl.envs.spaces import head_dim
-from repro.rl.envs.wrappers import ensure_vector_obs
-from repro.rl.nets import (mlp_ac_apply, mlp_ac_init, mlp_pi_apply,
+from repro.rl.envs.wrappers import (NormStats, ensure_vector_obs,
+                                    pixel_pipeline)
+from repro.rl.nets import (conv_ac_apply, conv_ac_init, conv_q_apply,
+                           conv_q_init, conv_qr_apply, conv_qr_init,
+                           mlp_ac_apply, mlp_ac_init, mlp_pi_apply,
                            mlp_pi_init, mlp_q_apply, mlp_q_init,
                            mlp_qr_apply, mlp_qr_init, mlp_twin_q_apply,
                            mlp_twin_q_init)
@@ -72,21 +75,61 @@ from repro.rl.value import (DDPGConfig, DQNConfig, QRDQNConfig,
 
 ON_POLICY_ALGOS = ("ppo", "a2c")
 VALUE_ALGOS = ("dqn", "qrdqn", "ddpg")
+NETS = ("mlp", "conv")
+
+
+def build_env(env_name: str, net: str = "mlp", frame_stack_k: int = 1,
+              norm_stats: Optional[NormStats] = None) -> Environment:
+    """The launch-path env stack for one training/eval run.
+
+    ``net="conv"`` builds the pixel pipeline — running (Welford)
+    observation normalization over raw frames, then ``frame_stack`` —
+    so catch/keydoor reach the Q-Conv stem with no
+    ``flatten_observation``.  ``norm_stats`` freezes the normalizer
+    (evaluation).  ``net="mlp"`` keeps the historical vector view
+    (images are flattened); ``--frame-stack`` is a conv-net knob.
+    """
+    if net not in NETS:
+        raise ValueError(f"unknown net {net!r} (expected one of {NETS})")
+    env = make(env_name)
+    if net == "conv":
+        if len(env.obs_shape) != 3:
+            raise ValueError(
+                f"--net conv needs image (H, W, C) observations; "
+                f"{env_name} has shape {env.obs_shape} — use --net mlp")
+        return pixel_pipeline(env, frame_stack_k, stats=norm_stats)
+    if frame_stack_k > 1:
+        raise ValueError("--frame-stack is a pixel-pipeline knob and "
+                         "requires --net conv")
+    return ensure_vector_obs(env)
 
 
 def make_agent(agent: str, env: Environment, key,
-               policy_name: Optional[str]):
+               policy_name: Optional[str], net: str = "mlp"):
     spec = env.spec
     if agent == "mlp":
+        if net == "conv":
+            if len(spec.obs_shape) != 3:
+                raise ValueError(
+                    f"{spec.name} has obs shape {spec.obs_shape}; "
+                    "--net conv needs image (H, W, C) observations")
+            params = unbox(conv_ac_init(key, spec.obs_shape,
+                                        head_dim(spec.action_space)))
+            return params, conv_ac_apply
         if len(spec.obs_shape) != 1:
             raise ValueError(
-                f"{spec.name} has obs shape {spec.obs_shape}; wrap with "
-                "envs.wrappers.flatten_observation for the mlp agent "
+                f"{spec.name} has obs shape {spec.obs_shape}; use "
+                "--net conv for the Q-Conv pixel stem, wrap with "
+                "envs.wrappers.flatten_observation for the mlp agent, "
                 "or use --agent hrl")
         params = unbox(mlp_ac_init(key, spec.obs_shape[0],
                                    head_dim(spec.action_space)))
         apply_fn = mlp_ac_apply
         return params, apply_fn
+    if net != "mlp":
+        raise ValueError("--net conv selects the standalone conv "
+                         "actor-critic; the hrl agent has its own conv "
+                         "stem — drop --net")
     if len(spec.obs_shape) != 3:
         raise ValueError(
             f"{spec.name} has obs shape {spec.obs_shape}; the hrl agent "
@@ -122,7 +165,9 @@ def rl_train(env_name: str = "cartpole", agent: str = "mlp",
              save_every: int = 10, mesh_kind: str = "host",
              mesh_devices: Optional[int] = None,
              log_every: int = 5, verbose: bool = True,
-             algo: str = "ppo"):
+             algo: str = "ppo", net: str = "mlp",
+             frame_stack_k: int = 1,
+             state_out: Optional[dict] = None):
     if algo not in ON_POLICY_ALGOS:
         raise ValueError(f"rl_train drives the on-policy family "
                          f"{ON_POLICY_ALGOS}; use value_train for "
@@ -130,10 +175,18 @@ def rl_train(env_name: str = "cartpole", agent: str = "mlp",
     if two_stage and agent != "hrl":
         raise ValueError("--two-stage trains the HRL sub-goal curriculum "
                          "and requires --agent hrl")
-    env = make(env_name)
+    if net == "conv":
+        env = build_env(env_name, net, frame_stack_k)
+    else:
+        # the mlp/hrl agents keep the historical raw-env view
+        # (make_agent validates the obs shape)
+        if frame_stack_k > 1:
+            raise ValueError("--frame-stack is a pixel-pipeline knob "
+                             "and requires --net conv")
+        env = make(env_name)
     dist = distribution_for(env.action_space)
     key = jax.random.PRNGKey(seed)
-    params, apply_fn = make_agent(agent, env, key, actor_policy)
+    params, apply_fn = make_agent(agent, env, key, actor_policy, net)
     a_policy = get_policy(actor_policy) if actor_policy else None
 
     if mesh_kind == "host" and mesh_devices is None:
@@ -161,12 +214,17 @@ def rl_train(env_name: str = "cartpole", agent: str = "mlp",
     sched = constant(lr)
     stage_list = (["action", "subgoal"] if two_stage else [None])
     stage_names = [s or "all" for s in stage_list]
+    est, obs = init_envs(env, jax.random.PRNGKey(seed + 1), n_envs,
+                         mesh=mesh)
     start = 0
     mgr = None
     if ckpt_dir:
         mgr = CheckpointManager(ckpt_dir, keep=2, save_every=save_every)
         if mgr.latest_step() is not None:
-            (params, opt), md = mgr.restore((params, opt))
+            # env state rides in the checkpoint so wrapper carries
+            # (e.g. the Welford running-norm stats) resume exactly
+            (params, opt, est, obs), md = mgr.restore(
+                (params, opt, est, obs))
             md_stage = str(md.get("stage", "all"))
             if md_stage not in stage_names:
                 raise ValueError(
@@ -190,8 +248,6 @@ def rl_train(env_name: str = "cartpole", agent: str = "mlp",
                 print(f"resumed at global iter {start} "
                       f"(stage {md_stage}, iter {it} done)")
 
-    est, obs = init_envs(env, jax.random.PRNGKey(seed + 1), n_envs,
-                         mesh=mesh)
     versions = VersionBuffer(max_lag)
     learner_apply = lambda p, o: apply_fn(p, o, None)
     # synchronous driver: every device delivers; the mask still flows
@@ -249,12 +305,14 @@ def rl_train(env_name: str = "cartpole", agent: str = "mlp",
                       f"sync {payload / 2**20:.2f} MiB "
                       f"(fp32 {fp32_eq / 2**20:.2f}){sfx}")
             if mgr and mgr.should_save(g):
-                mgr.save(g, (params, opt),
+                mgr.save(g, (params, opt, est, obs),
                          metadata={"stage": stage or "all",
                                    "stage_iter": it})
     if verbose:
         print(f"done in {time.time() - t0:.0f}s; "
               f"total sync payload {total_sync_payload / 2**20:.1f} MiB")
+    if state_out is not None:
+        state_out.update(env_state=est, obs=obs)
     return params, history
 
 
@@ -303,17 +361,31 @@ class ValueAgent:
 def make_value_agent(algo: str, spec, key=None,
                      n_step: int = 3,
                      eps_decay_steps: int = 2_000,
-                     learn_start: Optional[int] = None) -> ValueAgent:
+                     learn_start: Optional[int] = None,
+                     net: str = "mlp") -> ValueAgent:
     """Build the nets/policies for one value algo.  ``key=None`` skips
     the parameter init (``agent.params`` is None) — for callers that
     only need the apply closures and config, e.g. evaluation of
-    already-trained params."""
+    already-trained params.  ``net="conv"`` selects the Q-Conv pixel
+    nets (dqn/qrdqn over (H, W, C) observations)."""
     def tune(cfg):
         if learn_start is None:
             return cfg
         return dataclasses.replace(cfg, learn_start=learn_start)
 
-    obs_dim = spec.obs_shape[0]
+    if net not in NETS:
+        raise ValueError(f"unknown net {net!r} (expected one of {NETS})")
+    conv = net == "conv"
+    if conv and len(spec.obs_shape) != 3:
+        raise ValueError(f"--net conv needs image (H, W, C) "
+                         f"observations; {spec.name} has shape "
+                         f"{spec.obs_shape}")
+    if not conv and len(spec.obs_shape) != 1:
+        raise ValueError(
+            f"{spec.name} has obs shape {spec.obs_shape}; use "
+            "--net conv for pixel envs (the mlp value nets need flat "
+            "observations)")
+    obs_dim = spec.obs_shape[0] if not conv else None
     discrete = isinstance(spec.action_space, Discrete)
     if algo in ("dqn", "qrdqn") and not discrete:
         raise ValueError(f"--algo {algo} needs a Discrete action space; "
@@ -321,16 +393,25 @@ def make_value_agent(algo: str, spec, key=None,
     if algo == "ddpg" and discrete:
         raise ValueError(f"--algo ddpg needs a Box action space; "
                          f"{spec.name} is discrete — use dqn/qrdqn")
+    if algo == "ddpg" and conv:
+        raise ValueError("--net conv drives the discrete Q family "
+                         "(dqn/qrdqn); ddpg has no pixel actor-critic")
 
     if algo == "qrdqn":
         cfg = tune(QRDQNConfig(n_step=n_step,
                                eps_decay_steps=eps_decay_steps))
-        params = None if key is None else unbox(
-            mlp_qr_init(key, obs_dim, spec.n_actions, cfg.n_quantiles))
+        if key is None:
+            params = None
+        elif conv:
+            params = unbox(conv_qr_init(key, spec.obs_shape,
+                                        spec.n_actions, cfg.n_quantiles))
+        else:
+            params = unbox(mlp_qr_init(key, obs_dim, spec.n_actions,
+                                       cfg.n_quantiles))
+        qr_apply = conv_qr_apply if conv else mlp_qr_apply
 
         def q_apply(p, o, pol=None):
-            return mlp_qr_apply(p, o, spec.n_actions, cfg.n_quantiles,
-                                pol)
+            return qr_apply(p, o, spec.n_actions, cfg.n_quantiles, pol)
 
         return ValueAgent(algo, cfg, params, True,
                           qvals=lambda p, o, pol=None:
@@ -339,10 +420,16 @@ def make_value_agent(algo: str, spec, key=None,
     if algo == "dqn":
         cfg = tune(DQNConfig(n_step=n_step,
                              eps_decay_steps=eps_decay_steps))
-        params = None if key is None else unbox(
-            mlp_q_init(key, obs_dim, spec.n_actions))
-        return ValueAgent(algo, cfg, params, True, qvals=mlp_q_apply,
-                          q_apply=mlp_q_apply, loss_fn=dqn_loss)
+        if key is None:
+            params = None
+        elif conv:
+            params = unbox(conv_q_init(key, spec.obs_shape,
+                                       spec.n_actions))
+        else:
+            params = unbox(mlp_q_init(key, obs_dim, spec.n_actions))
+        q_fn = conv_q_apply if conv else mlp_q_apply
+        return ValueAgent(algo, cfg, params, True, qvals=q_fn,
+                          q_apply=q_fn, loss_fn=dqn_loss)
     if algo != "ddpg":
         raise ValueError(f"unknown value algo {algo!r} "
                          f"(expected one of {VALUE_ALGOS})")
@@ -368,17 +455,30 @@ def make_value_agent(algo: str, spec, key=None,
 
 def value_eval(algo: str, env_name: str, params,
                n_envs: int = 16, n_steps: Optional[int] = None,
-               actor_policy: Optional[str] = None, seed: int = 0):
+               actor_policy: Optional[str] = None, seed: int = 0,
+               net: str = "mlp", frame_stack_k: int = 1,
+               norm_stats: Optional[NormStats] = None):
     """Greedy-policy evaluation: (mean episode return, episode count).
 
     Runs the trained policy with exploration off for ``n_steps``
     (default: one full episode horizon plus slack) — the training-loop
     returns only count episodes that *complete inside a chunk*, which
     undercounts long-horizon envs; this is the clean measurement.
+
+    ``net="conv"`` evaluates over the pixel pipeline with the running
+    normalizer *frozen*: pass the training run's merged stats as
+    ``norm_stats`` (see ``wrappers.norm_stats_of``/``merge_norm_stats``;
+    None falls back to the identity transform).
     """
-    env = ensure_vector_obs(make(env_name))
+    if net == "conv":
+        from repro.rl.envs.wrappers import init_norm_stats
+        frozen = (norm_stats if norm_stats is not None
+                  else init_norm_stats(make(env_name).obs_shape))
+        env = build_env(env_name, net, frame_stack_k, norm_stats=frozen)
+    else:
+        env = build_env(env_name, net, frame_stack_k)
     spec = env.spec
-    agent = make_value_agent(algo, spec)      # closures only, no init
+    agent = make_value_agent(algo, spec, net=net)  # closures, no init
     policy = get_policy(actor_policy) if actor_policy else None
     n_steps = n_steps or spec.max_steps + spec.max_steps // 4
 
@@ -408,19 +508,25 @@ def value_train(algo: str = "dqn", env_name: str = "cartpole",
                 replay_capacity: int = 50_000, n_step: int = 3,
                 updates_per_iter: int = 4, log_every: int = 20,
                 verbose: bool = True,
-                learn_start: Optional[int] = None):
+                learn_start: Optional[int] = None, net: str = "mlp",
+                frame_stack_k: int = 1,
+                state_out: Optional[dict] = None):
     """Off-policy value-based training (paper Fig. 2 split, replay
     flavour): the *quantized* behaviour actor collects ``rollout_len``
     steps per iteration into a truncation-aware n-step replay; the
     fp32 learner runs ``updates_per_iter`` sampled updates against
     polyak target networks.  Checkpoints capture params, targets,
-    optimizer state AND the replay buffer (pointers included), so a
-    relaunch with the same command line resumes exactly.
+    optimizer state, the replay buffer (pointers included) AND the env
+    state (so wrapper carries like the Welford running-norm stats
+    survive preemption), so a relaunch with the same command line
+    resumes exactly.  ``state_out`` (optional dict) receives the final
+    ``env_state``/``obs`` — e.g. to extract the normalizer stats for a
+    frozen evaluation.
     """
     if algo not in VALUE_ALGOS:
         raise ValueError(f"value_train drives {VALUE_ALGOS}, got "
                          f"{algo!r}; use rl_train for {ON_POLICY_ALGOS}")
-    env = ensure_vector_obs(make(env_name))
+    env = build_env(env_name, net, frame_stack_k)
     spec = env.spec
     key = jax.random.PRNGKey(seed)
     a_policy = get_policy(actor_policy) if actor_policy else None
@@ -430,7 +536,7 @@ def value_train(algo: str = "dqn", env_name: str = "cartpole",
 
     agent = make_value_agent(algo, spec, key, n_step=n_step,
                              eps_decay_steps=decay,
-                             learn_start=learn_start)
+                             learn_start=learn_start, net=net)
     cfg, params = agent.cfg, agent.params
     discrete = agent.discrete
     # fresh buffers, not an alias: params and target are both donated
@@ -447,13 +553,14 @@ def value_train(algo: str = "dqn", env_name: str = "cartpole",
     ocfg = AdamWConfig(weight_decay=0.0, max_grad_norm=10.0)
     sched = constant(lr)
 
+    est, obs = init_envs(env, jax.random.PRNGKey(seed + 1), n_envs)
     start = 0
     mgr = None
     if ckpt_dir:
         mgr = CheckpointManager(ckpt_dir, keep=2, save_every=save_every)
         if mgr.latest_step() is not None:
-            (params, target, opt, buf), md = mgr.restore(
-                (params, target, opt, buf))
+            (params, target, opt, buf, est, obs), md = mgr.restore(
+                (params, target, opt, buf, est, obs))
             md_algo = str(md.get("algo", ""))
             if md_algo != algo:
                 raise ValueError(
@@ -464,8 +571,6 @@ def value_train(algo: str = "dqn", env_name: str = "cartpole",
             if verbose:
                 print(f"resumed at iter {start} "
                       f"(replay size {int(buf.size)})")
-
-    est, obs = init_envs(env, jax.random.PRNGKey(seed + 1), n_envs)
 
     # donate the threaded state: without it XLA copies the whole
     # replay buffer (capacity x obs, the dominant allocation) on every
@@ -554,11 +659,13 @@ def value_train(algo: str = "dqn", env_name: str = "cartpole",
                   f"episodes {int(n_ep):4d}  "
                   f"replay {int(buf.size):6d}")
         if mgr and mgr.should_save(it):
-            mgr.save(it, (params, target, opt, buf),
+            mgr.save(it, (params, target, opt, buf, est, obs),
                      metadata={"algo": algo, "it": it})
     if verbose:
         print(f"done in {time.time() - t0:.0f}s; "
               f"total sync payload {total_sync_payload / 2**20:.1f} MiB")
+    if state_out is not None:
+        state_out.update(env_state=est, obs=obs)
     return params, history
 
 
@@ -569,6 +676,11 @@ def main(argv=None):
     ap.add_argument("--env", default="cartpole",
                     choices=list(registered()))
     ap.add_argument("--agent", default="mlp", choices=["mlp", "hrl"])
+    ap.add_argument("--net", default="mlp", choices=list(NETS),
+                    help="conv = Q-Conv pixel stem over the running-"
+                         "normalized (+ frame-stacked) image pipeline")
+    ap.add_argument("--frame-stack", type=int, default=1,
+                    help="stack the last K frames (conv net only)")
     ap.add_argument("--iters", type=int, default=None,
                     help="default: 40 (on-policy) / 300 (value-based)")
     ap.add_argument("--n-envs", type=int, default=32)
@@ -621,7 +733,8 @@ def main(argv=None):
                     replay_capacity=args.replay_capacity,
                     n_step=args.n_step,
                     updates_per_iter=args.updates_per_iter,
-                    learn_start=args.learn_start)
+                    learn_start=args.learn_start, net=args.net,
+                    frame_stack_k=args.frame_stack)
     else:
         rl_train(args.env, args.agent,
                  args.iters if args.iters is not None else 40,
@@ -635,7 +748,8 @@ def main(argv=None):
                  save_every=(args.save_every
                              if args.save_every is not None else 10),
                  mesh_kind=args.mesh, mesh_devices=args.mesh_devices,
-                 algo=args.algo)
+                 algo=args.algo, net=args.net,
+                 frame_stack_k=args.frame_stack)
 
 
 if __name__ == "__main__":

@@ -7,15 +7,22 @@ friendly and stack in any order:
 
     env = frame_stack(normalize_observation(make("catch"), 0.5, 0.5), 4)
 
-Wrappers that need their own carry (time limit counter, frame buffer)
-wrap the inner state in a NamedTuple, preserving the auto-reset
-contract from :mod:`repro.rl.envs.base`.
+Wrappers that need their own carry (time limit counter, frame buffer,
+Welford stats) wrap the inner state in a NamedTuple, preserving the
+auto-reset contract from :mod:`repro.rl.envs.base`.
+
+Every wrapper tags the step function it produces
+(``wrapper_stack(env)`` lists the applied wrappers outermost-first), so
+order-sensitive compositions can be validated instead of silently
+mis-normalizing — e.g. ``running_normalize_observation`` refuses to
+wrap a frame-stacked env (stats are defined over *raw* frames; stack
+after normalizing — :func:`pixel_pipeline` is the canonical order).
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Any, NamedTuple
+from typing import Any, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -24,6 +31,20 @@ from repro.rl.envs.base import Environment, auto_reset
 from repro.rl.envs.spaces import Box
 
 Array = jax.Array
+
+
+def wrapper_stack(env: Environment) -> Tuple[str, ...]:
+    """Names of the wrappers applied to ``env``, outermost first."""
+    return getattr(env.step, "_wrapper_stack", ())
+
+
+def _wrap(env: Environment, name: str, *, reset, step,
+          spec=None) -> Environment:
+    """Build the wrapped Environment and tag its step with the wrapper
+    stack so compositions stay introspectable."""
+    step._wrapper_stack = (name,) + wrapper_stack(env)
+    return env.replace(spec=spec if spec is not None else env.spec,
+                       reset=reset, step=step)
 
 
 # ---------------------------------------------------------------------------
@@ -67,7 +88,8 @@ def normalize_observation(env: Environment, mean, std) -> Environment:
     else:
         space = Box(-math.inf, math.inf, env.obs_shape)
     spec = dataclasses.replace(env.spec, observation_space=space)
-    return env.replace(spec=spec, reset=reset, step=step)
+    return _wrap(env, "normalize_observation", reset=reset, step=step,
+                 spec=spec)
 
 
 def scale_reward(env: Environment, scale: float) -> Environment:
@@ -79,7 +101,7 @@ def scale_reward(env: Environment, scale: float) -> Environment:
         return (state, obs, reward * jnp.float32(scale), done, truncated,
                 final_obs)
 
-    return env.replace(step=step)
+    return _wrap(env, "scale_reward", reset=env.reset, step=step)
 
 
 def flatten_observation(env: Environment) -> Environment:
@@ -104,7 +126,8 @@ def flatten_observation(env: Environment) -> Environment:
     else:
         space = Box(-math.inf, math.inf, (flat,))
     spec = dataclasses.replace(env.spec, observation_space=space)
-    return env.replace(spec=spec, reset=reset, step=step)
+    return _wrap(env, "flatten_observation", reset=reset, step=step,
+                 spec=spec)
 
 
 def ensure_vector_obs(env: Environment) -> Environment:
@@ -166,7 +189,7 @@ def time_limit(env: Environment, max_steps: int) -> Environment:
     spec = dataclasses.replace(env.spec,
                                max_steps=min(env.spec.max_steps,
                                              max_steps))
-    return env.replace(spec=spec, reset=reset, step=step)
+    return _wrap(env, "time_limit", reset=reset, step=step, spec=spec)
 
 
 # ---------------------------------------------------------------------------
@@ -215,4 +238,164 @@ def frame_stack(env: Environment, k: int) -> Environment:
     high = in_space.high if isinstance(in_space, Box) else math.inf
     spec = dataclasses.replace(env.spec,
                                observation_space=Box(low, high, shape))
-    return env.replace(spec=spec, reset=reset, step=step)
+    return _wrap(env, "frame_stack", reset=reset, step=step, spec=spec)
+
+
+# ---------------------------------------------------------------------------
+# running observation statistics (Welford carry in env state)
+# ---------------------------------------------------------------------------
+
+class NormStats(NamedTuple):
+    """Welford accumulator: ``mean``/``m2`` are obs-shaped, ``count`` a
+    float32 scalar.  ``var = m2 / count`` (population, matching
+    ``jnp.var``)."""
+
+    count: Array
+    mean: Array
+    m2: Array
+
+    @property
+    def std(self) -> Array:
+        return jnp.sqrt(self.m2 / jnp.maximum(self.count, 1.0))
+
+
+def init_norm_stats(obs_shape) -> NormStats:
+    return NormStats(jnp.zeros((), jnp.float32),
+                     jnp.zeros(obs_shape, jnp.float32),
+                     jnp.zeros(obs_shape, jnp.float32))
+
+
+def _welford_update(stats: NormStats, x: Array) -> NormStats:
+    count = stats.count + 1.0
+    delta = x - stats.mean
+    mean = stats.mean + delta / count
+    return NormStats(count, mean, stats.m2 + delta * (x - mean))
+
+
+def _normalize_with(stats: NormStats, x: Array,
+                    eps: float = 1e-8) -> Array:
+    """(x - mean) / (std + eps); identity while the stream is empty."""
+    seen = stats.count > 0.0
+    mean = jnp.where(seen, stats.mean, 0.0)
+    std = jnp.where(seen, stats.std, 1.0)
+    return (x.astype(jnp.float32) - mean) / (std + eps)
+
+
+def merge_norm_stats(stats: NormStats) -> NormStats:
+    """Chan's parallel Welford merge over the leading (vmapped-env)
+    axis: per-env carries [B, ...] -> one fleet-wide NormStats, e.g. to
+    freeze for evaluation."""
+    counts = stats.count.reshape(-1)                      # [B]
+    B = counts.shape[0]
+    mean_b = stats.mean.reshape((B,) + stats.mean.shape[1:])
+    m2_b = stats.m2.reshape((B,) + stats.m2.shape[1:])
+    n = counts.sum()
+    cshape = (B,) + (1,) * (mean_b.ndim - 1)
+    w = counts.reshape(cshape) / jnp.maximum(n, 1.0)
+    mean = (w * mean_b).sum(axis=0)
+    m2 = (m2_b + counts.reshape(cshape)
+          * jnp.square(mean_b - mean)).sum(axis=0)
+    return NormStats(n, mean, m2)
+
+
+class RunningNormState(NamedTuple):
+    inner: Any
+    stats: NormStats
+
+
+def norm_stats_of(state) -> NormStats:
+    """Extract the Welford carry from a (possibly further-wrapped) env
+    state — walks ``inner`` chains, so it works on e.g. the
+    frame-stacked pixel pipeline's state.  Batched states return
+    batched stats (merge with :func:`merge_norm_stats`)."""
+    while True:
+        if isinstance(state, RunningNormState):
+            return state.stats
+        if not hasattr(state, "inner"):
+            raise TypeError(
+                "no running_normalize_observation carry found in this "
+                "env state — was the env built with the wrapper?")
+        state = state.inner
+
+
+def running_normalize_observation(env: Environment,
+                                  stats: Optional[NormStats] = None,
+                                  eps: float = 1e-8) -> Environment:
+    """Normalize observations by *running* mean/std.
+
+    Two modes:
+
+      * ``stats=None`` (training): a Welford mean/var carry is threaded
+        through the env state — jit/vmap/scan-safe, and
+        checkpoint-resumable because it is an ordinary pytree leaf of
+        whatever training state captures the env.  Every observation
+        the wrapper emits (reset and step) updates the carry first and
+        is normalized with the updated stats; ``final_obs`` is
+        normalized with the same stats without a second update.
+      * ``stats=NormStats`` (evaluation): the given statistics are
+        closed over as constants and never updated — the frozen-at-eval
+        mode.  ``init_norm_stats(shape)`` gives the identity transform.
+
+    Statistics are defined over *raw single frames*: wrapping a
+    frame-stacked env is refused (the stacked channels would fold k
+    time-shifted copies of each pixel into one estimate) — normalize
+    first, stack after (see :func:`pixel_pipeline`).
+    """
+    if "frame_stack" in wrapper_stack(env):
+        raise ValueError(
+            "running_normalize_observation must wrap the raw env, not a "
+            "frame-stacked one: Welford statistics are defined over raw "
+            "single frames. Apply running_normalize_observation first "
+            "and frame_stack second (pixel_pipeline does this).")
+    space = Box(-math.inf, math.inf, env.obs_shape)
+    spec = dataclasses.replace(env.spec, observation_space=space)
+
+    if stats is not None:
+        frozen = jax.tree.map(jnp.asarray, stats)
+
+        def reset(key):
+            state, obs = env.reset(key)
+            return state, _normalize_with(frozen, obs, eps)
+
+        def step(state, action):
+            state, obs, reward, done, truncated, final_obs = \
+                env.step(state, action)
+            return (state, _normalize_with(frozen, obs, eps), reward,
+                    done, truncated, _normalize_with(frozen, final_obs,
+                                                     eps))
+
+        return _wrap(env, "running_normalize_observation", reset=reset,
+                     step=step, spec=spec)
+
+    def reset(key):
+        state, obs = env.reset(key)
+        st = _welford_update(init_norm_stats(env.obs_shape), obs)
+        return RunningNormState(state, st), _normalize_with(st, obs, eps)
+
+    def step(state, action):
+        inner, obs, reward, done, truncated, final_obs = \
+            env.step(state.inner, action)
+        st = _welford_update(state.stats, obs)
+        return (RunningNormState(inner, st), _normalize_with(st, obs, eps),
+                reward, done, truncated,
+                _normalize_with(st, final_obs, eps))
+
+    return _wrap(env, "running_normalize_observation", reset=reset,
+                 step=step, spec=spec)
+
+
+def pixel_pipeline(env: Environment, k: int = 1,
+                   stats: Optional[NormStats] = None) -> Environment:
+    """The canonical pixel-env stack for conv agents: running (or
+    frozen) observation normalization over raw frames, THEN frame
+    stacking — the order :func:`running_normalize_observation`
+    requires.  ``k=1`` skips the stacking wrapper entirely."""
+    if k < 1:
+        raise ValueError(f"pixel_pipeline needs frame_stack k >= 1, "
+                         f"got {k}")
+    if len(env.obs_shape) != 3:
+        raise ValueError(
+            f"pixel_pipeline needs image (H, W, C) observations; "
+            f"{env.spec.name} has shape {env.obs_shape}")
+    env = running_normalize_observation(env, stats=stats)
+    return frame_stack(env, k) if k > 1 else env

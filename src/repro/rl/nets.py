@@ -1,18 +1,28 @@
-"""Small actor-critic / Q networks for vector-observation envs.
+"""Small actor-critic / Q networks for vector- and image-observation envs.
 
 Every matmul is a Q-MAC (q_matmul under the QuantPolicy), every
 activation a V-ACT — the same compute fabric as the big models, so the
 Fig.-3a reward-parity experiments exercise exactly the quantized paths.
+
+Two families share the heads:
+
+  * ``mlp_*`` — 2-layer torsos over flat [B, D] observations;
+  * ``conv_*`` — the paper's Q-Conv vision stem (stride-2 conv replaces
+    pooling, ReLU after) over [B, H, W, C] pixel observations, so catch
+    and keydoor train without ``flatten_observation``.  The conv weights
+    are named ``w`` like every matmul weight, so ``pack_weights`` ships
+    them to the actor fleet as int8 QTensors automatically.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.policy import QuantPolicy
 from repro.core.vact import activation
+from repro.nn.conv import conv2d_init, qconv_block
 from repro.nn.linear import linear_apply, linear_init
 from repro.nn.module import KeySeq
 
@@ -133,3 +143,125 @@ def mlp_twin_q_apply(params, obs: Array, act: Array,
     q1 = mlp_q_apply(params["q1"], x, policy)[..., 0]
     q2 = mlp_q_apply(params["q2"], x, policy)[..., 0]
     return q1, q2
+
+
+# ---------------------------------------------------------------------------
+# Q-Conv pixel family (catch / keydoor without flatten_observation)
+# ---------------------------------------------------------------------------
+
+CONV_CHANNELS = (16, 32)
+CONV_KERNEL = 3
+CONV_HIDDEN = 128
+
+
+def conv_flat_dim(obs_shape: Tuple[int, ...],
+                  channels: Sequence[int] = CONV_CHANNELS) -> int:
+    """Flattened feature size after the stride-2 Q-Conv stack (SAME
+    padding halves each spatial dim, rounding up — same arithmetic as
+    the HRL stem)."""
+    h, w, _ = obs_shape
+    for _ in channels:
+        h = (h + 1) // 2
+        w = (w + 1) // 2
+    return h * w * channels[-1]
+
+
+def conv_torso_init(key, obs_shape: Tuple[int, ...],
+                    channels: Sequence[int] = CONV_CHANNELS,
+                    kernel: int = CONV_KERNEL, hidden: int = CONV_HIDDEN,
+                    dtype=jnp.float32):
+    """Stride-2 Q-Conv stem + FC: obs [H, W, C] -> [hidden] features.
+
+    ``obs_shape`` is the *wrapped* observation shape, so a frame-stacked
+    env (C*k channels) sizes the first conv automatically.
+    """
+    if len(obs_shape) != 3:
+        raise ValueError(f"conv torso needs (H, W, C) observations, "
+                         f"got shape {obs_shape}")
+    ks = KeySeq(key)
+    convs = []
+    c_in = obs_shape[-1]
+    for c_out in channels:
+        convs.append(conv2d_init(ks(), c_in, c_out, kernel, dtype))
+        c_in = c_out
+    return {
+        "convs": convs,
+        "fc": linear_init(ks(), conv_flat_dim(obs_shape, channels),
+                          hidden, axes=(None, None), dtype=dtype),
+    }
+
+
+def conv_torso_apply(params, obs: Array,
+                     policy: Optional[QuantPolicy] = None) -> Array:
+    """obs [B, H, W, C] -> [B, hidden] (ReLU'd features)."""
+    x = obs
+    for pc in params["convs"]:
+        x = qconv_block(pc, x, stride=2, policy=policy)
+    x = x.reshape(x.shape[0], -1)
+    return activation(linear_apply(params["fc"], x, policy), "relu",
+                      policy)
+
+
+def conv_ac_init(key, obs_shape: Tuple[int, ...], head_dim: int,
+                 channels: Sequence[int] = CONV_CHANNELS,
+                 kernel: int = CONV_KERNEL, hidden: int = CONV_HIDDEN,
+                 dtype=jnp.float32):
+    """Conv actor-critic: shared Q-Conv trunk + policy/value heads —
+    the pixel counterpart of :func:`mlp_ac_init`."""
+    ks = KeySeq(key)
+    return {
+        "torso": conv_torso_init(ks(), obs_shape, channels, kernel,
+                                 hidden, dtype),
+        "pi": linear_init(ks(), hidden, head_dim, axes=(None, None),
+                          dtype=dtype),
+        "v": linear_init(ks(), hidden, 1, axes=(None, None), dtype=dtype),
+    }
+
+
+def conv_ac_apply(params, obs: Array,
+                  policy: Optional[QuantPolicy] = None
+                  ) -> Tuple[Array, Array]:
+    """obs [B, H, W, C] -> (dist params [B, H], value [B]) — the same
+    contract as :func:`mlp_ac_apply`, so rollout/PPO/A2C are agnostic."""
+    h = conv_torso_apply(params["torso"], obs, policy)
+    logits = linear_apply(params["pi"], h, policy)
+    value = linear_apply(params["v"], h, policy)[..., 0]
+    return logits, value
+
+
+def conv_q_init(key, obs_shape: Tuple[int, ...], n_actions: int,
+                channels: Sequence[int] = CONV_CHANNELS,
+                kernel: int = CONV_KERNEL, hidden: int = CONV_HIDDEN,
+                dtype=jnp.float32):
+    ks = KeySeq(key)
+    return {
+        "torso": conv_torso_init(ks(), obs_shape, channels, kernel,
+                                 hidden, dtype),
+        "q": linear_init(ks(), hidden, n_actions, axes=(None, None),
+                         dtype=dtype),
+    }
+
+
+def conv_q_apply(params, obs: Array,
+                 policy: Optional[QuantPolicy] = None) -> Array:
+    """obs [B, H, W, C] -> Q values [B, A]."""
+    h = conv_torso_apply(params["torso"], obs, policy)
+    return linear_apply(params["q"], h, policy)
+
+
+def conv_qr_init(key, obs_shape: Tuple[int, ...], n_actions: int,
+                 n_quantiles: int,
+                 channels: Sequence[int] = CONV_CHANNELS,
+                 kernel: int = CONV_KERNEL, hidden: int = CONV_HIDDEN,
+                 dtype=jnp.float32):
+    """QR-DQN over pixels: the conv Q net with a widened
+    [n_actions * n_quantiles] head, reshaped by :func:`conv_qr_apply`."""
+    return conv_q_init(key, obs_shape, n_actions * n_quantiles, channels,
+                       kernel, hidden, dtype)
+
+
+def conv_qr_apply(params, obs: Array, n_actions: int, n_quantiles: int,
+                  policy: Optional[QuantPolicy] = None) -> Array:
+    """obs [B, H, W, C] -> quantile values [B, n_actions, n_quantiles]."""
+    q = conv_q_apply(params, obs, policy)
+    return q.reshape(q.shape[:-1] + (n_actions, n_quantiles))

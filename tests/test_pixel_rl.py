@@ -1,0 +1,418 @@
+"""Quantized pixel pipeline tests: the Welford running-norm wrapper,
+the Q-Conv actor-critic / Q-head family, and the conv training paths
+(catch/keydoor with no flatten_observation).
+
+The Welford carry lives in env state, so it is exercised through the
+same jit/vmap/scan machinery as the envs themselves; checkpoint
+round-trips ride the value_train env-state capture.
+"""
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.fxp import QTensor
+from repro.core.policy import FXP8
+from repro.launch.rl_train import (build_env, make_agent,
+                                   make_value_agent, rl_train,
+                                   value_eval, value_train)
+from repro.nn.module import unbox
+from repro.rl import init_envs, rollout
+from repro.rl.actor_learner import collect, pack_weights, sync_bytes
+from repro.rl.dists import distribution_for
+from repro.rl.envs import make, wrappers
+from repro.rl.envs.spaces import head_dim
+from repro.rl.envs.wrappers import (NormStats, init_norm_stats,
+                                    merge_norm_stats, norm_stats_of,
+                                    pixel_pipeline,
+                                    running_normalize_observation,
+                                    wrapper_stack)
+from repro.rl.nets import (conv_ac_apply, conv_ac_init, conv_flat_dim,
+                           conv_q_apply, conv_q_init, conv_qr_apply,
+                           conv_qr_init)
+from repro.rl.rollout import episode_returns_from
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# ---------------------------------------------------------------------------
+# Welford running-norm wrapper
+# ---------------------------------------------------------------------------
+
+def _paired_stream(T=37, seed=1):
+    """Drive the wrapped and the raw env through identical (key, action)
+    streams; return (final wrapped state, normalized obs, raw stream
+    including the reset observation)."""
+    raw = make("catch")
+    env = running_normalize_observation(raw)
+    key = jax.random.PRNGKey(0)
+    s_raw, o_raw = raw.reset(key)
+    s, _ = env.reset(key)
+
+    def one(carry, k):
+        s, sr = carry
+        a = raw.action_space.sample(k)
+        s, o, *_ = env.step(s, a)
+        sr, orr, *_ = raw.step(sr, a)
+        return (s, sr), (o, orr)
+
+    ks = jax.random.split(jax.random.PRNGKey(seed), T)
+    (s, _), (obs_n, obs_r) = jax.jit(
+        lambda c, k: jax.lax.scan(one, c, k))((s, s_raw), ks)
+    stream = jnp.concatenate([o_raw[None], obs_r], axis=0)
+    return s, obs_n, stream
+
+
+def test_welford_matches_stream_moments():
+    """The carry reproduces jnp.mean / jnp.std (population) over the
+    exact observation stream the wrapper saw."""
+    state, _, stream = _paired_stream(T=37)
+    stats = norm_stats_of(state)
+    assert float(stats.count) == stream.shape[0]
+    np.testing.assert_allclose(np.asarray(stats.mean),
+                               np.asarray(stream.mean(0)), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(stats.std),
+                               np.asarray(stream.std(0)), atol=1e-5)
+
+
+def test_welford_normalized_obs_use_running_stats():
+    """Each emitted observation is (raw - mean_t) / (std_t + eps) under
+    the stats *including* that observation."""
+    state, obs_n, stream = _paired_stream(T=9)
+    # recompute the prefix stats at the last step
+    mean = stream.mean(0)
+    std = stream.std(0)
+    np.testing.assert_allclose(
+        np.asarray(obs_n[-1]),
+        (np.asarray(stream[-1]) - np.asarray(mean))
+        / (np.asarray(std) + 1e-8), atol=1e-5)
+
+
+def test_merge_norm_stats_matches_pooled_moments():
+    """Chan-merging per-env carries equals the moments of the pooled
+    stream — the eval-freeze path for a vmapped fleet."""
+    env = running_normalize_observation(make("catch"))
+    n_envs, T = 5, 11
+    est, _ = init_envs(env, jax.random.PRNGKey(0), n_envs)
+
+    def one(carry, k):
+        est, = carry
+        a = jax.vmap(env.action_space.sample)(
+            jax.random.split(k, n_envs))
+        est, o, *_ = jax.vmap(env.step)(est, a)
+        return (est,), a
+
+    ks = jax.random.split(jax.random.PRNGKey(7), T)
+    (est,), actions = jax.lax.scan(one, (est,), ks)
+    # replay the same per-env streams on the raw env to pool frames
+    # (init_envs derives per-env reset keys as split(key, n_envs))
+    raw = make("catch")
+    keys = jax.random.split(jax.random.PRNGKey(0), n_envs)
+    raws = []
+    for i in range(n_envs):
+        s, o = raw.reset(keys[i])
+        raws.append(o)
+        for t in range(T):
+            s, o, *_ = raw.step(s, actions[t, i])
+            raws.append(o)
+    pooled = jnp.stack(raws)
+    merged = merge_norm_stats(norm_stats_of(est))
+    assert float(merged.count) == n_envs * (T + 1)
+    np.testing.assert_allclose(np.asarray(merged.mean),
+                               np.asarray(pooled.mean(0)), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(merged.std),
+                               np.asarray(pooled.std(0)), atol=1e-5)
+
+
+def test_running_norm_frozen_at_eval():
+    """stats=NormStats freezes the transform: no carry in the state,
+    constant affine normalization, bitwise-stable across steps."""
+    raw = make("catch")
+    stats = NormStats(jnp.asarray(10.0),
+                      jnp.full(raw.obs_shape, 0.25),
+                      jnp.full(raw.obs_shape, 10.0 * 0.16))  # std 0.4
+    env = running_normalize_observation(raw, stats=stats)
+    s, o = env.reset(jax.random.PRNGKey(0))
+    assert not isinstance(s, wrappers.RunningNormState)
+    _, o_raw = raw.reset(jax.random.PRNGKey(0))
+    np.testing.assert_allclose(np.asarray(o),
+                               (np.asarray(o_raw) - 0.25) / (0.4 + 1e-8),
+                               atol=1e-5)
+    with pytest.raises(TypeError, match="carry"):
+        norm_stats_of(s)
+    # identity fallback: zero-count stats normalize to the raw pixels
+    ident = running_normalize_observation(raw,
+                                          stats=init_norm_stats(
+                                              raw.obs_shape))
+    _, oi = ident.reset(jax.random.PRNGKey(0))
+    np.testing.assert_allclose(np.asarray(oi), np.asarray(o_raw),
+                               atol=1e-6)
+
+
+def test_running_norm_rejects_frame_stack_order():
+    """Stats are defined over raw frames: normalize-then-stack is the
+    canonical pixel pipeline, stack-then-normalize a loud error."""
+    stacked = wrappers.frame_stack(make("catch"), 4)
+    with pytest.raises(ValueError, match="frame_stack second"):
+        running_normalize_observation(stacked)
+    env = pixel_pipeline(make("catch"), 4)
+    assert env.obs_shape == (10, 5, 4)
+    assert wrapper_stack(env) == ("frame_stack",
+                                  "running_normalize_observation")
+    est, obs = init_envs(env, jax.random.PRNGKey(0), 3)
+    assert obs.shape == (3, 10, 5, 4)
+    # the carry is reachable through the frame-stack state
+    assert norm_stats_of(est).count.shape == (3,)
+    with pytest.raises(ValueError, match="pixel_pipeline"):
+        pixel_pipeline(make("cartpole"), 4)
+    with pytest.raises(ValueError, match="k >= 1"):
+        pixel_pipeline(make("catch"), 0)
+
+
+def test_running_norm_resumes_from_checkpoint(tmp_path):
+    """The Welford carry rides the value_train checkpoint: a preempted
+    conv run relaunched with the same command line continues the stream
+    (count = 1 reset + iters * rollout_len per env), never restarts it.
+    """
+    d = str(tmp_path / "ck")
+    kw = dict(env_name="catch", n_envs=4, rollout_len=4,
+              updates_per_iter=1, learn_start=8, replay_capacity=512,
+              net="conv", frame_stack_k=2, ckpt_dir=d, save_every=2,
+              verbose=False, seed=5)
+    out1 = {}
+    value_train("dqn", iters=3, state_out=out1, **kw)
+    c1 = norm_stats_of(out1["env_state"]).count
+    np.testing.assert_allclose(np.asarray(c1), 1 + 3 * 4)
+    # relaunch with a larger budget: resumes at iter 3 (ckpt at it=2)
+    out2 = {}
+    params2, hist2 = value_train("dqn", iters=5, state_out=out2, **kw)
+    assert len(hist2) == 2                   # exactly iters 3 and 4
+    c2 = norm_stats_of(out2["env_state"]).count
+    np.testing.assert_allclose(np.asarray(c2), 1 + 5 * 4)
+    # greedy eval under the *frozen* merged stats (the eval contract)
+    stats = merge_norm_stats(norm_stats_of(out2["env_state"]))
+    ret, _ = value_eval("dqn", "catch", params2, n_envs=4, n_steps=16,
+                        net="conv", frame_stack_k=2, norm_stats=stats)
+    assert np.isfinite(ret)
+
+
+# ---------------------------------------------------------------------------
+# conv net family
+# ---------------------------------------------------------------------------
+
+def test_conv_flat_dim_matches_forward():
+    for shape in ((10, 5, 1), (10, 5, 4), (32, 32, 3), (32, 32, 12)):
+        params = unbox(conv_ac_init(jax.random.PRNGKey(0), shape, 3))
+        obs = jnp.zeros((2,) + shape)
+        logits, value = conv_ac_apply(params, obs)
+        assert logits.shape == (2, 3) and value.shape == (2,)
+        assert params["torso"]["fc"]["w"].shape[0] == conv_flat_dim(shape)
+
+
+def test_conv_qr_head_shape():
+    params = unbox(conv_qr_init(jax.random.PRNGKey(0), (10, 5, 2), 3, 8))
+    out = conv_qr_apply(params, jnp.zeros((4, 10, 5, 2)), 3, 8)
+    assert out.shape == (4, 3, 8)
+    q = conv_q_apply(
+        unbox(conv_q_init(jax.random.PRNGKey(1), (10, 5, 2), 3)),
+        jnp.zeros((4, 10, 5, 2)))
+    assert q.shape == (4, 3)
+
+
+def test_conv_fxp8_forward_parity():
+    """Fig. 3a precondition at the net level: the quantized conv stem
+    tracks the fp32 forward closely (int8 per-channel grids)."""
+    params = unbox(conv_ac_init(jax.random.PRNGKey(0), (10, 5, 4), 3))
+    obs = jax.random.uniform(jax.random.PRNGKey(1), (16, 10, 5, 4))
+    l32, v32 = conv_ac_apply(params, obs)
+    l8, v8 = conv_ac_apply(params, obs, FXP8)
+    assert np.all(np.isfinite(np.asarray(l8)))
+    scale = float(jnp.abs(l32).max())
+    assert float(jnp.abs(l32 - l8).max()) < 0.1 * scale + 0.05
+    assert float(jnp.abs(v32 - v8).max()) < 0.1 * float(
+        jnp.abs(v32).max()) + 0.05
+
+
+def test_conv_weights_ship_as_int8():
+    """pack_weights quantizes the conv kernels like every matmul weight
+    — the behaviour-actor sync carries int8 conv payloads, and the
+    sync-MiB accounting reflects the cut."""
+    params = unbox(conv_ac_init(jax.random.PRNGKey(0), (32, 32, 12), 4))
+    packed = pack_weights(params, 8)
+    qs = [l for l in jax.tree.leaves(
+        packed, is_leaf=lambda l: isinstance(l, QTensor))
+        if isinstance(l, QTensor)]
+    # 2 conv kernels + torso fc + pi + v
+    assert len(qs) == 5
+    assert all(q.qvalue.dtype == jnp.int8 for q in qs)
+    assert any(q.qvalue.ndim == 4 for q in qs)      # the conv kernels
+    payload, fp32 = sync_bytes(packed)
+    assert payload < 0.35 * fp32
+
+
+def test_conv_quantized_rollout_over_pixel_pipeline():
+    """Jitted fxp8 collect over the full pixel stack — the acceptance
+    path's inner loop, with no flatten_observation anywhere."""
+    env = pixel_pipeline(make("catch"), 2)
+    assert "flatten_observation" not in wrapper_stack(env)
+    dist = distribution_for(env.action_space)
+    params = unbox(conv_ac_init(jax.random.PRNGKey(0), env.obs_shape,
+                                head_dim(env.action_space)))
+    packed = pack_weights(params, 8)
+    est, obs = init_envs(env, jax.random.PRNGKey(1), 4)
+    res = jax.jit(lambda p, e, o: collect(
+        p, env, conv_ac_apply, FXP8, jax.random.PRNGKey(2), e, o, 8,
+        dist))(packed, est, obs)
+    assert res.traj.obs.shape == (8, 4, 10, 5, 2)
+    assert np.all(np.isfinite(np.asarray(res.traj.log_probs)))
+
+
+# ---------------------------------------------------------------------------
+# conv training drivers (mechanics; the learning floor is the slow test)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("algo", ["ppo", "qrdqn"])
+@pytest.mark.parametrize("actor_policy", ["fxp8", None])
+def test_pixel_agents_train_both_precisions(algo, actor_policy):
+    """Acceptance: catch trains 3 iterations under --net conv for the
+    on-policy AND value families, fp32 and fxp8, no flatten anywhere."""
+    if algo == "ppo":
+        params, hist = rl_train("catch", "mlp", iters=3, n_envs=8,
+                                rollout_len=16, actor_policy=actor_policy,
+                                net="conv", frame_stack_k=4,
+                                verbose=False)
+    else:
+        params, hist = value_train("qrdqn", "catch", iters=3, n_envs=8,
+                                   rollout_len=4, updates_per_iter=1,
+                                   learn_start=32, replay_capacity=512,
+                                   actor_policy=actor_policy, net="conv",
+                                   frame_stack_k=4, verbose=False)
+    assert len(hist) == 3 and all(np.isfinite(h) for h in hist)
+    key0 = jax.random.PRNGKey(0)
+    init = (make_agent("mlp", build_env("catch", "conv", 4), key0, None,
+                       "conv")[0] if algo == "ppo"
+            else make_value_agent("qrdqn",
+                                  build_env("catch", "conv", 4).spec,
+                                  key0, net="conv").params)
+    delta = sum(float(jnp.sum(jnp.abs(a - b)))
+                for a, b in zip(jax.tree.leaves(init),
+                                jax.tree.leaves(params)))
+    assert delta > 0, "conv params never moved"
+
+
+def test_keydoor_conv_trains():
+    """The 32x32x3 HRL gridworld also reaches the standalone conv stem
+    (frame-stacked RGB: first conv takes 12 channels)."""
+    _, hist = rl_train("keydoor", "mlp", iters=2, n_envs=4,
+                       rollout_len=8, net="conv", frame_stack_k=4,
+                       verbose=False)
+    assert len(hist) == 2 and all(np.isfinite(h) for h in hist)
+
+
+def test_build_env_and_net_validation():
+    with pytest.raises(ValueError, match="--net conv"):
+        build_env("cartpole", "conv", 1)
+    with pytest.raises(ValueError, match="requires --net conv"):
+        build_env("cartpole", "mlp", 4)
+    with pytest.raises(ValueError, match="unknown net"):
+        build_env("catch", "resnet", 1)
+    with pytest.raises(ValueError, match="requires --net conv"):
+        rl_train("cartpole", "mlp", iters=1, frame_stack_k=4,
+                 verbose=False)
+    with pytest.raises(ValueError, match="drop --net"):
+        make_agent("hrl", make("keydoor"), jax.random.PRNGKey(0), None,
+                   "conv")
+    with pytest.raises(ValueError, match="conv"):
+        make_value_agent("ddpg", make("pendulum").spec,
+                         jax.random.PRNGKey(0), net="conv")
+    # the mlp value nets tell pixel envs where to go
+    with pytest.raises(ValueError, match="--net conv"):
+        make_value_agent("dqn", make("catch").spec,
+                         jax.random.PRNGKey(0), net="mlp")
+
+
+def test_pixel_cli_dispatch(capsys):
+    from repro.launch.rl_train import main
+    main(["--algo", "qrdqn", "--env", "catch", "--net", "conv",
+          "--frame-stack", "2", "--iters", "2", "--n-envs", "4",
+          "--rollout-len", "4", "--learn-start", "16",
+          "--replay-capacity", "256"])
+    out = capsys.readouterr().out
+    assert "qrdqn on catch" in out
+
+
+@pytest.mark.slow
+def test_conv_catch_greedy_eval_floor():
+    """End-to-end learning floor: PPO through the quantized conv stem
+    clears catch far above the random baseline (~-0.6), and the greedy
+    policy evaluated under *frozen* normalizer stats confirms it."""
+    out = {}
+    params, hist = rl_train("catch", "mlp", iters=15, n_envs=32,
+                            rollout_len=64, actor_policy="fxp8",
+                            net="conv", frame_stack_k=2, verbose=False,
+                            seed=0, state_out=out)
+    assert max(hist[-5:]) > 0.2, f"training never took off: {hist[-5:]}"
+    stats = merge_norm_stats(norm_stats_of(out["env_state"]))
+    env = pixel_pipeline(make("catch"), 2, stats=stats)  # frozen
+    est, obs = init_envs(env, jax.random.PRNGKey(123), 16)
+
+    @jax.jit
+    def greedy_run(params, est, obs):
+        def one(carry, _):
+            est, o = carry
+            logits, _ = conv_ac_apply(params, o)
+            a = jnp.argmax(logits, axis=-1)
+            est, nxt, r, d, tr, _ = jax.vmap(env.step)(est, a)
+            return (est, nxt), (r, d | tr)
+
+        (_, _), (rews, bounds) = jax.lax.scan(one, (est, obs), None,
+                                              length=40)
+        return episode_returns_from(rews, bounds)
+
+    ret, n_ep = greedy_run(params, est, obs)
+    assert int(n_ep) > 0
+    assert float(ret) > 0.3, f"greedy conv agent stuck at {float(ret)}"
+
+
+# ---------------------------------------------------------------------------
+# benchmark regression gate (pure logic — no benches run here)
+# ---------------------------------------------------------------------------
+
+def test_check_regression_gate_logic():
+    sys.path.insert(0, _ROOT)
+    try:
+        from benchmarks.check_regression import check
+    finally:
+        sys.path.remove(_ROOT)
+    base = {("t", "a"): {"table": "t", "name": "a", "steps_per_s": 1000,
+                         "sync_mib": 0.50},
+            ("t", "b"): {"table": "t", "name": "b", "steps_per_s": 400}}
+    # within tolerance: half-speed is allowed at 2.0x, sync equal
+    cur = {("t", "a"): {"table": "t", "name": "a", "steps_per_s": 501,
+                        "sync_mib": 0.50},
+           ("t", "b"): {"table": "t", "name": "b", "steps_per_s": 400},
+           ("t", "c"): {"table": "t", "name": "c", "steps_per_s": 9}}
+    fails, notes = check(cur, base, 2.0, 1.05)
+    assert fails == []
+    assert any("new row" in n for n in notes)
+    # >2x slowdown fails
+    slow = {**cur, ("t", "a"): {**cur[("t", "a")], "steps_per_s": 499}}
+    fails, _ = check(slow, base, 2.0, 1.05)
+    assert len(fails) == 1 and "steps_per_s" in fails[0]
+    # sync payload growth fails even when fast
+    fat = {**cur, ("t", "a"): {**cur[("t", "a")], "steps_per_s": 2000,
+                               "sync_mib": 0.60}}
+    fails, _ = check(fat, base, 2.0, 1.05)
+    assert len(fails) == 1 and "sync_mib" in fails[0]
+    # a dropped bench leg cannot hide a regression
+    fails, _ = check({("t", "a"): cur[("t", "a")]}, base, 2.0, 1.05)
+    assert len(fails) == 1 and "missing" in fails[0]
+    # ...and neither can a dropped sync_mib field
+    nofield = {**cur, ("t", "a"): {k: v for k, v in
+                                   cur[("t", "a")].items()
+                                   if k != "sync_mib"}}
+    fails, _ = check(nofield, base, 2.0, 1.05)
+    assert len(fails) == 1 and "sync_mib missing" in fails[0]

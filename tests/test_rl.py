@@ -363,7 +363,9 @@ def test_two_stage_checkpoint_records_stage_and_resumes_in_stage(
     assert mgr.latest_step() == 3            # 2 stages x 2 iters - 1
     env = make("catch")
     params, _ = make_agent("hrl", env, jax.random.PRNGKey(0), "fxp8")
-    (_, _), md = mgr.restore((params, adamw_init(params)))
+    est0, obs0 = init_envs(env, jax.random.PRNGKey(1), 4)
+    (_, _, _, _), md = mgr.restore((params, adamw_init(params),
+                                    est0, obs0))
     assert md["stage"] == "subgoal"
     assert md["stage_iter"] == 1
 

@@ -21,6 +21,7 @@ DDPG_KW = dict(env_name="pendulum", iters=600, n_envs=32, rollout_len=8,
                updates_per_iter=8, lr=1e-3, n_step=3, verbose=False)
 
 
+@pytest.mark.slow
 def test_dqn_smoke_cartpole_reaches_floor():
     """Double-DQN with the fxp8 behaviour actor balances cartpole far
     beyond the ~10-step greedy-untrained baseline."""
@@ -33,6 +34,7 @@ def test_dqn_smoke_cartpole_reaches_floor():
     assert ret > 150.0, f"dqn stuck at {ret:.1f}"
 
 
+@pytest.mark.slow
 def test_qrdqn_smoke_cartpole_reaches_floor():
     params, _ = value_train("qrdqn", actor_policy="fxp8", seed=0,
                             **DQN_KW)
@@ -41,6 +43,7 @@ def test_qrdqn_smoke_cartpole_reaches_floor():
     assert ret > 100.0, f"qrdqn stuck at {ret:.1f}"
 
 
+@pytest.mark.slow
 def test_ddpg_smoke_pendulum_reaches_floor():
     """TD3-style DDPG on the continuous pendulum: the greedy policy
     must land far above the ~-1580 untrained baseline."""
@@ -51,6 +54,7 @@ def test_ddpg_smoke_pendulum_reaches_floor():
     assert ret > -1100.0, f"ddpg stuck at {ret:.1f}"
 
 
+@pytest.mark.slow
 def test_dqn_fxp8_parity_with_fp32():
     """Fig. 3a for the value-based family: the quantized behaviour
     actor reaches returns comparable to the fp32 baseline at an equal
@@ -126,10 +130,14 @@ def test_replay_and_targets_resume_roundtrip(tmp_path):
     agent = make_value_agent("dqn", make("cartpole").spec,
                              jax.random.PRNGKey(3))
     from repro.optim import adamw_init
+    from repro.rl import init_envs
+    from repro.rl.envs.wrappers import ensure_vector_obs
     from repro.rl.value import replay_init
+    est0, obs0 = init_envs(ensure_vector_obs(make("cartpole")),
+                           jax.random.PRNGKey(3 + 1), 16)
     like = (agent.params, agent.params, adamw_init(agent.params),
-            replay_init(50_000, (4,)))
-    (p, tgt, opt, buf), md = mgr.restore(like)
+            replay_init(50_000, (4,)), est0, obs0)
+    (p, tgt, opt, buf, _, _), md = mgr.restore(like)
     assert md["algo"] == "dqn" and md["it"] == 4
     # replay pointers captured exactly: 5 chunks x 16 envs x 4 steps
     assert int(buf.size) == 5 * 16 * 4
