@@ -1,0 +1,113 @@
+"""Replay-subsystem throughput: capacity x batch x backend.
+
+For each (capacity, batch) cell, time the three hot operations of both
+``repro.rl.replay`` backends on a half-full buffer:
+
+  * ``adds_per_s``     — circular insert of a ``batch``-sized chunk
+                         (PER: + max-priority tree write);
+  * ``samples_per_s``  — a ``batch``-sized draw (uniform randint vs
+                         PER stratified sum-tree descent + IS weights);
+  * ``updates_per_s``  — the PER priority write-back (O(batch log n)
+                         leaf + ancestor refresh; the uniform backend
+                         has no such op, so no row field).
+
+The interesting number is the PER-over-uniform overhead: the sum tree
+buys prioritized sampling for two O(log n) passes, and this bench is
+the regression gate (benchmarks/check_regression.py) that keeps those
+passes from quietly becoming O(n).
+
+    PYTHONPATH=src:. python -m benchmarks.bench_replay [--json out.json]
+
+or via the orchestrator: ``python -m benchmarks.run --only replay``.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timeit
+from repro.rl.replay import make_replay
+
+OBS_DIM = 8          # cartpole-class vector observations
+
+
+def _chunk(key, batch: int):
+    ko, kr = jax.random.split(key)
+    obs = jax.random.normal(ko, (batch, OBS_DIM))
+    return (obs, jnp.zeros((batch,), jnp.int32),
+            jax.random.normal(kr, (batch,)), obs + 1.0,
+            jnp.full((batch,), 0.99))
+
+
+def bench_one(kind: str, capacity: int, batch: int):
+    rb = make_replay(kind, capacity, (OBS_DIM,))
+    state = rb.init()
+    # half-fill so sampling/updates hit a realistic valid prefix
+    fill = _chunk(jax.random.PRNGKey(0), capacity // 2)
+    state = jax.jit(rb.add)(state, *fill)
+
+    add = jax.jit(rb.add)
+    sample = jax.jit(lambda s, k: rb.sample(s, k, batch, min_size=1,
+                                            beta=0.5))
+    chunk = _chunk(jax.random.PRNGKey(1), batch)
+    key = jax.random.PRNGKey(2)
+
+    fields = dict(
+        backend=kind, capacity=capacity, batch=batch,
+        # sub-ms ops on throttled shared runners: medians drift up to
+        # ~20x run to run, so the row carries its own coarse gate
+        # budget — the gate is a catastrophic-regression net here
+        # (e.g. an accidental per-item tree rebuild), not a 2x watchdog
+        slowdown_tol=30.0,
+        adds_per_s=int(batch / timeit(add, state, *chunk,
+                                      warmup=2, iters=10)),
+        samples_per_s=int(batch / timeit(sample, state, key,
+                                         warmup=2, iters=10)),
+    )
+    if rb.prioritized:
+        idx = jax.random.randint(jax.random.PRNGKey(3), (batch,), 0,
+                                 capacity // 2)
+        td = jnp.abs(jax.random.normal(jax.random.PRNGKey(4), (batch,)))
+        update = jax.jit(rb.update)
+        fields["updates_per_s"] = int(
+            batch / timeit(update, state, idx, td, warmup=2, iters=10))
+    emit("replay", f"{kind}/cap{capacity}/b{batch}", **fields)
+
+
+def run(fast: bool = True, capacities=None, batches=None):
+    capacities = capacities or ([2**14] if fast else [2**14, 2**17])
+    batches = batches or [64, 256]
+    for capacity in capacities:
+        for batch in batches:
+            for kind in ("uniform", "per"):
+                bench_one(kind, capacity, batch)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--capacities", default=None,
+                    help="comma-separated, e.g. 16384,131072")
+    ap.add_argument("--batches", default=None,
+                    help="comma-separated, e.g. 64,256")
+    ap.add_argument("--csv", default=None)
+    ap.add_argument("--json", default=None,
+                    help="write the emit rows as JSON (CI gate input)")
+    args = ap.parse_args(argv)
+    caps = ([int(c) for c in args.capacities.split(",")]
+            if args.capacities else None)
+    batches = ([int(b) for b in args.batches.split(",")]
+               if args.batches else None)
+    run(fast=not args.full, capacities=caps, batches=batches)
+    if args.csv:
+        from benchmarks.common import dump_csv
+        dump_csv(args.csv)
+    if args.json:
+        from benchmarks.common import dump_json
+        dump_json(args.json)
+
+
+if __name__ == "__main__":
+    main()

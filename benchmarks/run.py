@@ -12,6 +12,9 @@
                             env x fp32/fxp8 x device count + sync MiB
   pixel       Sec. III      pixel-pipeline env-steps/s: catch/keydoor x
                             frame_stack x fp32/fxp8 x conv/mlp net
+  replay      §Replay       replay backends: capacity x batch x
+                            uniform/per — adds/s, samples/s,
+                            priority-updates/s
   lm          Sec. IV       the fabric generalized to LM train/serve
   roofline    §Roofline     dry-run derived terms (needs dryrun JSON)
 """
@@ -22,7 +25,8 @@ import time
 
 from benchmarks import (bench_arch, bench_env_throughput, bench_lm,
                         bench_pixel_throughput, bench_qmac,
-                        bench_rewards, bench_roofline, bench_vact)
+                        bench_replay, bench_rewards, bench_roofline,
+                        bench_vact)
 from benchmarks.common import dump_csv
 
 SUITES = {
@@ -32,6 +36,7 @@ SUITES = {
     "rewards": lambda full: bench_rewards.run(fast=not full),
     "env_throughput": lambda full: bench_env_throughput.run(fast=not full),
     "pixel": lambda full: bench_pixel_throughput.run(fast=not full),
+    "replay": lambda full: bench_replay.run(fast=not full),
     "lm": lambda full: bench_lm.run(),
     "roofline": lambda full: bench_roofline.run(),
 }

@@ -84,6 +84,15 @@ def save(path: str, tree: Any, metadata: Optional[Dict] = None) -> None:
         raise
 
 
+def read_metadata(path: str) -> Dict:
+    """The sidecar metadata for the checkpoint at ``path`` — no array
+    IO, no restore template.  The sidecar format (``path + ".json"``,
+    ``{"leaves": ..., "metadata": ...}``) is owned here, next to the
+    save/restore that write and read it."""
+    with open(path + ".json") as f:
+        return json.load(f)["metadata"]
+
+
 def restore(path: str, like: Any,
             shardings: Any = None) -> Tuple[Any, Dict]:
     """Restore into the structure of ``like``.

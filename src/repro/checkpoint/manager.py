@@ -66,6 +66,19 @@ class CheckpointManager:
             raise FileNotFoundError(f"no checkpoints in {self.dir}")
         return checkpointer.restore(self.path_for(step), like, shardings)
 
+    def metadata(self, step: Optional[int] = None) -> Dict:
+        """The sidecar metadata alone — no array restore, no template.
+
+        Lets a launcher validate run flags (algo, replay backend, net
+        shapes) BEFORE building a restore template: a flag mismatch
+        then fails with the launcher's own error instead of an opaque
+        missing-leaf KeyError from the tree restore.
+        """
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        return checkpointer.read_metadata(self.path_for(step))
+
     def restore_or_init(self, init_fn, shardings: Any = None):
         """Auto-resume: restore latest if present, else init fresh.
 

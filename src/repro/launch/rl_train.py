@@ -23,9 +23,12 @@ Two training families share the quantized-actor/fp32-learner split:
   * off-policy value-based (``--algo dqn|qrdqn|ddpg``): the quantized
     behaviour actor (epsilon-greedy Q net, or deterministic actor +
     exploration noise for Box envs) fills a truncation-aware n-step
-    replay; the fp32 learner updates Double-DQN / QR-DQN / TD3-style
-    twin-critic DDPG against polyak target networks — see
-    :mod:`repro.rl.value`.
+    replay (``--replay {uniform,per}`` — uniform circular, or sum-tree
+    prioritized with ``--per-alpha/--per-beta0/--per-beta-iters``; see
+    :mod:`repro.rl.replay`); the fp32 learner updates Double-DQN /
+    QR-DQN / TD3-style twin-critic DDPG (``--tqc-drop`` swaps the
+    min-backup for TQC quantile truncation) against polyak target
+    networks — see :mod:`repro.rl.value`.
 
 Checkpoints make both loops restart-safe (including mid-stage restarts
 of ``--two-stage`` runs and the replay/target state of value-based
@@ -64,14 +67,16 @@ from repro.rl.nets import (conv_ac_apply, conv_ac_init, conv_q_apply,
                            mlp_ac_apply, mlp_ac_init, mlp_pi_apply,
                            mlp_pi_init, mlp_q_apply, mlp_q_init,
                            mlp_qr_apply, mlp_qr_init, mlp_twin_q_apply,
-                           mlp_twin_q_init)
+                           mlp_twin_q_init, mlp_twin_qr_apply,
+                           mlp_twin_qr_init)
 from repro.rl.ppo import a2c_loss, minibatch_epochs, ppo_loss, stage_mask
+from repro.rl.replay import KINDS as REPLAY_KINDS
+from repro.rl.replay import make_replay, replay_size
 from repro.rl.rollout import episode_returns, episode_returns_from
 from repro.rl.value import (DDPGConfig, DQNConfig, QRDQNConfig,
-                            ddpg_actor_loss, ddpg_critic_loss, dqn_loss,
-                            egreedy, epsilon, nstep_targets, polyak,
-                            qrdqn_loss, replay_add, replay_init,
-                            replay_sample)
+                            ddpg_actor_loss, ddpg_critic_loss_td,
+                            dqn_loss_td, egreedy, epsilon, nstep_targets,
+                            polyak, qrdqn_loss_td)
 
 ON_POLICY_ALGOS = ("ppo", "a2c")
 VALUE_ALGOS = ("dqn", "qrdqn", "ddpg")
@@ -362,12 +367,19 @@ def make_value_agent(algo: str, spec, key=None,
                      n_step: int = 3,
                      eps_decay_steps: int = 2_000,
                      learn_start: Optional[int] = None,
-                     net: str = "mlp") -> ValueAgent:
+                     net: str = "mlp", tqc_drop: int = 0,
+                     critic_quantiles: int = 0) -> ValueAgent:
     """Build the nets/policies for one value algo.  ``key=None`` skips
     the parameter init (``agent.params`` is None) — for callers that
     only need the apply closures and config, e.g. evaluation of
     already-trained params.  ``net="conv"`` selects the Q-Conv pixel
-    nets (dqn/qrdqn over (H, W, C) observations)."""
+    nets (dqn/qrdqn over (H, W, C) observations).
+
+    ``tqc_drop > 0`` (ddpg only) switches the twin critics to TQC
+    quantile heads and truncates the top-k pooled target quantiles in
+    the Bellman backup; ``critic_quantiles`` sizes those heads (0 =
+    auto: 25 when truncating, scalar critics otherwise — the default
+    keeps today's TD3 min-backup bit-exact)."""
     def tune(cfg):
         if learn_start is None:
             return cfg
@@ -396,6 +408,9 @@ def make_value_agent(algo: str, spec, key=None,
     if algo == "ddpg" and conv:
         raise ValueError("--net conv drives the discrete Q family "
                          "(dqn/qrdqn); ddpg has no pixel actor-critic")
+    if (tqc_drop or critic_quantiles) and algo != "ddpg":
+        raise ValueError("--tqc-drop truncates the DDPG critic targets; "
+                         f"--algo {algo} has no twin critics")
 
     if algo == "qrdqn":
         cfg = tune(QRDQNConfig(n_step=n_step,
@@ -416,7 +431,7 @@ def make_value_agent(algo: str, spec, key=None,
         return ValueAgent(algo, cfg, params, True,
                           qvals=lambda p, o, pol=None:
                               q_apply(p, o, pol).mean(-1),
-                          q_apply=q_apply, loss_fn=qrdqn_loss)
+                          q_apply=q_apply, loss_fn=qrdqn_loss_td)
     if algo == "dqn":
         cfg = tune(DQNConfig(n_step=n_step,
                              eps_decay_steps=eps_decay_steps))
@@ -429,7 +444,7 @@ def make_value_agent(algo: str, spec, key=None,
             params = unbox(mlp_q_init(key, obs_dim, spec.n_actions))
         q_fn = conv_q_apply if conv else mlp_q_apply
         return ValueAgent(algo, cfg, params, True, qvals=q_fn,
-                          q_apply=q_fn, loss_fn=dqn_loss)
+                          q_apply=q_fn, loss_fn=dqn_loss_td)
     if algo != "ddpg":
         raise ValueError(f"unknown value algo {algo!r} "
                          f"(expected one of {VALUE_ALGOS})")
@@ -437,20 +452,32 @@ def make_value_agent(algo: str, spec, key=None,
     if not space.bounded:
         raise ValueError("ddpg needs finite Box action bounds")
     act_dim = space.shape[0]
+    if critic_quantiles == 0:
+        # auto: truncation needs a return distribution to prune; the
+        # default stays the scalar TD3 min-backup, bit-exact
+        critic_quantiles = 25 if tqc_drop > 0 else 1
     cfg = tune(DDPGConfig(low=space.low, high=space.high,
-                          n_step=n_step))
+                          n_step=n_step,
+                          critic_quantiles=critic_quantiles,
+                          tqc_drop=tqc_drop))
+    quantile = cfg.critic_quantiles > 1
     if key is None:
         params = None
     else:
         ka, kc = jax.random.split(key)
+        critic = (mlp_twin_qr_init(kc, obs_dim, act_dim,
+                                   cfg.critic_quantiles)
+                  if quantile else
+                  mlp_twin_q_init(kc, obs_dim, act_dim))
         params = {"actor": unbox(mlp_pi_init(ka, obs_dim, act_dim)),
-                  "critic": unbox(mlp_twin_q_init(kc, obs_dim, act_dim))}
+                  "critic": unbox(critic)}
+    twin_apply = mlp_twin_qr_apply if quantile else mlp_twin_q_apply
     return ValueAgent(
         algo, cfg, params, False,
         act=lambda p, o, pol=None: mlp_pi_apply(p, o, cfg.low, cfg.high,
                                                 pol),
         critic_apply=lambda p, o, a, pol=None:
-            mlp_twin_q_apply(p, o, a, pol))
+            twin_apply(p, o, a, pol))
 
 
 def value_eval(algo: str, env_name: str, params,
@@ -510,6 +537,10 @@ def value_train(algo: str = "dqn", env_name: str = "cartpole",
                 verbose: bool = True,
                 learn_start: Optional[int] = None, net: str = "mlp",
                 frame_stack_k: int = 1,
+                replay: str = "uniform", per_alpha: float = 0.6,
+                per_beta0: float = 0.4,
+                per_beta_iters: Optional[int] = None,
+                tqc_drop: int = 0,
                 state_out: Optional[dict] = None):
     """Off-policy value-based training (paper Fig. 2 split, replay
     flavour): the *quantized* behaviour actor collects ``rollout_len``
@@ -520,8 +551,18 @@ def value_train(algo: str = "dqn", env_name: str = "cartpole",
     state (so wrapper carries like the Welford running-norm stats
     survive preemption), so a relaunch with the same command line
     resumes exactly.  ``state_out`` (optional dict) receives the final
-    ``env_state``/``obs`` — e.g. to extract the normalizer stats for a
-    frozen evaluation.
+    ``env_state``/``obs``/``replay`` state — e.g. to extract the
+    normalizer stats for a frozen evaluation.
+
+    ``replay`` picks the backend (:mod:`repro.rl.replay`): ``uniform``
+    is the bit-exact historical buffer; ``per`` is sum-tree
+    proportional prioritization — transitions insert at max priority,
+    sampling follows ``(|td| + eps) ** per_alpha``, the losses weight
+    each sample by its annealed-beta importance weight (``per_beta0``
+    -> 1 over ``per_beta_iters`` iterations, default the whole run),
+    and every TD update writes the fresh per-sample errors back into
+    the tree.  ``tqc_drop`` (ddpg) truncates the top-k pooled target
+    quantiles — see :func:`make_value_agent`.
     """
     if algo not in VALUE_ALGOS:
         raise ValueError(f"value_train drives {VALUE_ALGOS}, got "
@@ -536,7 +577,8 @@ def value_train(algo: str = "dqn", env_name: str = "cartpole",
 
     agent = make_value_agent(algo, spec, key, n_step=n_step,
                              eps_decay_steps=decay,
-                             learn_start=learn_start, net=net)
+                             learn_start=learn_start, net=net,
+                             tqc_drop=tqc_drop)
     cfg, params = agent.cfg, agent.params
     discrete = agent.discrete
     # fresh buffers, not an alias: params and target are both donated
@@ -545,11 +587,16 @@ def value_train(algo: str = "dqn", env_name: str = "cartpole",
     if algo == "ddpg":
         opt = {"actor": adamw_init(params["actor"]),
                "critic": adamw_init(params["critic"])}
-        buf = replay_init(replay_capacity, spec.obs_shape,
-                          spec.action_space.shape, jnp.float32)
+        rb = make_replay(replay, replay_capacity, spec.obs_shape,
+                         spec.action_space.shape, jnp.float32,
+                         alpha=per_alpha)
     else:
         opt = adamw_init(params)
-        buf = replay_init(replay_capacity, spec.obs_shape)
+        rb = make_replay(replay, replay_capacity, spec.obs_shape,
+                         alpha=per_alpha)
+    buf = rb.init()
+    beta_iters = max(per_beta_iters if per_beta_iters is not None
+                     else iters, 1)
     ocfg = AdamWConfig(weight_decay=0.0, max_grad_norm=10.0)
     sched = constant(lr)
 
@@ -559,18 +606,52 @@ def value_train(algo: str = "dqn", env_name: str = "cartpole",
     if ckpt_dir:
         mgr = CheckpointManager(ckpt_dir, keep=2, save_every=save_every)
         if mgr.latest_step() is not None:
-            (params, target, opt, buf, est, obs), md = mgr.restore(
-                (params, target, opt, buf, est, obs))
+            # flags are validated against the sidecar metadata BEFORE
+            # the tree restore: a mismatched template (e.g. uniform
+            # Replay vs a saved PER tree, scalar vs quantile critics)
+            # must fail with these errors, not a missing-leaf KeyError
+            md = mgr.metadata()
             md_algo = str(md.get("algo", ""))
             if md_algo != algo:
                 raise ValueError(
                     f"checkpoint in {ckpt_dir} was saved by --algo "
                     f"{md_algo!r}, not {algo!r} — relaunch with the "
                     "original flags")
+            md_replay = str(md.get("replay", "uniform"))
+            if md_replay != replay:
+                raise ValueError(
+                    f"checkpoint in {ckpt_dir} was saved by --replay "
+                    f"{md_replay!r}, not {replay!r} — the sampling "
+                    "stream (and the PER tree state) is part of the "
+                    "run; relaunch with the original flags")
+            md_tqc = int(md.get("tqc_drop", 0))
+            if md_tqc != tqc_drop:
+                raise ValueError(
+                    f"checkpoint in {ckpt_dir} was saved by --tqc-drop "
+                    f"{md_tqc}, not {tqc_drop} — the critic head shape "
+                    "differs (restore does not shape-check); relaunch "
+                    "with the original flags")
+            if replay == "per":
+                # the priority exponent and beta schedule shape every
+                # subsequent draw: a silent change would diverge from
+                # the uninterrupted run's sampling stream
+                for flag, have in (("per_alpha", per_alpha),
+                                   ("per_beta0", per_beta0),
+                                   ("per_beta_iters", beta_iters)):
+                    saved = md.get(flag)
+                    if saved is not None and float(saved) != float(have):
+                        raise ValueError(
+                            f"checkpoint in {ckpt_dir} was saved with "
+                            f"--{flag.replace('_', '-')} {saved}, not "
+                            f"{have} — the prioritized sampling stream "
+                            "depends on it; relaunch with the original "
+                            "flags")
+            (params, target, opt, buf, est, obs), md = mgr.restore(
+                (params, target, opt, buf, est, obs))
             start = int(md.get("it", md.get("step", 0))) + 1
             if verbose:
                 print(f"resumed at iter {start} "
-                      f"(replay size {int(buf.size)})")
+                      f"(replay size {int(replay_size(buf))})")
 
     # donate the threaded state: without it XLA copies the whole
     # replay buffer (capacity x obs, the dominant allocation) on every
@@ -599,8 +680,14 @@ def value_train(algo: str = "dqn", env_name: str = "cartpole",
                                         cfg.n_step)
         T, B = R.shape
         flat = lambda x: x.reshape((T * B,) + x.shape[2:])
-        buf = replay_add(buf, flat(O), flat(A), flat(rets), flat(nxt),
-                         flat(disc))
+        buf = rb.add(buf, flat(O), flat(A), flat(rets), flat(nxt),
+                     flat(disc))
+
+        # PER bias correction anneals toward full (beta=1) over the
+        # run; uniform ignores it (python literal, compiles away)
+        beta = (per_beta0 + (1.0 - per_beta0)
+                * jnp.clip(it / beta_iters, 0.0, 1.0)
+                if rb.prioritized else 1.0)
 
         def opt_step(p, s, g):
             p, s, _ = adamw_update(g, s, p, sched, ocfg)
@@ -608,10 +695,10 @@ def value_train(algo: str = "dqn", env_name: str = "cartpole",
 
         for _ in range(updates_per_iter):
             k_update, k_s, k_n = jax.random.split(k_update, 3)
-            batch = replay_sample(buf, k_s, cfg.batch_size,
-                                  min_size=cfg.learn_start)
+            batch = rb.sample(buf, k_s, cfg.batch_size,
+                              min_size=cfg.learn_start, beta=beta)
             if algo == "ddpg":
-                g_c = jax.grad(ddpg_critic_loss)(
+                g_c, td = jax.grad(ddpg_critic_loss_td, has_aux=True)(
                     params["critic"], target["critic"], target["actor"],
                     agent.critic_apply, agent.act, batch, cfg, k_n)
                 c_p, c_s = opt_step(params["critic"], opt["critic"], g_c)
@@ -623,11 +710,13 @@ def value_train(algo: str = "dqn", env_name: str = "cartpole",
                 opt = {"actor": a_s, "critic": c_s}
                 target = polyak(target, params, cfg.tau)
             else:
-                g = jax.grad(agent.loss_fn)(
+                g, td = jax.grad(agent.loss_fn, has_aux=True)(
                     params, target,
                     lambda p, o: agent.q_apply(p, o, None), batch, cfg)
                 params, opt = opt_step(params, opt, g)
                 target = polyak(target, params, cfg.target_tau)
+            # priority refresh from the fresh TD errors (uniform: no-op)
+            buf = rb.update(buf, batch["indices"], td)
 
         ret, n_ep = episode_returns_from(R, D | Tr)
         return params, target, opt, buf, est, obs, ret, n_ep
@@ -637,8 +726,11 @@ def value_train(algo: str = "dqn", env_name: str = "cartpole",
     t0 = time.time()
     if verbose:
         pol = actor_policy if a_policy else "fp32"
+        rep = (f"per(alpha={per_alpha}, beta {per_beta0}->1/"
+               f"{beta_iters}it)" if rb.prioritized else "uniform")
         print(f"{algo} on {spec.name}: {n_envs} envs x {rollout_len} "
-              f"steps/iter, n_step={cfg.n_step}, {pol} behaviour actor")
+              f"steps/iter, n_step={cfg.n_step}, {pol} behaviour actor, "
+              f"{rep} replay")
     for it in range(start, iters):
         # only the behaviour net ships to the fleet (ddpg: the actor
         # alone — syncing the twin critics would triple the payload)
@@ -657,15 +749,20 @@ def value_train(algo: str = "dqn", env_name: str = "cartpole",
         if verbose and (it % log_every == 0 or it == iters - 1):
             print(f"iter {it:4d}  return {float(ret):8.2f}  "
                   f"episodes {int(n_ep):4d}  "
-                  f"replay {int(buf.size):6d}")
+                  f"replay {int(replay_size(buf)):6d}")
         if mgr and mgr.should_save(it):
+            md_out = {"algo": algo, "it": it, "replay": replay,
+                      "tqc_drop": tqc_drop}
+            if rb.prioritized:
+                md_out.update(per_alpha=per_alpha, per_beta0=per_beta0,
+                              per_beta_iters=beta_iters)
             mgr.save(it, (params, target, opt, buf, est, obs),
-                     metadata={"algo": algo, "it": it})
+                     metadata=md_out)
     if verbose:
         print(f"done in {time.time() - t0:.0f}s; "
               f"total sync payload {total_sync_payload / 2**20:.1f} MiB")
     if state_out is not None:
-        state_out.update(env_state=est, obs=obs)
+        state_out.update(env_state=est, obs=obs, replay=buf)
     return params, history
 
 
@@ -701,6 +798,21 @@ def main(argv=None):
                     help="restrict the host mesh to the first N devices")
     # value-based knobs (--algo dqn|qrdqn|ddpg)
     ap.add_argument("--replay-capacity", type=int, default=50_000)
+    ap.add_argument("--replay", default="uniform",
+                    choices=list(REPLAY_KINDS),
+                    help="replay backend: uniform circular, or per "
+                         "(sum-tree proportional prioritization)")
+    ap.add_argument("--per-alpha", type=float, default=0.6,
+                    help="PER priority exponent (0=uniform, 1=greedy)")
+    ap.add_argument("--per-beta0", type=float, default=0.4,
+                    help="initial PER importance-weight exponent")
+    ap.add_argument("--per-beta-iters", type=int, default=None,
+                    help="iterations to anneal beta to 1 over "
+                         "(default: the whole run)")
+    ap.add_argument("--tqc-drop", type=int, default=0,
+                    help="ddpg: drop the top-k pooled target quantiles "
+                         "(TQC truncation; >0 switches the twin "
+                         "critics to 25-quantile heads)")
     ap.add_argument("--n-step", type=int, default=3)
     ap.add_argument("--updates-per-iter", type=int, default=4)
     ap.add_argument("--learn-start", type=int, default=None,
@@ -708,6 +820,18 @@ def main(argv=None):
                          "algo config's, 256)")
     args = ap.parse_args(argv)
     actor_policy = None if args.fp32_actors else args.actor_policy
+    if args.algo not in VALUE_ALGOS and (args.replay != "uniform"
+                                         or args.tqc_drop):
+        raise ValueError(
+            "--replay/--tqc-drop configure the value-based replay "
+            f"loop; --algo {args.algo} is on-policy — drop these flags")
+    if args.replay != "per" and (args.per_alpha != 0.6
+                                 or args.per_beta0 != 0.4
+                                 or args.per_beta_iters is not None):
+        raise ValueError(
+            "--per-alpha/--per-beta0/--per-beta-iters configure the "
+            "prioritized backend and would be silently ignored — add "
+            "--replay per (or drop them)")
     if args.algo in VALUE_ALGOS:
         if args.two_stage or args.agent == "hrl":
             raise ValueError("--two-stage/--agent hrl are on-policy "
@@ -734,7 +858,11 @@ def main(argv=None):
                     n_step=args.n_step,
                     updates_per_iter=args.updates_per_iter,
                     learn_start=args.learn_start, net=args.net,
-                    frame_stack_k=args.frame_stack)
+                    frame_stack_k=args.frame_stack,
+                    replay=args.replay, per_alpha=args.per_alpha,
+                    per_beta0=args.per_beta0,
+                    per_beta_iters=args.per_beta_iters,
+                    tqc_drop=args.tqc_drop)
     else:
         rl_train(args.env, args.agent,
                  args.iters if args.iters is not None else 40,

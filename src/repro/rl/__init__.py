@@ -7,10 +7,14 @@ from repro.rl.envs import Environment, EnvSpec, make, register, registered
 from repro.rl.gae import gae, normalize
 from repro.rl.ppo import (PPOConfig, a2c_loss, batch_from_traj,
                           minibatch_epochs, ppo_loss, stage_mask)
+from repro.rl.replay import (PERState, ReplayBuffer, make_replay,
+                             per_add, per_init, per_sample, per_update)
 from repro.rl.rollout import (RolloutResult, Trajectory, episode_returns,
                               episode_returns_from, init_envs, rollout)
 from repro.rl.value import (DDPGConfig, DQNConfig, QRDQNConfig, Replay,
-                            ddpg_actor_loss, ddpg_critic_loss, dqn_loss,
+                            ddpg_actor_loss, ddpg_critic_loss,
+                            ddpg_critic_loss_td, dqn_loss, dqn_loss_td,
                             egreedy, epsilon, nstep_targets, polyak,
-                            qrdqn_loss, replay_add, replay_init,
-                            replay_sample)
+                            qrdqn_loss, qrdqn_loss_td, replay_add,
+                            replay_init, replay_sample,
+                            truncated_target_quantiles)

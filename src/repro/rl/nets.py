@@ -145,6 +145,28 @@ def mlp_twin_q_apply(params, obs: Array, act: Array,
     return q1, q2
 
 
+def mlp_twin_qr_init(key, obs_dim: int, act_dim: int, n_quantiles: int,
+                     hidden: int = 64, dtype=jnp.float32):
+    """TQC-style twin *quantile* critics Z(s, a) — the twin-Q torsos
+    with [n_quantiles] heads, so the DDPG backup can pool, sort and
+    truncate the target return distribution instead of min-clipping."""
+    ks = KeySeq(key)
+    return {"q1": mlp_q_init(ks(), obs_dim + act_dim, n_quantiles,
+                             hidden, dtype),
+            "q2": mlp_q_init(ks(), obs_dim + act_dim, n_quantiles,
+                             hidden, dtype)}
+
+
+def mlp_twin_qr_apply(params, obs: Array, act: Array,
+                      policy: Optional[QuantPolicy] = None
+                      ) -> Tuple[Array, Array]:
+    """(obs [B, D], act [B, d]) -> (z1 [B, N], z2 [B, N])."""
+    x = jnp.concatenate(
+        [obs, act.reshape(obs.shape[0], -1).astype(obs.dtype)], axis=-1)
+    return (mlp_q_apply(params["q1"], x, policy),
+            mlp_q_apply(params["q2"], x, policy))
+
+
 # ---------------------------------------------------------------------------
 # Q-Conv pixel family (catch / keydoor without flatten_observation)
 # ---------------------------------------------------------------------------

@@ -1,0 +1,27 @@
+"""repro.rl.replay — the off-policy replay subsystem.
+
+Two jit-compatible, donation-friendly backends behind one typed
+protocol (:class:`ReplayBuffer`, built by :func:`make_replay`):
+
+  * ``uniform`` — the circular buffer (bit-compatible with the PR-3
+    ``repro.rl.value`` implementation it was moved out of);
+  * ``per`` — proportional prioritized replay on a pure-JAX sum tree
+    (max-priority insertion, alpha priority exponent, annealed-beta
+    importance weights, post-update priority refresh).
+
+See :mod:`repro.rl.replay.base` for the batch contract.
+"""
+from repro.rl.replay import sum_tree
+from repro.rl.replay.base import (KINDS, ReplayBuffer, make_replay,
+                                  replay_size)
+from repro.rl.replay.per import (PERState, PRIORITY_EPS, per_add,
+                                 per_init, per_sample, per_update)
+from repro.rl.replay.uniform import (Replay, replay_add, replay_init,
+                                     replay_sample)
+
+__all__ = [
+    "KINDS", "PERState", "PRIORITY_EPS", "Replay", "ReplayBuffer",
+    "make_replay", "per_add", "per_init", "per_sample", "per_update",
+    "replay_add", "replay_init", "replay_sample", "replay_size",
+    "sum_tree",
+]

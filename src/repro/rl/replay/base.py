@@ -1,0 +1,97 @@
+"""The unified replay protocol: one typed facade over the jit-
+compatible backends.
+
+A :class:`ReplayBuffer` bundles the four pure functions every
+off-policy driver needs — ``init``/``add``/``sample``/``update`` — for
+one backend and one static configuration (capacity, shapes, PER
+alpha).  The *state* they thread (``Replay`` or ``PERState``) is a flat
+pytree: it rides through ``jax.jit`` (and ``donate_argnums``) and
+checkpoints like any other training state, while the ``ReplayBuffer``
+itself stays python-side, so backend dispatch costs nothing inside the
+compiled iteration.
+
+The batch contract every backend honours::
+
+    sample(state, key, n, min_size=1, beta=1.0) -> {
+        "obs", "actions", "rewards", "next_obs", "discounts",
+        "weight",    # per-sample loss weights (IS weights under PER;
+                     # the 0/1 underfill mask under uniform)
+        "indices",   # sampled slots, for update()
+        ...          # backend extras (PER: "probs")
+    }
+    update(state, indices, td_abs) -> state   # priority write-back
+                                              # (identity for uniform)
+
+so a driver written against this protocol runs unmodified under either
+backend — ``--replay {uniform,per}`` is one string.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Tuple
+
+import jax.numpy as jnp
+
+from repro.rl.replay import per as _per
+from repro.rl.replay import uniform as _uniform
+
+KINDS = ("uniform", "per")
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplayBuffer:
+    """One replay backend bound to its static configuration."""
+
+    kind: str                      # one of KINDS
+    capacity: int
+    init: Callable[[], Any]        # () -> state
+    add: Callable[..., Any]        # (state, obs, act, rew, nxt, disc)
+    sample: Callable[..., dict]    # (state, key, n, min_size=, beta=)
+    update: Callable[..., Any]     # (state, indices, td_abs) -> state
+
+    @property
+    def prioritized(self) -> bool:
+        return self.kind == "per"
+
+
+def replay_size(state):
+    """Valid-entry count of either backend's state (scalar int32)."""
+    if isinstance(state, _per.PERState):
+        return state.store.size
+    return state.size
+
+
+def make_replay(kind: str, capacity: int, obs_shape,
+                action_shape: Tuple[int, ...] = (),
+                action_dtype=jnp.int32, *,
+                alpha: float = 0.6) -> ReplayBuffer:
+    """Build the :class:`ReplayBuffer` facade for one backend.
+
+    ``alpha`` is the PER priority exponent (ignored by ``uniform``):
+    sampling mass is ``(|td| + eps) ** alpha``, so 0 degrades PER to
+    uniform-with-IS-weights and 1 is fully greedy prioritization.
+    """
+    if kind not in KINDS:
+        raise ValueError(f"unknown replay kind {kind!r} "
+                         f"(expected one of {KINDS})")
+    if kind == "uniform":
+        return ReplayBuffer(
+            kind, capacity,
+            init=lambda: _uniform.replay_init(capacity, obs_shape,
+                                              action_shape, action_dtype),
+            add=_uniform.replay_add,
+            sample=lambda state, key, n, min_size=1, beta=1.0:
+                _uniform.replay_sample(state, key, n, min_size),
+            update=lambda state, indices, td_abs: state,
+        )
+    if not 0.0 <= alpha <= 1.0:
+        raise ValueError(f"per alpha must be in [0, 1], got {alpha}")
+    return ReplayBuffer(
+        kind, capacity,
+        init=lambda: _per.per_init(capacity, obs_shape, action_shape,
+                                   action_dtype),
+        add=_per.per_add,
+        sample=_per.per_sample,
+        update=lambda state, indices, td_abs:
+            _per.per_update(state, indices, td_abs, alpha),
+    )

@@ -1,0 +1,127 @@
+"""Proportional prioritized experience replay (Schaul et al., 2016) on
+the pure-JAX sum tree.
+
+State is the uniform circular storage plus a sum tree over the slots
+and a running max priority:
+
+  * **insertion** writes new transitions at the current max priority
+    (they are guaranteed at least one replay before their priority is
+    measured — the canonical "optimistic insert");
+  * **sampling** is stratified inverse-CDF descent over the tree
+    (:func:`repro.rl.replay.sum_tree.stratified_sample`), so slot ``i``
+    is drawn with probability ``p_i / sum_j p_j`` where
+    ``p_i = (|td_i| + eps) ** alpha`` — ``alpha`` interpolates between
+    uniform (0) and fully greedy (1) prioritization;
+  * **importance weights** ``w_i = (N * P(i)) ** -beta`` correct the
+    sampling bias, normalized by the batch max so the effective
+    learning rate only ever shrinks; ``beta`` anneals from ``beta0``
+    to 1 over training (full correction at convergence);
+  * **refresh**: after each TD update the sampled slots' priorities are
+    rewritten from the fresh per-sample TD errors
+    (:func:`per_update`).
+
+Priorities live in the tree already exponentiated (``p ** alpha``), so
+sampling is a plain proportional draw and ``max_priority`` tracks the
+exponentiated domain.  Everything is jit-compatible and
+donation-friendly: :class:`PERState` is a flat pytree whose arrays the
+training loop can donate across iterations.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.rl.replay import sum_tree
+from repro.rl.replay.uniform import (Replay, check_min_size, gather,
+                                     replay_add, replay_init,
+                                     write_slots)
+
+Array = jax.Array
+
+# floor added to |td| before the alpha exponent: keeps every visited
+# transition revisitable (zero TD error must not mean zero mass)
+PRIORITY_EPS = 1e-3
+
+
+class PERState(NamedTuple):
+    store: Replay       # the uniform circular storage
+    tree: Array         # [2 * L] sum tree over the slots (mass = p^alpha)
+    max_p: Array        # scalar f32: running max of the tree leaf mass
+
+
+def per_init(capacity: int, obs_shape,
+             action_shape: Tuple[int, ...] = (),
+             action_dtype=jnp.int32) -> PERState:
+    return PERState(
+        replay_init(capacity, obs_shape, action_shape, action_dtype),
+        sum_tree.init(capacity),
+        jnp.ones((), jnp.float32),
+    )
+
+
+def per_add(state: PERState, obs, action, reward, next_obs,
+            discount) -> PERState:
+    """Circular write + max-priority insertion for the new slots."""
+    B = obs.shape[0]
+    cap = state.store.obs.shape[0]
+    # the same write plan as the storage, so tree slots and storage
+    # slots can never disagree
+    _, idx, _ = write_slots(state.store.ptr, cap, B)
+    store = replay_add(state.store, obs, action, reward, next_obs,
+                       discount)
+    tree = sum_tree.update(state.tree, idx,
+                           jnp.full(idx.shape, state.max_p))
+    return PERState(store, tree, state.max_p)
+
+
+def per_sample(state: PERState, key: Array, n: int, min_size: int = 1,
+               beta=1.0) -> dict:
+    """Stratified proportional sample with annealed-beta IS weights.
+
+    Returns the storage columns plus ``"indices"`` (for the priority
+    write-back), ``"probs"`` (the sampling probabilities, for
+    inspection) and ``"weight"`` — the max-normalized importance
+    weights, zeroed under jit when the buffer is below ``min_size``
+    (eagerly that is a hard error, same as the uniform backend).
+    """
+    min_size = max(int(min_size), 1)
+    ok = check_min_size(state.store.size, min_size)
+    idx, _ = sum_tree.stratified_sample(state.tree, key, n)
+    # an EMPTY tree (total 0) — or a sub-ulp rounding of an internal
+    # sum during the descent — can land on a zero-mass padded leaf
+    # beyond the valid prefix: clamp to it so the returned indices are
+    # always legal slots and a subsequent priority write-back can never
+    # deposit sampling mass beyond it.  The mass is re-read at the
+    # CLAMPED leaf — pricing the weight off the pre-clamp (zero-mass)
+    # leaf would give that sample a ~(N*1e-12)^-beta weight that
+    # dominates the batch-max normalization and crushes every other
+    # weight.  The `ok` mask zeroes fully-masked batches; the floors
+    # below just keep the arithmetic finite
+    idx = jnp.minimum(idx, jnp.maximum(state.store.size - 1, 0))
+    mass = sum_tree.get(state.tree, idx)
+    t = sum_tree.total(state.tree)
+    probs = jnp.maximum(mass, 1e-12) / jnp.maximum(t, 1e-12)
+    N = jnp.maximum(state.store.size, 1).astype(jnp.float32)
+    w = (N * probs) ** (-jnp.asarray(beta, jnp.float32))
+    w = w / jnp.maximum(jnp.max(w), 1e-12)
+    batch = gather(state.store, idx)
+    batch["weight"] = w * ok
+    batch["indices"] = idx
+    batch["probs"] = probs
+    return batch
+
+
+def per_update(state: PERState, idx: Array, td_abs: Array,
+               alpha: float = 0.6) -> PERState:
+    """Priority refresh from fresh per-sample TD errors:
+    ``mass = (|td| + eps) ** alpha``.  A slot sampled more than once in
+    a batch may carry *different* TD errors (e.g. DDPG's per-row
+    target-smoothing noise); ``sum_tree.update`` resolves duplicates
+    deterministically (last occurrence wins)."""
+    mass = (jnp.abs(td_abs) + PRIORITY_EPS) ** alpha
+    tree = sum_tree.update(state.tree, idx,
+                           mass.astype(jnp.float32))
+    max_p = jnp.maximum(state.max_p, jnp.max(mass))
+    return PERState(state.store, tree, max_p)

@@ -1,0 +1,148 @@
+"""Pure-JAX sum tree: the O(log n) prefix-sum index behind PER.
+
+Layout is the classic implicit binary heap over one flat ``[2 * L]``
+float32 array with ``L`` a power of two: node 1 is the root, node ``i``
+has children ``2i`` and ``2i + 1``, the leaves occupy
+``[L, 2L)`` (node 0 is unused by every read path; ``update`` uses it
+as the scratch target for duplicate-index redirects).  Leaf ``j``
+holds the
+(already priority-exponentiated) sampling mass of replay slot ``j``;
+every internal node holds the sum of its two children, so
+
+  * :func:`update` rewrites a batch of leaves and refreshes exactly the
+    touched root-paths level by level (``lax.fori_loop`` over the fixed
+    depth, gather children / scatter parents) — ``O(m log L)`` work,
+    fully vectorized, no data-dependent shapes;
+  * :func:`stratified_sample` descends ``n`` prefix-sum queries from
+    the root in lockstep (one ``fori_loop`` over the depth), which is
+    the inverse-CDF sample without materializing the ``O(L)`` cumsum.
+
+Internal sums are *recomputed* from the children at every refreshed
+node rather than incrementally adjusted by a delta, so the invariant
+``tree[i] == tree[2i] + tree[2i+1]`` holds bitwise after any update —
+float drift can never accumulate in the internal nodes (the property
+test in tests/test_replay.py checks this exactly).
+
+Duplicate indices inside one ``update`` batch resolve deterministically
+(last occurrence wins — see :func:`update`), so the tree state is
+bitwise reproducible even when a PER batch re-prices the same slot
+twice with different TD errors.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+Array = jax.Array
+
+
+def leaf_count(capacity: int) -> int:
+    """Smallest power of two >= capacity (the tree's leaf width)."""
+    if capacity < 1:
+        raise ValueError(f"sum tree needs capacity >= 1, got {capacity}")
+    return 1 << (capacity - 1).bit_length()
+
+
+def depth_of(tree: Array) -> int:
+    """Levels between a leaf and the root (log2 of the leaf width)."""
+    return (tree.shape[0] // 2).bit_length() - 1
+
+
+def init(capacity: int) -> Array:
+    """All-zero tree for ``capacity`` slots (leaves beyond ``capacity``
+    stay zero forever, so they carry no sampling mass)."""
+    return jnp.zeros((2 * leaf_count(capacity),), jnp.float32)
+
+
+def total(tree: Array) -> Array:
+    """Total sampling mass (the root)."""
+    return tree[1]
+
+
+def get(tree: Array, idx: Array) -> Array:
+    """Leaf values at slot indices ``idx``."""
+    L = tree.shape[0] // 2
+    return tree[idx + L]
+
+
+def update(tree: Array, idx: Array, values: Array) -> Array:
+    """Set leaves ``idx`` (slot indices, [m]) to ``values`` and refresh
+    their ancestors bottom-up.  ``O(m log L)`` (+ an O(m^2) dedupe mask,
+    negligible at replay batch sizes).
+
+    Duplicate indices resolve deterministically to the LAST occurrence:
+    a raw leaf scatter with duplicate targets has XLA-unspecified write
+    order (and a PER batch can legitimately carry duplicates with
+    *different* values — e.g. DDPG TD errors differ across duplicate
+    rows through the per-row target-smoothing noise), so earlier
+    duplicates are redirected to the unused node 0 with value 0.  Node
+    0 thereby accumulates a deterministic junk value — it is never read
+    by ``total``/``get``/``find`` and carries no sampling mass.
+    """
+    L = tree.shape[0] // 2
+    m = idx.shape[0]
+    if m > 1:
+        pos = jnp.arange(m)
+        last = jnp.max(jnp.where(idx[None, :] == idx[:, None],
+                                 pos[None, :], -1), axis=1)
+        win = pos == last
+        node = jnp.where(win, idx + L, 0)
+        values = jnp.where(win, values, 0.0)
+    else:
+        node = idx + L
+    tree = tree.at[node].set(values.astype(tree.dtype))
+
+    def body(_, carry):
+        tree, node = carry
+        node = node // 2
+        # duplicates among the m parents (including the redirected 0s,
+        # whose path stays at node 0) all write the same recomputed
+        # sum, so the scatter is deterministic
+        tree = tree.at[node].set(tree[2 * node] + tree[2 * node + 1])
+        return tree, node
+
+    tree, _ = lax.fori_loop(0, depth_of(tree), body, (tree, node))
+    return tree
+
+
+def find(tree: Array, u: Array) -> Array:
+    """Inverse-CDF lookup: for each prefix-sum query ``u`` in
+    ``[0, total)`` return the leaf slot whose cumulative-mass interval
+    contains it.  Descends all queries from the root in lockstep.
+
+    The branch rule is ``go right iff u >= left-child sum``: with a
+    strict ``>`` a query landing exactly on an interval boundary would
+    fall into a zero-mass left leaf; with ``>=`` it lands on the first
+    leaf whose interval is non-degenerate.  Zero-mass leaves are
+    therefore unreachable while ``u < total``.
+    """
+    node = jnp.ones(u.shape, jnp.int32)
+
+    def body(_, carry):
+        node, u = carry
+        left = tree[2 * node]
+        go_right = u >= left
+        node = 2 * node + go_right.astype(jnp.int32)
+        u = jnp.where(go_right, u - left, u)
+        return node, u
+
+    node, _ = lax.fori_loop(0, depth_of(tree), body,
+                            (node, u.astype(tree.dtype)))
+    return node - tree.shape[0] // 2
+
+
+def stratified_sample(tree: Array, key: Array, n: int):
+    """Draw ``n`` slots proportionally to their leaf mass, stratified:
+    query ``i`` is uniform on ``[i/n, (i+1)/n) * total``, so every
+    1/n-quantile of the priority mass is hit exactly once (lower
+    variance than n independent draws).  Returns ``(idx [n], mass [n])``
+    — ``mass`` is the *unnormalized* leaf value; divide by
+    :func:`total` for the sampling probability."""
+    t = total(tree)
+    u = (jnp.arange(n, dtype=jnp.float32)
+         + jax.random.uniform(key, (n,))) / n * t
+    # float guard: u == total would walk off the right edge
+    u = jnp.minimum(u, t * (1.0 - 1e-7))
+    idx = find(tree, u)
+    return idx, get(tree, idx)

@@ -1,0 +1,130 @@
+"""Uniform circular replay — the PR-3 buffer, moved out of
+``repro.rl.value`` bit-for-bit.
+
+Transitions are discount-encoded: ``discounts = gamma^K *
+(1 - terminated)`` folds the n-step horizon, truncation and termination
+into one number (see :func:`repro.rl.value.nstep_targets`), so every
+TD target downstream is ``rewards + discounts * Q(next_obs)``.
+
+The add/sample semantics here are the reference the PER backend's
+storage reuses — and the bit-compatibility contract the regression
+test in tests/test_replay.py pins: same (capacity, seed, add/sample
+sequence) must produce byte-identical buffers and batches as the
+pre-refactor ``repro.rl.value`` implementation.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+class Replay(NamedTuple):
+    obs: Array          # [N, ...]
+    actions: Array      # [N] (Discrete) or [N, d] (Box)
+    rewards: Array      # [N] (n-step accumulated)
+    next_obs: Array     # [N, ...] true successor (pre-reset at bounds)
+    discounts: Array    # [N] gamma^K * (1 - terminated)
+    ptr: Array          # scalar int32: next write slot
+    size: Array         # scalar int32: valid entries
+
+
+def replay_init(capacity: int, obs_shape,
+                action_shape: Tuple[int, ...] = (),
+                action_dtype=jnp.int32) -> Replay:
+    z = jnp.zeros
+    return Replay(z((capacity,) + tuple(obs_shape)),
+                  z((capacity,) + tuple(action_shape), action_dtype),
+                  z((capacity,)),
+                  z((capacity,) + tuple(obs_shape)),
+                  z((capacity,)),
+                  jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32))
+
+
+def write_slots(ptr: Array, capacity: int, batch: int):
+    """The circular-write plan shared by every backend: for a batch of
+    ``batch`` incoming transitions, returns ``(drop, idx, new_ptr)`` —
+    drop the first ``drop`` rows (python int; only non-zero when the
+    batch exceeds capacity, where a raw write would produce duplicate
+    scatter indices with XLA-unspecified order), then scatter the
+    survivors at slots ``idx`` and advance the pointer to ``new_ptr``.
+    """
+    drop = 0
+    if batch >= capacity:
+        drop = batch - capacity
+        ptr = ptr + drop        # slots the dropped prefix would have used
+        batch = capacity
+    idx = (ptr + jnp.arange(batch)) % capacity
+    return drop, idx, (ptr + batch) % capacity
+
+
+def replay_add(buf: Replay, obs, action, reward, next_obs,
+               discount) -> Replay:
+    """Add a batch of B transitions (contiguous circular write).
+
+    ``B >= capacity`` keeps exactly the last ``capacity`` transitions:
+    a full-batch write would produce duplicate scatter indices, whose
+    write order XLA leaves unspecified, so the survivors are sliced out
+    first and the scatter indices stay unique (deterministic).
+    """
+    B = obs.shape[0]
+    cap = buf.obs.shape[0]
+    drop, idx, new_ptr = write_slots(buf.ptr, cap, B)
+    if drop:
+        obs, action, reward, next_obs, discount = (
+            x[drop:] for x in (obs, action, reward, next_obs, discount))
+        B = cap
+    return Replay(
+        buf.obs.at[idx].set(obs),
+        buf.actions.at[idx].set(action),
+        buf.rewards.at[idx].set(reward),
+        buf.next_obs.at[idx].set(next_obs),
+        buf.discounts.at[idx].set(discount),
+        new_ptr,
+        jnp.minimum(buf.size + B, cap),
+    )
+
+
+def gather(buf: Replay, idx: Array) -> dict:
+    """The batch columns at slots ``idx`` (no weight — backends attach
+    their own)."""
+    return {"obs": buf.obs[idx], "actions": buf.actions[idx],
+            "rewards": buf.rewards[idx], "next_obs": buf.next_obs[idx],
+            "discounts": buf.discounts[idx]}
+
+
+def check_min_size(size, min_size: int) -> Array:
+    """The underfill guard shared by every backend: a buffer below
+    ``min_size`` (e.g. the driver's ``learn_start``) must not train.
+    Eagerly that's a hard error; under jit (where ``size`` is a tracer)
+    the returned 0/1 mask multiplies the batch weights so a weighted
+    loss masks the whole batch instead of silently training on
+    uninitialized transitions."""
+    if not isinstance(size, jax.core.Tracer) and int(size) < min_size:
+        raise ValueError(
+            f"replay sample: buffer holds {int(size)} transitions "
+            f"but min_size={min_size} — sampling would return "
+            "uninitialized (all-zero) transitions; collect more steps "
+            "first (learn_start)")
+    return (size >= min_size).astype(jnp.float32)
+
+
+def replay_sample(buf: Replay, key: Array, n: int,
+                  min_size: int = 1) -> dict:
+    """Sample ``n`` transitions uniformly from the valid prefix.
+
+    The ``"weight"`` column is 1 (or 0 under jit when the buffer is
+    below ``min_size`` — see :func:`check_min_size`); ``"indices"``
+    carries the sampled slots so the driver's priority write-back is
+    backend-agnostic (a no-op here).
+    """
+    min_size = max(int(min_size), 1)
+    ok = check_min_size(buf.size, min_size)
+    idx = jax.random.randint(key, (n,), 0, jnp.maximum(buf.size, 1))
+    batch = gather(buf, idx)
+    batch["weight"] = jnp.broadcast_to(ok, (n,))
+    batch["indices"] = idx
+    return batch

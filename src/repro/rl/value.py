@@ -4,11 +4,14 @@ The paper's Fig. 3a parity claim spans value-based methods, so this
 module grows the old DQN loss stub into a family that trains end to
 end under the fxp8-behaviour-actor / fp32-learner split:
 
-  * a pure-JAX circular replay whose transitions carry a *discount*
-    instead of a done flag — ``discount = gamma^K * (1 - terminated)``
-    folds the n-step horizon, truncation (bootstrap: discount stays
-    ``gamma^K``) and termination (no bootstrap: 0) into one number, so
-    every target below is the same ``r + discount * Q(next_obs)``;
+  * replay lives in :mod:`repro.rl.replay` now (uniform circular +
+    sum-tree prioritized backends behind one protocol; the historical
+    ``replay_*`` names are re-exported here).  Transitions carry a
+    *discount* instead of a done flag — ``discount = gamma^K *
+    (1 - terminated)`` folds the n-step horizon, truncation (bootstrap:
+    discount stays ``gamma^K``) and termination (no bootstrap: 0) into
+    one number, so every target below is the same
+    ``r + discount * Q(next_obs)``;
   * :func:`nstep_targets` — truncation-aware n-step returns computed
     from a fresh [T, B] rollout chunk before insertion (windows stop at
     episode boundaries; ``next_obs`` is the true pre-reset successor);
@@ -25,10 +28,16 @@ uses.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, NamedTuple, Optional, Tuple
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
+
+# the replay buffers grew into their own subsystem (repro.rl.replay:
+# uniform + prioritized backends behind one protocol); these re-exports
+# keep the historical repro.rl.value surface alive, bit-compatibly
+from repro.rl.replay.uniform import (Replay, replay_add,  # noqa: F401
+                                     replay_init, replay_sample)
 
 Array = jax.Array
 
@@ -59,7 +68,15 @@ class QRDQNConfig(DQNConfig):
 
 @dataclasses.dataclass(frozen=True)
 class DDPGConfig:
-    """TD3-flavoured DDPG: twin critics + target-policy smoothing."""
+    """TD3-flavoured DDPG: twin critics + target-policy smoothing.
+
+    ``critic_quantiles > 1`` switches the twin critics to quantile
+    heads (TQC, Kuznetsov et al.): the Bellman target pools both target
+    critics' quantiles, sorts them and drops the top ``tqc_drop``
+    before the backup — truncation replaces TD3's min-clipping as the
+    overestimation control.  The defaults (1 quantile, drop 0) keep the
+    scalar twin-critic / min-backup path bit-exact.
+    """
 
     low: float = -1.0                # action bounds (Box envs)
     high: float = 1.0
@@ -71,92 +88,29 @@ class DDPGConfig:
     explore_noise: float = 0.1       # behaviour noise, x half-range
     policy_noise: float = 0.2        # target smoothing noise, x half-range
     noise_clip: float = 0.5          # smoothing clip, x half-range
+    critic_quantiles: int = 1        # >1: TQC quantile critics
+    tqc_drop: int = 0                # pooled target quantiles dropped
+    kappa: float = 1.0               # quantile-Huber threshold (TQC)
+
+    def __post_init__(self):
+        if self.critic_quantiles < 1:
+            raise ValueError(f"critic_quantiles must be >= 1, got "
+                             f"{self.critic_quantiles}")
+        if self.tqc_drop < 0 or self.tqc_drop >= 2 * self.critic_quantiles:
+            raise ValueError(
+                f"tqc_drop={self.tqc_drop} must leave at least one of "
+                f"the {2 * self.critic_quantiles} pooled target "
+                "quantiles")
+        if self.tqc_drop > 0 and self.critic_quantiles == 1:
+            raise ValueError(
+                "tqc_drop prunes pooled target *quantiles* — scalar "
+                "twin critics (critic_quantiles=1) keep the TD3 "
+                "min-backup; set critic_quantiles > 1 (e.g. 25) to "
+                "enable TQC truncation")
 
     @property
     def half_range(self) -> float:
         return 0.5 * (self.high - self.low)
-
-
-# ---------------------------------------------------------------------------
-# replay (circular, discount-encoded transitions)
-# ---------------------------------------------------------------------------
-
-class Replay(NamedTuple):
-    obs: Array          # [N, ...]
-    actions: Array      # [N] (Discrete) or [N, d] (Box)
-    rewards: Array      # [N] (n-step accumulated)
-    next_obs: Array     # [N, ...] true successor (pre-reset at bounds)
-    discounts: Array    # [N] gamma^K * (1 - terminated)
-    ptr: Array          # scalar int32: next write slot
-    size: Array         # scalar int32: valid entries
-
-
-def replay_init(capacity: int, obs_shape,
-                action_shape: Tuple[int, ...] = (),
-                action_dtype=jnp.int32) -> Replay:
-    z = jnp.zeros
-    return Replay(z((capacity,) + tuple(obs_shape)),
-                  z((capacity,) + tuple(action_shape), action_dtype),
-                  z((capacity,)),
-                  z((capacity,) + tuple(obs_shape)),
-                  z((capacity,)),
-                  jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32))
-
-
-def replay_add(buf: Replay, obs, action, reward, next_obs,
-               discount) -> Replay:
-    """Add a batch of B transitions (contiguous circular write).
-
-    ``B >= capacity`` keeps exactly the last ``capacity`` transitions:
-    a full-batch write would produce duplicate scatter indices, whose
-    write order XLA leaves unspecified, so the survivors are sliced out
-    first and the scatter indices stay unique (deterministic).
-    """
-    B = obs.shape[0]
-    cap = buf.obs.shape[0]
-    ptr = buf.ptr
-    if B >= cap:
-        drop = B - cap
-        obs, action, reward, next_obs, discount = (
-            x[drop:] for x in (obs, action, reward, next_obs, discount))
-        ptr = ptr + drop        # slots the dropped prefix would have used
-        B = cap
-    idx = (ptr + jnp.arange(B)) % cap
-    return Replay(
-        buf.obs.at[idx].set(obs),
-        buf.actions.at[idx].set(action),
-        buf.rewards.at[idx].set(reward),
-        buf.next_obs.at[idx].set(next_obs),
-        buf.discounts.at[idx].set(discount),
-        (ptr + B) % cap,
-        jnp.minimum(buf.size + B, cap),
-    )
-
-
-def replay_sample(buf: Replay, key: Array, n: int,
-                  min_size: int = 1) -> dict:
-    """Sample ``n`` transitions uniformly from the valid prefix.
-
-    A buffer below ``min_size`` (e.g. the driver's ``learn_start``)
-    must not train: eagerly that's a hard error; under jit (where
-    ``size`` is a tracer) the returned ``"weight"`` column is 0 so a
-    weighted loss masks the whole batch instead of silently training
-    on all-zero transitions.
-    """
-    min_size = max(int(min_size), 1)
-    if not isinstance(buf.size, jax.core.Tracer) \
-            and int(buf.size) < min_size:
-        raise ValueError(
-            f"replay_sample: buffer holds {int(buf.size)} transitions "
-            f"but min_size={min_size} — sampling would return "
-            "uninitialized (all-zero) transitions; collect more steps "
-            "first (learn_start)")
-    idx = jax.random.randint(key, (n,), 0, jnp.maximum(buf.size, 1))
-    weight = jnp.broadcast_to(
-        (buf.size >= min_size).astype(jnp.float32), (n,))
-    return {"obs": buf.obs[idx], "actions": buf.actions[idx],
-            "rewards": buf.rewards[idx], "next_obs": buf.next_obs[idx],
-            "discounts": buf.discounts[idx], "weight": weight}
 
 
 # ---------------------------------------------------------------------------
@@ -234,9 +188,20 @@ def polyak(target, online, tau: float):
 
 
 def _weighted_mean(x: Array, weight: Optional[Array]) -> Array:
+    """Batch mean of per-sample losses scaled by per-sample weights.
+
+    The denominator is the BATCH SIZE, not ``sum(weight)``: PER
+    importance weights must rescale each sample's contribution
+    (canonical ``(1/B) * sum_i w_i * delta_i``), and dividing by
+    ``sum(w)`` would cancel the batch-max normalization — skewed
+    weights would then *amplify* the effective learning rate instead
+    of only ever shrinking it.  For the uniform backend's all-ones
+    weights this is exactly ``jnp.mean`` (bit-compatible), and the
+    all-zero underfill mask still zeroes the loss.
+    """
     if weight is None:
         return jnp.mean(x)
-    return (x * weight).sum() / jnp.maximum(weight.sum(), 1.0)
+    return (x * weight).sum() / x.shape[0]
 
 
 def _batch_discount(batch: dict, cfg) -> Array:
@@ -248,11 +213,20 @@ def _batch_discount(batch: dict, cfg) -> Array:
 
 # ---------------------------------------------------------------------------
 # losses
+#
+# Every loss has two faces: the scalar (the historical API, what
+# jax.grad differentiates) and a ``*_td`` variant returning
+# ``(loss, |td|)`` where ``|td|`` is the per-sample absolute TD error —
+# the priority signal the PER backend writes back after each update
+# (jax.grad(..., has_aux=True)).  All of them consume the batch's
+# per-sample ``"weight"`` column (PER importance weights, or the 0/1
+# underfill mask), so prioritized sampling stays unbiased.
 # ---------------------------------------------------------------------------
 
-def dqn_loss(params, target_params, apply_fn: Callable, batch: dict,
-             cfg: DQNConfig) -> Array:
-    """(Double-)DQN TD error. ``apply_fn(params, obs) -> [B, A]``."""
+def dqn_loss_td(params, target_params, apply_fn: Callable, batch: dict,
+                cfg: DQNConfig):
+    """(Double-)DQN TD error. ``apply_fn(params, obs) -> [B, A]``.
+    Returns ``(loss, |td| per sample)``."""
     q = apply_fn(params, batch["obs"])
     q_sel = q[jnp.arange(q.shape[0]), batch["actions"]]
     q_next_t = apply_fn(target_params, batch["next_obs"])
@@ -263,8 +237,14 @@ def dqn_loss(params, target_params, apply_fn: Callable, batch: dict,
         q_next = q_next_t.max(-1)
     target = batch["rewards"] + _batch_discount(batch, cfg) * q_next
     target = jax.lax.stop_gradient(target)
-    return _weighted_mean(jnp.square(q_sel - target),
-                          batch.get("weight"))
+    td = q_sel - target
+    loss = _weighted_mean(jnp.square(td), batch.get("weight"))
+    return loss, jax.lax.stop_gradient(jnp.abs(td))
+
+
+def dqn_loss(params, target_params, apply_fn: Callable, batch: dict,
+             cfg: DQNConfig) -> Array:
+    return dqn_loss_td(params, target_params, apply_fn, batch, cfg)[0]
 
 
 def quantile_taus(n: int) -> Array:
@@ -272,12 +252,30 @@ def quantile_taus(n: int) -> Array:
     return (jnp.arange(n, dtype=jnp.float32) + 0.5) / n
 
 
-def qrdqn_loss(params, target_params, apply_fn: Callable, batch: dict,
-               cfg: QRDQNConfig) -> Array:
+def quantile_huber(theta: Array, target: Array, kappa: float) -> Array:
+    """Per-sample quantile-Huber loss between predicted quantiles
+    ``theta`` [B, N] and target atoms ``target`` [B, M] (Dabney et
+    al.): pairwise u[b, i, j] = target_j - theta_i, asymmetrically
+    weighted by |tau_i - 1{u < 0}|.  Returns [B]."""
+    N = theta.shape[-1]
+    u = target[:, None, :] - theta[:, :, None]        # [B, N, M]
+    absu = jnp.abs(u)
+    huber = jnp.where(absu <= kappa,
+                      0.5 * jnp.square(u),
+                      kappa * (absu - 0.5 * kappa))
+    taus = quantile_taus(N)[None, :, None]
+    rho = jnp.abs(taus - (u < 0).astype(jnp.float32)) * huber / kappa
+    return rho.mean(axis=2).sum(axis=1)               # [B]
+
+
+def qrdqn_loss_td(params, target_params, apply_fn: Callable,
+                  batch: dict, cfg: QRDQNConfig):
     """Quantile-regression DQN (Dabney et al.) with Double-DQN action
-    selection.  ``apply_fn(params, obs) -> [B, A, n_quantiles]``."""
+    selection.  ``apply_fn(params, obs) -> [B, A, n_quantiles]``.
+    Returns ``(loss, |td| per sample)`` with the TD error measured
+    between the quantile means (the priority signal)."""
     theta = apply_fn(params, batch["obs"])            # [B, A, N]
-    B, _, N = theta.shape
+    B = theta.shape[0]
     rows = jnp.arange(B)
     theta_a = theta[rows, batch["actions"]]           # [B, N]
 
@@ -292,43 +290,86 @@ def qrdqn_loss(params, target_params, apply_fn: Callable, batch: dict,
               + _batch_discount(batch, cfg)[:, None] * next_q)
     target = jax.lax.stop_gradient(target)
 
-    # pairwise TD errors u[b, i, j] = target_j - theta_i
-    u = target[:, None, :] - theta_a[:, :, None]      # [B, N, N]
-    absu = jnp.abs(u)
-    huber = jnp.where(absu <= cfg.kappa,
-                      0.5 * jnp.square(u),
-                      cfg.kappa * (absu - 0.5 * cfg.kappa))
-    taus = quantile_taus(N)[None, :, None]
-    rho = jnp.abs(taus - (u < 0).astype(jnp.float32)) * huber / cfg.kappa
-    per_sample = rho.mean(axis=2).sum(axis=1)         # [B]
-    return _weighted_mean(per_sample, batch.get("weight"))
+    per_sample = quantile_huber(theta_a, target, cfg.kappa)
+    loss = _weighted_mean(per_sample, batch.get("weight"))
+    td = jnp.abs(target.mean(-1) - theta_a.mean(-1))
+    return loss, jax.lax.stop_gradient(td)
 
 
-def ddpg_critic_loss(critic_params, target_critic, target_actor,
-                     critic_apply: Callable, actor_apply: Callable,
-                     batch: dict, cfg: DDPGConfig, key: Array) -> Array:
-    """Twin-critic TD error with target-policy smoothing (TD3 eq. 14).
+def qrdqn_loss(params, target_params, apply_fn: Callable, batch: dict,
+               cfg: QRDQNConfig) -> Array:
+    return qrdqn_loss_td(params, target_params, apply_fn, batch, cfg)[0]
 
-    ``critic_apply(params, obs, act) -> (q1, q2)``;
+
+def truncated_target_quantiles(z1_t: Array, z2_t: Array,
+                               drop: int) -> Array:
+    """TQC's truncation operator: pool both target critics' quantiles
+    [B, N] + [B, N], sort ascending, drop the top ``drop`` — the
+    left-tail mixture that replaces TD3's min() as the overestimation
+    control.  Returns [B, 2N - drop]."""
+    pooled = jnp.sort(jnp.concatenate([z1_t, z2_t], axis=-1), axis=-1)
+    n_keep = pooled.shape[-1] - drop
+    if n_keep < 1:
+        raise ValueError(f"tqc drop={drop} leaves no target quantiles "
+                         f"out of {pooled.shape[-1]}")
+    return pooled[..., :n_keep]
+
+
+def ddpg_critic_loss_td(critic_params, target_critic, target_actor,
+                        critic_apply: Callable, actor_apply: Callable,
+                        batch: dict, cfg: DDPGConfig, key: Array):
+    """Twin-critic TD error with target-policy smoothing (TD3 eq. 14),
+    or — when ``cfg.critic_quantiles > 1`` — the TQC backup: both
+    target critics' quantiles pooled, sorted, top-``cfg.tqc_drop``
+    truncated, then quantile-Huber regressed by each online critic.
+
+    ``critic_apply(params, obs, act) -> (q1, q2)`` with [B] heads
+    (scalar path) or [B, n_quantiles] heads (TQC path);
     ``actor_apply(params, obs) -> action`` already inside the bounds.
+    Returns ``(loss, |td| per sample)``.
     """
     na = actor_apply(target_actor, batch["next_obs"])
     noise = jnp.clip(jax.random.normal(key, na.shape) * cfg.policy_noise,
                      -cfg.noise_clip, cfg.noise_clip) * cfg.half_range
     na = jnp.clip(na + noise, cfg.low, cfg.high)
     q1_t, q2_t = critic_apply(target_critic, batch["next_obs"], na)
-    target = (batch["rewards"]
-              + _batch_discount(batch, cfg) * jnp.minimum(q1_t, q2_t))
-    target = jax.lax.stop_gradient(target)
     q1, q2 = critic_apply(critic_params, batch["obs"], batch["actions"])
-    err = jnp.square(q1 - target) + jnp.square(q2 - target)
-    return _weighted_mean(err, batch.get("weight"))
+    if cfg.critic_quantiles == 1:
+        target = (batch["rewards"]
+                  + _batch_discount(batch, cfg) * jnp.minimum(q1_t, q2_t))
+        target = jax.lax.stop_gradient(target)
+        err = jnp.square(q1 - target) + jnp.square(q2 - target)
+        loss = _weighted_mean(err, batch.get("weight"))
+        td = 0.5 * (jnp.abs(q1 - target) + jnp.abs(q2 - target))
+        return loss, jax.lax.stop_gradient(td)
+    kept = truncated_target_quantiles(q1_t, q2_t, cfg.tqc_drop)
+    target = (batch["rewards"][:, None]
+              + _batch_discount(batch, cfg)[:, None] * kept)
+    target = jax.lax.stop_gradient(target)
+    per_sample = (quantile_huber(q1, target, cfg.kappa)
+                  + quantile_huber(q2, target, cfg.kappa))
+    loss = _weighted_mean(per_sample, batch.get("weight"))
+    td = jnp.abs(target.mean(-1) - 0.5 * (q1.mean(-1) + q2.mean(-1)))
+    return loss, jax.lax.stop_gradient(td)
+
+
+def ddpg_critic_loss(critic_params, target_critic, target_actor,
+                     critic_apply: Callable, actor_apply: Callable,
+                     batch: dict, cfg: DDPGConfig, key: Array) -> Array:
+    return ddpg_critic_loss_td(critic_params, target_critic,
+                               target_actor, critic_apply, actor_apply,
+                               batch, cfg, key)[0]
 
 
 def ddpg_actor_loss(actor_params, critic_params,
                     critic_apply: Callable, actor_apply: Callable,
                     batch: dict) -> Array:
-    """Deterministic policy gradient: maximize Q1(s, pi(s))."""
+    """Deterministic policy gradient: maximize Q1(s, pi(s)) (scalar
+    critics), or the mean over both critics' quantiles (TQC — the
+    actor sees the untruncated mixture, per Kuznetsov et al.)."""
     a = actor_apply(actor_params, batch["obs"])
-    q1, _ = critic_apply(critic_params, batch["obs"], a)
+    q1, q2 = critic_apply(critic_params, batch["obs"], a)
+    if q1.ndim == 2:                                  # quantile heads
+        q = 0.5 * (q1.mean(-1) + q2.mean(-1))
+        return -_weighted_mean(q, batch.get("weight"))
     return -_weighted_mean(q1, batch.get("weight"))

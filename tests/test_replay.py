@@ -1,0 +1,668 @@
+"""The replay subsystem (repro.rl.replay): sum-tree invariants,
+uniform bit-compatibility with the pre-refactor buffer, PER semantics
+(max-priority insertion, IS weights, priority refresh), checkpoint
+round-trips, and the TQC truncation on the DDPG critic targets.
+
+Two test styles per invariant: a hypothesis property (runs in CI where
+hypothesis is installed; auto-skips via tests/_hypothesis_compat
+otherwise) and a deterministic twin that always runs, so tier-1 never
+collects an unverified invariant.
+
+The stratified-sampling checks exploit a structural fact: with one
+draw per 1/n-stratum of the priority mass, the count for any leaf can
+differ from ``n * p_leaf`` by at most the two boundary strata — a
+DETERMINISTIC +/-2 bound, not a statistical tolerance, so none of
+these tests are flaky.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.checkpoint import CheckpointManager
+from repro.launch.rl_train import main, make_value_agent, value_eval, value_train
+from repro.nn.module import unbox
+from repro.rl.envs import make
+from repro.rl.nets import (mlp_pi_apply, mlp_pi_init, mlp_twin_q_apply,
+                           mlp_twin_q_init, mlp_twin_qr_apply,
+                           mlp_twin_qr_init)
+from repro.rl.replay import (PRIORITY_EPS, make_replay, per_init,
+                             per_sample, per_update, replay_init,
+                             sum_tree)
+from repro.rl.value import (DDPGConfig, ddpg_actor_loss,
+                            ddpg_critic_loss, ddpg_critic_loss_td,
+                            truncated_target_quantiles)
+
+
+def assert_internal_sums_exact(tree):
+    """Every internal node must equal its children's sum BITWISE —
+    update() recomputes ancestors from the children, so no float drift
+    is tolerated."""
+    nodes = np.asarray(tree)
+    L = len(nodes) // 2
+    for i in range(1, L):
+        assert nodes[i] == nodes[2 * i] + nodes[2 * i + 1], (
+            f"node {i}: {nodes[i]} != {nodes[2*i]} + {nodes[2*i+1]}")
+
+
+# ---------------------------------------------------------------------------
+# sum tree
+# ---------------------------------------------------------------------------
+
+def test_sum_tree_shapes_and_zero_init():
+    t = sum_tree.init(10)                 # rounds up to 16 leaves
+    assert t.shape == (32,) and t.dtype == jnp.float32
+    assert float(sum_tree.total(t)) == 0.0
+    assert sum_tree.leaf_count(1) == 1
+    assert sum_tree.leaf_count(16) == 16
+    assert sum_tree.leaf_count(17) == 32
+    with pytest.raises(ValueError, match="capacity"):
+        sum_tree.leaf_count(0)
+
+
+def test_sum_tree_update_preserves_internal_sums_exactly():
+    """Repeated partial updates (jitted) keep every internal node the
+    bitwise sum of its children, and leaves read back exactly."""
+    rng = np.random.RandomState(0)
+    t = sum_tree.init(23)                 # non-power-of-two capacity
+    upd = jax.jit(sum_tree.update)
+    for round_ in range(5):
+        m = rng.randint(1, 23)
+        idx = rng.choice(23, size=m, replace=False)
+        vals = rng.uniform(0.0, 10.0, size=m).astype(np.float32)
+        t = upd(t, jnp.asarray(idx), jnp.asarray(vals))
+        np.testing.assert_array_equal(
+            np.asarray(sum_tree.get(t, jnp.asarray(idx))), vals)
+        assert_internal_sums_exact(t)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 100), st.integers(0, 2**31 - 1))
+def test_sum_tree_update_property(capacity, seed):
+    """Property: any update sequence keeps the internal-sum invariant
+    and the root equal to the (exactly re-added) leaf total."""
+    rng = np.random.RandomState(seed)
+    t = sum_tree.init(capacity)
+    for _ in range(3):
+        m = rng.randint(1, capacity + 1)
+        idx = rng.choice(capacity, size=m, replace=False)
+        # small integers: exactly representable, sums exact in f32
+        vals = rng.randint(0, 64, size=m).astype(np.float32)
+        t = sum_tree.update(t, jnp.asarray(idx), jnp.asarray(vals))
+        assert_internal_sums_exact(t)
+    nodes = np.asarray(t)
+    L = len(nodes) // 2
+    assert nodes[1] == nodes[L:].sum(dtype=np.float32)
+
+
+def test_sum_tree_find_matches_naive_prefix_sum_search():
+    """Inverse-CDF descent == np.searchsorted(cumsum, u, 'right') on
+    integer-valued priorities (where both arithmetics are exact),
+    including interval boundaries and zero-mass leaves."""
+    pri = np.array([3, 0, 5, 1, 0, 7, 2, 6], np.float32)
+    t = sum_tree.update(sum_tree.init(8), jnp.arange(8),
+                        jnp.asarray(pri))
+    total = pri.sum()
+    u = np.concatenate([np.arange(total),            # every boundary
+                        np.arange(total) + 0.5])     # every interior
+    got = np.asarray(sum_tree.find(t, jnp.asarray(u, jnp.float32)))
+    want = np.searchsorted(np.cumsum(pri), u, side="right")
+    np.testing.assert_array_equal(got, want)
+    assert not np.isin(got, [1, 4]).any()            # zero-mass leaves
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(0, 50), min_size=1, max_size=64),
+       st.integers(0, 2**31 - 1))
+def test_sum_tree_find_property_vs_searchsorted(pri, seed):
+    """Property: tree descent agrees with the naive prefix-sum search
+    for any integer priority vector with non-zero total."""
+    pri = np.asarray(pri, np.float32)
+    if pri.sum() == 0:
+        pri[0] = 1.0
+    t = sum_tree.update(sum_tree.init(len(pri)), jnp.arange(len(pri)),
+                        jnp.asarray(pri))
+    u = np.random.RandomState(seed).uniform(
+        0, float(pri.sum()), size=128).astype(np.float32)
+    u = np.minimum(u, pri.sum() * (1 - 1e-7))
+    got = np.asarray(sum_tree.find(t, jnp.asarray(u)))
+    want = np.searchsorted(np.cumsum(pri), u, side="right")
+    np.testing.assert_array_equal(got, want)
+
+
+def test_sum_tree_update_duplicate_indices_last_wins():
+    """Duplicate indices in one batch (legal under PER: the same slot
+    sampled twice can carry different TD errors) resolve to the LAST
+    occurrence, deterministically, and keep the invariant."""
+    t = sum_tree.init(8)
+    t = sum_tree.update(t, jnp.array([3, 1, 3, 5, 3]),
+                        jnp.array([9.0, 2.0, 7.0, 4.0, 5.0]))
+    np.testing.assert_array_equal(
+        np.asarray(sum_tree.get(t, jnp.array([1, 3, 5]))),
+        [2.0, 5.0, 4.0])
+    assert float(sum_tree.total(t)) == 11.0
+    assert_internal_sums_exact(t)
+    # bitwise-identical across calls (no XLA-unspecified scatter order)
+    t2 = sum_tree.update(sum_tree.init(8), jnp.array([3, 1, 3, 5, 3]),
+                         jnp.array([9.0, 2.0, 7.0, 4.0, 5.0]))
+    np.testing.assert_array_equal(np.asarray(t), np.asarray(t2))
+
+
+def test_per_sample_on_empty_buffer_returns_legal_slots():
+    """The inverse-CDF descent over an all-zero tree must not leak the
+    padded last leaf: indices clamp to the valid prefix (slot 0 when
+    empty) and the batch weights are fully masked, so a premature
+    priority write-back can never deposit mass beyond capacity."""
+    s = per_init(50, (2,))                 # pads to 64 leaves
+    b = jax.jit(lambda s, k: per_sample(s, k, 8, min_size=1))(
+        s, jax.random.PRNGKey(0))
+    np.testing.assert_array_equal(np.asarray(b["indices"]), 0)
+    np.testing.assert_array_equal(np.asarray(b["weight"]), 0.0)
+    s2 = per_update(s, b["indices"], jnp.ones(8))
+    assert float(np.asarray(s2.tree)[64 + 50:].sum()) == 0.0
+
+
+def stratified_counts(tree, key, n):
+    idx, _ = jax.jit(sum_tree.stratified_sample,
+                     static_argnums=2)(tree, key, n)
+    L = tree.shape[0] // 2
+    return np.bincount(np.asarray(idx), minlength=L)
+
+
+def test_stratified_sample_frequencies_match_priorities():
+    """Counts track n * p_i / total with the deterministic +/-2
+    stratification bound — the 'sampling follows priority**alpha /
+    sum' acceptance check (the tree stores mass already exponentiated,
+    so the tree-level law is mass / total)."""
+    pri = np.array([1, 2, 3, 4, 5, 0, 10, 0.5], np.float32)
+    t = sum_tree.update(sum_tree.init(8), jnp.arange(8),
+                        jnp.asarray(pri))
+    n = 5000
+    counts = stratified_counts(t, jax.random.PRNGKey(0), n)
+    expect = n * pri / pri.sum()
+    assert np.all(np.abs(counts[:8] - expect) <= 2.0), (counts, expect)
+    assert counts[8:].sum() == 0                     # beyond capacity
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.lists(st.floats(0.0, 100.0, width=32), min_size=2,
+                max_size=32),
+       st.integers(0, 2**31 - 1))
+def test_stratified_sample_frequency_property(pri, seed):
+    pri = np.asarray(pri, np.float32)
+    if pri.sum() <= 0:
+        pri[0] = 1.0
+    t = sum_tree.update(sum_tree.init(len(pri)), jnp.arange(len(pri)),
+                        jnp.asarray(pri))
+    n = 1024
+    counts = stratified_counts(t, jax.random.PRNGKey(seed % 2**31), n)
+    expect = n * pri / pri.sum()
+    # +/-2 strata + float slack on the stratum edges
+    assert np.all(np.abs(counts[:len(pri)] - expect) <= 3.0)
+
+
+# ---------------------------------------------------------------------------
+# uniform backend: bit-compatibility with the pre-refactor buffer
+# ---------------------------------------------------------------------------
+
+# the PR-3 repro.rl.value implementation, frozen verbatim as the
+# bit-compatibility reference (do not "modernize" this copy)
+def _legacy_replay_add(buf, obs, action, reward, next_obs, discount):
+    B = obs.shape[0]
+    cap = buf.obs.shape[0]
+    ptr = buf.ptr
+    if B >= cap:
+        drop = B - cap
+        obs, action, reward, next_obs, discount = (
+            x[drop:] for x in (obs, action, reward, next_obs, discount))
+        ptr = ptr + drop
+        B = cap
+    idx = (ptr + jnp.arange(B)) % cap
+    return type(buf)(
+        buf.obs.at[idx].set(obs),
+        buf.actions.at[idx].set(action),
+        buf.rewards.at[idx].set(reward),
+        buf.next_obs.at[idx].set(next_obs),
+        buf.discounts.at[idx].set(discount),
+        (ptr + B) % cap,
+        jnp.minimum(buf.size + B, cap),
+    )
+
+
+def _legacy_replay_sample(buf, key, n, min_size=1):
+    min_size = max(int(min_size), 1)
+    idx = jax.random.randint(key, (n,), 0, jnp.maximum(buf.size, 1))
+    weight = jnp.broadcast_to(
+        (buf.size >= min_size).astype(jnp.float32), (n,))
+    return {"obs": buf.obs[idx], "actions": buf.actions[idx],
+            "rewards": buf.rewards[idx], "next_obs": buf.next_obs[idx],
+            "discounts": buf.discounts[idx], "weight": weight}
+
+
+def test_uniform_backend_bit_exact_with_pre_refactor_buffer():
+    """Same capacity, same add/sample sequence, same keys -> byte-
+    identical buffers and batches (including the overflow path)."""
+    rb = make_replay("uniform", 8, (3,))
+    new, old = rb.init(), replay_init(8, (3,))
+    rng = np.random.RandomState(7)
+    for batch in (3, 5, 8, 11):          # partial, wrap, ==cap, >cap
+        obs = jnp.asarray(rng.randn(batch, 3), jnp.float32)
+        act = jnp.asarray(rng.randint(0, 4, batch), jnp.int32)
+        rew = jnp.asarray(rng.randn(batch), jnp.float32)
+        disc = jnp.asarray(rng.uniform(0, 1, batch), jnp.float32)
+        new = rb.add(new, obs, act, rew, obs + 1, disc)
+        old = _legacy_replay_add(old, obs, act, rew, obs + 1, disc)
+        for a, b in zip(jax.tree.leaves(new), jax.tree.leaves(old)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        key = jax.random.PRNGKey(batch)
+        s_new = rb.sample(new, key, 16, min_size=2)
+        s_old = _legacy_replay_sample(old, key, 16, min_size=2)
+        for col in s_old:
+            np.testing.assert_array_equal(np.asarray(s_new[col]),
+                                          np.asarray(s_old[col]))
+
+
+def test_value_module_reexports_the_replay_subsystem():
+    """repro.rl.value keeps the historical surface as aliases of the
+    subsystem functions — one implementation, not a drifting copy."""
+    from repro.rl import value
+    from repro.rl.replay import uniform
+    assert value.replay_add is uniform.replay_add
+    assert value.replay_sample is uniform.replay_sample
+    assert value.replay_init is uniform.replay_init
+    assert value.Replay is uniform.Replay
+
+
+# ---------------------------------------------------------------------------
+# PER backend
+# ---------------------------------------------------------------------------
+
+def test_per_max_priority_insertion_and_refresh():
+    """New transitions enter at the running max priority; the TD
+    write-back re-prices exactly the sampled slots and lifts max_p."""
+    alpha = 0.8
+    rb = make_replay("per", 8, (2,), alpha=alpha)
+    s = rb.init()
+    obs = jnp.ones((3, 2))
+    s = rb.add(s, obs, jnp.zeros(3, jnp.int32), jnp.ones(3), obs,
+               jnp.full(3, 0.9))
+    np.testing.assert_array_equal(
+        np.asarray(sum_tree.get(s.tree, jnp.arange(3))), 1.0)
+
+    td = jnp.array([4.0, 0.0])
+    s = rb.update(s, jnp.array([0, 2]), td)
+    want = (np.abs(np.asarray(td)) + PRIORITY_EPS) ** alpha
+    got = np.asarray(sum_tree.get(s.tree, jnp.array([0, 2])))
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+    # zero TD keeps a revisitable floor, never zero mass
+    assert got[1] > 0.0
+    # slot 1 untouched; max_p lifted to the new largest mass
+    assert float(sum_tree.get(s.tree, jnp.array([1]))[0]) == 1.0
+    assert float(s.max_p) == pytest.approx(want.max(), rel=1e-6)
+    # the next insert lands at the lifted max
+    s = rb.add(s, obs[:1], jnp.zeros(1, jnp.int32), jnp.ones(1),
+               obs[:1], jnp.full(1, 0.9))
+    assert float(sum_tree.get(s.tree, jnp.array([3]))[0]) \
+        == pytest.approx(want.max(), rel=1e-6)
+    assert_internal_sums_exact(s.tree)
+
+
+def test_per_sample_importance_weights():
+    """beta=1 weights are (N * P)^-1 max-normalized; beta=0 weights
+    are all 1; the underfill guard mirrors the uniform backend."""
+    s = per_init(8, (2,))
+    obs = jnp.ones((4, 2))
+    s = jax.jit(lambda s: make_replay("per", 8, (2,)).add(
+        s, obs, jnp.zeros(4, jnp.int32), jnp.ones(4), obs,
+        jnp.full(4, 0.9)))(s)
+    s = per_update(s, jnp.arange(4), jnp.array([1.0, 2.0, 4.0, 8.0]),
+                   alpha=1.0)
+    b = per_sample(s, jax.random.PRNGKey(0), 64, min_size=2, beta=1.0)
+    pri = np.asarray(sum_tree.get(s.tree, jnp.arange(4)))
+    probs = pri / pri.sum()
+    w_all = (4 * probs) ** -1.0
+    want = w_all / w_all.max()
+    idx = np.asarray(b["indices"])
+    np.testing.assert_allclose(np.asarray(b["weight"]), want[idx],
+                               rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(b["probs"]), probs[idx],
+                               rtol=1e-5)
+    b0 = per_sample(s, jax.random.PRNGKey(0), 64, min_size=2, beta=0.0)
+    np.testing.assert_array_equal(np.asarray(b0["weight"]), 1.0)
+
+    # the losses consume the weights as (1/B) * sum(w * per_sample):
+    # dividing by sum(w) instead would cancel the max-normalization
+    # and AMPLIFY the effective lr under skewed weights
+    from repro.rl.value import _weighted_mean
+    x = jnp.array([1.0, 1.0, 1.0, 1.0])
+    w = jnp.array([1.0, 0.01, 0.01, 0.01])
+    assert float(_weighted_mean(x, w)) == pytest.approx(1.03 / 4)
+    assert float(_weighted_mean(x, jnp.ones(4))) == 1.0
+    assert float(_weighted_mean(x, jnp.zeros(4))) == 0.0
+
+    with pytest.raises(ValueError, match="min_size"):
+        per_sample(s, jax.random.PRNGKey(0), 4, min_size=5)
+    masked = jax.jit(lambda s, k: per_sample(s, k, 4, min_size=5))(
+        s, jax.random.PRNGKey(0))
+    np.testing.assert_array_equal(np.asarray(masked["weight"]), 0.0)
+
+
+def test_per_sampling_tracks_updated_priorities():
+    """After a refresh, the sampled-slot distribution follows the NEW
+    priorities (the naive-CDF law), not the insertion priorities."""
+    rb = make_replay("per", 16, (1,), alpha=1.0)
+    s = rb.init()
+    obs = jnp.zeros((16, 1))
+    s = rb.add(s, obs, jnp.zeros(16, jnp.int32), jnp.zeros(16), obs,
+               jnp.zeros(16))
+    td = jnp.asarray(np.r_[np.full(8, 0.001), np.full(8, 10.0)],
+                     jnp.float32)
+    s = rb.update(s, jnp.arange(16), td)
+    n = 4096
+    counts = stratified_counts(s.tree, jax.random.PRNGKey(1), n)
+    pri = np.asarray(sum_tree.get(s.tree, jnp.arange(16)))
+    expect = n * pri / pri.sum()
+    assert np.all(np.abs(counts[:16] - expect) <= 2.0)
+
+
+def test_make_replay_validates():
+    with pytest.raises(ValueError, match="unknown replay kind"):
+        make_replay("rainbow", 8, (2,))
+    with pytest.raises(ValueError, match="alpha"):
+        make_replay("per", 8, (2,), alpha=1.5)
+
+
+# ---------------------------------------------------------------------------
+# PER end to end: training, checkpoint resume, both actor precisions
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("actor_policy", ["fxp8", None])
+def test_per_train_mechanics_both_precisions(actor_policy):
+    """dqn --replay per runs end to end under fp32 AND fxp8 behaviour
+    actors: params move, the tree stays internally consistent, the
+    priorities differentiate away from the insertion value, and the
+    final tree's sampling still follows the naive-CDF law."""
+    agent0 = make_value_agent("dqn", make("cartpole").spec,
+                              jax.random.PRNGKey(0))
+    out = {}
+    params, hist = value_train("dqn", "cartpole", iters=6, n_envs=8,
+                               rollout_len=4, updates_per_iter=2,
+                               learn_start=32, replay="per",
+                               per_alpha=0.7, per_beta0=0.5,
+                               actor_policy=actor_policy,
+                               verbose=False, state_out=out)
+    assert len(hist) == 6 and all(np.isfinite(h) for h in hist)
+    delta = sum(float(jnp.sum(jnp.abs(a - b)))
+                for a, b in zip(jax.tree.leaves(agent0.params),
+                                jax.tree.leaves(params)))
+    assert delta > 0, "updates were warmup no-ops"
+
+    buf = out["replay"]
+    size = int(buf.store.size)
+    assert size == 6 * 8 * 4
+    assert_internal_sums_exact(buf.tree)
+    pri = np.asarray(sum_tree.get(buf.tree, jnp.arange(size)))
+    assert (pri > 0).all()
+    assert len(np.unique(pri)) > 1, "no priority was ever refreshed"
+    n = 4096
+    counts = stratified_counts(buf.tree, jax.random.PRNGKey(5), n)
+    expect = n * pri / pri.sum()
+    assert np.all(np.abs(counts[:size] - expect) <= 2.0)
+
+
+def test_per_checkpoint_resume_roundtrip(tmp_path):
+    """A preempted PER run relaunched with the same command line
+    resumes with the exact tree, max-priority and storage pointers it
+    checkpointed; a --replay mismatch is refused loudly."""
+    d = str(tmp_path / "ck")
+    kw = dict(env_name="cartpole", iters=6, n_envs=16, rollout_len=4,
+              updates_per_iter=1, ckpt_dir=d, save_every=2,
+              replay="per", verbose=False, seed=3)
+    out = {}
+    params, hist = value_train("dqn", state_out=out, **kw)
+    assert len(hist) == 6
+
+    mgr = CheckpointManager(d)
+    assert mgr.latest_step() == 4
+    agent = make_value_agent("dqn", make("cartpole").spec,
+                             jax.random.PRNGKey(3))
+    from repro.optim import adamw_init
+    from repro.rl import init_envs
+    from repro.rl.envs.wrappers import ensure_vector_obs
+    est0, obs0 = init_envs(ensure_vector_obs(make("cartpole")),
+                           jax.random.PRNGKey(3 + 1), 16)
+    rb = make_replay("per", 50_000, (4,))
+    like = (agent.params, agent.params, adamw_init(agent.params),
+            rb.init(), est0, obs0)
+    (p, tgt, opt, buf, _, _), md = mgr.restore(like)
+    assert md["algo"] == "dqn" and md["it"] == 4
+    assert md["replay"] == "per"
+    # storage pointers exact: 5 chunks x 16 envs x 4 steps
+    assert int(buf.store.size) == 5 * 16 * 4
+    assert int(buf.store.ptr) == 5 * 16 * 4
+    # the tree state is real: consistent, with refreshed priorities
+    assert_internal_sums_exact(buf.tree)
+    pri = np.asarray(sum_tree.get(buf.tree,
+                                  jnp.arange(int(buf.store.size))))
+    assert (pri > 0).all() and len(np.unique(pri)) > 1
+    assert float(buf.max_p) >= pri.max() - 1e-6
+
+    # relaunch resumes at it=5 (exactly the missing iteration) and the
+    # final tree matches the uninterrupted run's bitwise
+    out2 = {}
+    params2, hist2 = value_train("dqn", state_out=out2, **kw)
+    assert len(hist2) == 1
+    for a, b in zip(jax.tree.leaves(out["replay"]),
+                    jax.tree.leaves(out2["replay"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    # the sampling stream is part of the run: backend switches refuse,
+    # and so do changed PER hyperparameters (they shape every draw)
+    with pytest.raises(ValueError, match="--replay"):
+        value_train("dqn", **{**kw, "replay": "uniform"})
+    with pytest.raises(ValueError, match="--per-alpha"):
+        value_train("dqn", **{**kw, "per_alpha": 0.9})
+    with pytest.raises(ValueError, match="--per-beta0"):
+        value_train("dqn", **{**kw, "per_beta0": 0.8})
+
+
+def test_value_cli_replay_flags():
+    main(["--algo", "dqn", "--env", "cartpole", "--iters", "2",
+          "--n-envs", "8", "--rollout-len", "4", "--replay", "per",
+          "--per-alpha", "0.5", "--per-beta0", "0.4"])
+    # replay/TQC flags are value-based; on-policy rejects them loudly
+    with pytest.raises(ValueError, match="value-based"):
+        main(["--algo", "ppo", "--replay", "per", "--iters", "1"])
+    with pytest.raises(ValueError, match="value-based"):
+        main(["--algo", "a2c", "--tqc-drop", "2", "--iters", "1"])
+    # tqc is a ddpg knob
+    with pytest.raises(ValueError, match="twin critics"):
+        main(["--algo", "dqn", "--tqc-drop", "2", "--iters", "1"])
+    # per-* hyperparameters without --replay per would be silently
+    # ignored (a uniform run masquerading as a PER experiment)
+    with pytest.raises(ValueError, match="--replay per"):
+        main(["--algo", "qrdqn", "--per-alpha", "0.9", "--iters", "1"])
+    with pytest.raises(ValueError, match="--replay per"):
+        main(["--algo", "dqn", "--per-beta-iters", "50", "--iters", "1"])
+
+
+@pytest.mark.slow
+def test_dqn_per_smoke_cartpole_reaches_floor():
+    """Acceptance: dqn --replay per reaches at least the uniform-
+    replay eval floor (150, test_dqn_smoke_cartpole_reaches_floor)."""
+    params, hist = value_train("dqn", "cartpole", iters=300, n_envs=32,
+                               rollout_len=8, updates_per_iter=8,
+                               lr=5e-4, replay="per", seed=0,
+                               actor_policy="fxp8", verbose=False)
+    assert all(np.isfinite(h) for h in hist)
+    ret, n_ep = value_eval("dqn", "cartpole", params, n_envs=16,
+                           actor_policy="fxp8")
+    assert n_ep > 0
+    assert ret > 150.0, f"per-dqn stuck at {ret:.1f}"
+
+
+def test_check_regression_per_row_slowdown_tolerance():
+    """A baseline row's ``slowdown_tol`` overrides the global budget —
+    the replay micro-bench rows ride a coarse catastrophic-regression
+    net instead of the 2x steps/s watchdog."""
+    import sys
+    sys.path.insert(0, ".")
+    from benchmarks.check_regression import check
+    base = {("replay", "per/x"): {"table": "replay", "name": "per/x",
+                                  "adds_per_s": 1000,
+                                  "slowdown_tol": 30.0},
+            ("env", "y"): {"table": "env", "name": "y",
+                           "steps_per_s": 1000}}
+    cur = {("replay", "per/x"): {"table": "replay", "name": "per/x",
+                                 "adds_per_s": 100},     # 10x: inside 30
+            ("env", "y"): {"table": "env", "name": "y",
+                           "steps_per_s": 100}}          # 10x: beyond 2
+    failures, notes = check(cur, base, max_slowdown=2.0,
+                            max_sync_growth=1.05)
+    assert len(failures) == 1 and "env/y" in failures[0]
+    cur[("replay", "per/x")]["adds_per_s"] = 10          # 100x: beyond 30
+    failures, _ = check(cur, base, 2.0, 1.05)
+    assert any("replay/per/x" in f and "30.0x" in f for f in failures)
+
+
+# ---------------------------------------------------------------------------
+# TQC quantile truncation (ddpg)
+# ---------------------------------------------------------------------------
+
+def test_truncated_target_quantiles():
+    z1 = jnp.array([[1.0, 3.0], [10.0, -1.0]])
+    z2 = jnp.array([[2.0, 4.0], [0.0, 5.0]])
+    np.testing.assert_array_equal(
+        np.asarray(truncated_target_quantiles(z1, z2, 0)),
+        [[1.0, 2.0, 3.0, 4.0], [-1.0, 0.0, 5.0, 10.0]])
+    np.testing.assert_array_equal(
+        np.asarray(truncated_target_quantiles(z1, z2, 2)),
+        [[1.0, 2.0], [-1.0, 0.0]])
+    with pytest.raises(ValueError, match="no target quantiles"):
+        truncated_target_quantiles(z1, z2, 4)
+
+
+def test_ddpg_config_validates_tqc():
+    with pytest.raises(ValueError, match="min-backup"):
+        DDPGConfig(tqc_drop=1)            # scalar critics can't prune
+    with pytest.raises(ValueError, match="at least one"):
+        DDPGConfig(critic_quantiles=2, tqc_drop=4)
+    with pytest.raises(ValueError, match="critic_quantiles"):
+        DDPGConfig(critic_quantiles=0)
+    with pytest.raises(ValueError, match="twin critics"):
+        make_value_agent("dqn", make("cartpole").spec, tqc_drop=2)
+
+
+def test_ddpg_scalar_path_unchanged_and_td_matches():
+    """tqc_drop=0 keeps the TD3 min-backup formula exactly, and the
+    aux |td| is the per-sample critic error."""
+    key = jax.random.PRNGKey(0)
+    ka, kc, kb, kn = jax.random.split(key, 4)
+    cfg = DDPGConfig()
+    actor = unbox(mlp_pi_init(ka, 3, 2))
+    critic = unbox(mlp_twin_q_init(kc, 3, 2))
+    B = 5
+    batch = {"obs": jax.random.normal(kb, (B, 3)),
+             "actions": jax.random.uniform(kb, (B, 2), minval=-1,
+                                           maxval=1),
+             "rewards": jnp.arange(B, dtype=jnp.float32),
+             "next_obs": jax.random.normal(kn, (B, 3)),
+             "discounts": jnp.full((B,), 0.97)}
+    actor_apply = lambda p, o: mlp_pi_apply(p, o, cfg.low, cfg.high)
+    critic_apply = lambda p, o, a: mlp_twin_q_apply(p, o, a)
+    loss, td = ddpg_critic_loss_td(critic, critic, actor, critic_apply,
+                                   actor_apply, batch, cfg, kn)
+    # the reference: TD3 eq. 14 computed by hand
+    na = actor_apply(actor, batch["next_obs"])
+    noise = jnp.clip(jax.random.normal(kn, na.shape) * cfg.policy_noise,
+                     -cfg.noise_clip, cfg.noise_clip) * cfg.half_range
+    na = jnp.clip(na + noise, cfg.low, cfg.high)
+    q1_t, q2_t = critic_apply(critic, batch["next_obs"], na)
+    tgt = batch["rewards"] + 0.97 * jnp.minimum(q1_t, q2_t)
+    q1, q2 = critic_apply(critic, batch["obs"], batch["actions"])
+    want = jnp.mean(jnp.square(q1 - tgt) + jnp.square(q2 - tgt))
+    assert float(loss) == pytest.approx(float(want), rel=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(td),
+        np.asarray(0.5 * (jnp.abs(q1 - tgt) + jnp.abs(q2 - tgt))),
+        rtol=1e-6)
+    # the scalar loss face is the same computation
+    assert float(ddpg_critic_loss(critic, critic, actor, critic_apply,
+                                  actor_apply, batch, cfg, kn)) \
+        == float(loss)
+
+
+def test_ddpg_tqc_quantile_path_shapes_and_truncation_effect():
+    """The TQC backup prices targets off the truncated pooled
+    quantiles: dropping top quantiles can only lower the loss target
+    (left-tail mixture), and the actor sees the quantile means."""
+    key = jax.random.PRNGKey(1)
+    ka, kc, kb, kn = jax.random.split(key, 4)
+    N = 5
+    cfg0 = DDPGConfig(critic_quantiles=N, tqc_drop=0)
+    cfg3 = DDPGConfig(critic_quantiles=N, tqc_drop=3)
+    actor = unbox(mlp_pi_init(ka, 3, 2))
+    critic = unbox(mlp_twin_qr_init(kc, 3, 2, N))
+    B = 4
+    batch = {"obs": jax.random.normal(kb, (B, 3)),
+             "actions": jax.random.uniform(kb, (B, 2), minval=-1,
+                                           maxval=1),
+             "rewards": jnp.zeros((B,)),
+             "next_obs": jax.random.normal(kn, (B, 3)),
+             "discounts": jnp.full((B,), 0.97)}
+    actor_apply = lambda p, o: mlp_pi_apply(p, o, cfg0.low, cfg0.high)
+    critic_apply = lambda p, o, a: mlp_twin_qr_apply(p, o, a)
+    z1, z2 = critic_apply(critic, batch["obs"], batch["actions"])
+    assert z1.shape == (B, N) and z2.shape == (B, N)
+    loss0, td0 = ddpg_critic_loss_td(critic, critic, actor,
+                                     critic_apply, actor_apply, batch,
+                                     cfg0, kn)
+    loss3, td3 = ddpg_critic_loss_td(critic, critic, actor,
+                                     critic_apply, actor_apply, batch,
+                                     cfg3, kn)
+    assert np.isfinite(float(loss0)) and np.isfinite(float(loss3))
+    assert td0.shape == (B,) and td3.shape == (B,)
+    assert float(loss0) != float(loss3)
+    a_loss = ddpg_actor_loss(actor, critic, critic_apply, actor_apply,
+                             batch)
+    assert np.isfinite(float(a_loss))
+    g = jax.grad(ddpg_actor_loss)(actor, critic, critic_apply,
+                                  actor_apply, batch)
+    assert any(float(jnp.sum(jnp.abs(x))) > 0
+               for x in jax.tree.leaves(g))
+
+
+def test_ddpg_tqc_trains_end_to_end():
+    """value_train with --tqc-drop: quantile twin critics, finite
+    history, params move — under the fxp8 behaviour actor and PER."""
+    agent = make_value_agent("ddpg", make("pendulum").spec,
+                             jax.random.PRNGKey(0), tqc_drop=5)
+    assert agent.cfg.critic_quantiles == 25 and agent.cfg.tqc_drop == 5
+    params, hist = value_train("ddpg", "pendulum", iters=4, n_envs=8,
+                               rollout_len=4, updates_per_iter=1,
+                               learn_start=32, tqc_drop=5,
+                               replay="per", actor_policy="fxp8",
+                               verbose=False)
+    assert len(hist) == 4 and all(np.isfinite(h) for h in hist)
+    # the critic heads really are [.., 25]-quantile
+    q_head = params["critic"]["q1"]["q"]["w"]
+    assert unbox(q_head).shape[-1] == 25
+    ret, _ = value_eval("ddpg", "pendulum", params, n_envs=4,
+                        n_steps=32, actor_policy="fxp8")
+    assert np.isfinite(ret)
+
+
+def test_tqc_resume_requires_matching_critic_shape(tmp_path):
+    """A tqc checkpoint reloaded without --tqc-drop would restore
+    quantile critic arrays into scalar templates (restore does not
+    shape-check) — the metadata guard must refuse it loudly."""
+    d = str(tmp_path / "ck")
+    kw = dict(env_name="pendulum", iters=3, n_envs=8, rollout_len=4,
+              updates_per_iter=1, learn_start=32, ckpt_dir=d,
+              save_every=2, verbose=False)
+    value_train("ddpg", tqc_drop=5, **kw)
+    with pytest.raises(ValueError, match="--tqc-drop"):
+        value_train("ddpg", tqc_drop=0, **kw)
