@@ -16,6 +16,8 @@ equal step budget), not absolute SOTA returns.
 """
 from __future__ import annotations
 
+import argparse
+
 import jax
 
 from benchmarks.common import emit
@@ -98,7 +100,11 @@ def run(fast: bool = True):
         emit("rewards", f"{algo}_cartpole",
              fp32_return=round(fp32_ret, 1),
              q8_return=round(q8_ret, 1),
-             parity=round(q8_ret / max(fp32_ret, 1e-9), 2))
+             parity=round(q8_ret / max(fp32_ret, 1e-9), 2),
+             # returns at fast budgets are seeded but land on a noisy
+             # part of the learning curve; the gate only needs to catch
+             # a collapse (quantized actors stop learning), not jitter
+             slowdown_tol=2.5)
     value_iters = 200 if fast else 600
     for algo, env_name in (("dqn", "cartpole"), ("qrdqn", "cartpole"),
                            ("ddpg", "pendulum")):
@@ -107,4 +113,26 @@ def run(fast: bool = True):
         emit("rewards", f"{algo}_{env_name}",
              fp32_return=round(fp32_ret, 1),
              q8_return=round(q8_ret, 1),
-             gap=round(q8_ret - fp32_ret, 1))
+             gap=round(q8_ret - fp32_ret, 1),
+             slowdown_tol=2.5)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="longer training budgets")
+    ap.add_argument("--csv", default=None)
+    ap.add_argument("--json", default=None,
+                    help="write the emit rows as JSON (CI gate input)")
+    args = ap.parse_args(argv)
+    run(fast=not args.full)
+    if args.csv:
+        from benchmarks.common import dump_csv
+        dump_csv(args.csv)
+    if args.json:
+        from benchmarks.common import dump_json
+        dump_json(args.json)
+
+
+if __name__ == "__main__":
+    main()

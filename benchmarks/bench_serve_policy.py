@@ -1,0 +1,112 @@
+"""Policy-serving bench — the deployment half of the paper's claim.
+
+    PYTHONPATH=src:. python -m benchmarks.bench_serve_policy \
+        [--episodes N] [--slots N] [--bucket N] [--json out.json]
+
+Four policy legs (dqn/qrdqn on CartPole, ddpg on Pendulum — MLP torso
+at width 256, where weight bytes dominate the fp32 bias/scale
+overhead — and conv dqn on the Catch pixels) each served at three
+precision points: fp32, w8 (int8 QTensor weights, the fxp8 activation
+grid) and w4 (int4 weights, two codes per byte when stored).  Every
+action flows through the micro-batching engine's pad-to-bucket path,
+so the numbers are the production-serving numbers: actions/s,
+p50/p99 per-request latency, and the packed model footprint.
+
+The compression columns are machine-independent and asserted in-bench:
+w8 must store at <= 0.27x of fp32 and w4 at <= 0.14x, the int8/int4
+deployment points of the paper's compression claim (the slack over the
+ideal 0.25x/0.125x is the fp32 biases and per-channel scales).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from benchmarks.common import emit
+from repro.rl.inference import make_value_agent
+from repro.serve import PolicyServer, ServedPolicy, serve_episodes
+from repro.serve.loader import PRECISIONS
+
+# (algo, net, env, torso width override).  None keeps the net default:
+# the conv stem's weight tensors already dwarf its bias/scale overhead.
+LEGS = (
+    ("dqn", "mlp", "cartpole", 256),
+    ("qrdqn", "mlp", "cartpole", 256),
+    ("ddpg", "mlp", "pendulum", 256),
+    ("dqn", "conv", "catch", None),
+)
+# machine-independent storage bounds the bench enforces
+COMPRESSION_BOUNDS = {"w8": 0.27, "w4": 0.14}
+
+
+def build_policy(algo: str, net: str, env_name: str,
+                 hidden, frame_stack: int = 2,
+                 seed: int = 0) -> ServedPolicy:
+    from repro.rl.inference import build_env
+    k = frame_stack if net == "conv" else 1
+    env = build_env(env_name, net, k)
+    agent = make_value_agent(algo, env.spec, key=jax.random.PRNGKey(seed),
+                             net=net, hidden=hidden)
+    return ServedPolicy.from_agent(agent, env_name, net=net,
+                                   frame_stack=k)
+
+
+def run(fast: bool = True, episodes: int = 0, slots: int = 0,
+        bucket: int = 0):
+    episodes = episodes or (16 if fast else 200)
+    slots = slots or (32 if fast else 128)
+    bucket = bucket or (16 if fast else 64)
+    mib = 1024 * 1024
+    for algo, net, env_name, hidden in LEGS:
+        policy = build_policy(algo, net, env_name, hidden)
+        for prec in sorted(PRECISIONS):
+            server = PolicyServer(policy, precision=prec,
+                                  mode="greedy", max_bucket=bucket)
+            st = serve_episodes(server, episodes, n_slots=slots,
+                                seed=0)
+            s = st.server
+            bound = COMPRESSION_BOUNDS.get(prec)
+            if bound is not None and s["compression"] > bound:
+                raise AssertionError(
+                    f"{algo}/{net}/{env_name} at {prec}: stored model "
+                    f"is {s['compression']:.3f}x of fp32, above the "
+                    f"{bound}x bound — the packed payload grew")
+            emit("serve_policy", f"{algo}_{net}_{env_name}/{prec}",
+                 algo=algo, net=net, env=env_name,
+                 episodes=st.episodes, slots=slots, bucket=bucket,
+                 actions_per_s=round(s["actions_per_s"]),
+                 p50_ms=round(s["p50_ms"], 4),
+                 p99_ms=round(s["p99_ms"], 4),
+                 model_mib=round(s["model_bytes"] / mib, 4),
+                 model_fp32_mib=round(s["model_fp32_bytes"] / mib, 4),
+                 compression=round(s["compression"], 4),
+                 jit_programs=int(s["jit_programs"]),
+                 # wide per-row budget: sub-ms CPU dispatch latencies
+                 # are noisy across runner classes; a real regression
+                 # (e.g. losing the int8 kernel path) is far larger
+                 slowdown_tol=3.0)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--episodes", type=int, default=0)
+    ap.add_argument("--slots", type=int, default=0)
+    ap.add_argument("--bucket", type=int, default=0)
+    ap.add_argument("--csv", default=None)
+    ap.add_argument("--json", default=None,
+                    help="write the emit rows as JSON (CI gate input)")
+    args = ap.parse_args(argv)
+    run(fast=not args.full, episodes=args.episodes, slots=args.slots,
+        bucket=args.bucket)
+    if args.csv:
+        from benchmarks.common import dump_csv
+        dump_csv(args.csv)
+    if args.json:
+        from benchmarks.common import dump_json
+        dump_json(args.json)
+
+
+if __name__ == "__main__":
+    main()

@@ -29,10 +29,18 @@ import sys
 
 # higher is better, noisy (a row is only checked for the rate fields
 # it actually carries — e.g. the replay bench emits adds/samples/
-# updates rates, the throughput benches emit steps_per_s)
+# updates rates, the throughput benches emit steps_per_s, the serving
+# bench actions_per_s, and the reward-parity bench its returns: a
+# return that drops below base/tol means a training path collapsed.
+# Negative-return envs (pendulum) skip the check via the base > 0
+# guard — a ratio gate is meaningless across zero)
 RATE_FIELDS = ("steps_per_s", "adds_per_s", "samples_per_s",
-               "updates_per_s")
-PAYLOAD_FIELDS = ("sync_mib",)          # lower is better, deterministic
+               "updates_per_s", "actions_per_s",
+               "fp32_return", "q8_return")
+# lower is better, deterministic: packed payload bytes are machine-
+# independent, so growth is exact — sync_mib is the actor-fleet weight
+# sync, model_mib the served (int8/int4-packed) policy footprint
+PAYLOAD_FIELDS = ("sync_mib", "model_mib")
 
 
 def _load_rows(paths):

@@ -15,6 +15,9 @@
   replay      §Replay       replay backends: capacity x batch x
                             uniform/per — adds/s, samples/s,
                             priority-updates/s
+  serve       §Serving      batched policy serving: algo x net x
+                            fp32/w8/w4 — actions/s, p50/p99 latency,
+                            packed model MiB
   lm          Sec. IV       the fabric generalized to LM train/serve
   roofline    §Roofline     dry-run derived terms (needs dryrun JSON)
 """
@@ -26,7 +29,7 @@ import time
 from benchmarks import (bench_arch, bench_env_throughput, bench_lm,
                         bench_pixel_throughput, bench_qmac,
                         bench_replay, bench_rewards, bench_roofline,
-                        bench_vact)
+                        bench_serve_policy, bench_vact)
 from benchmarks.common import dump_csv
 
 SUITES = {
@@ -37,6 +40,7 @@ SUITES = {
     "env_throughput": lambda full: bench_env_throughput.run(fast=not full),
     "pixel": lambda full: bench_pixel_throughput.run(fast=not full),
     "replay": lambda full: bench_replay.run(fast=not full),
+    "serve": lambda full: bench_serve_policy.run(fast=not full),
     "lm": lambda full: bench_lm.run(),
     "roofline": lambda full: bench_roofline.run(),
 }

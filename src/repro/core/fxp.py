@@ -28,8 +28,13 @@ import numpy as np
 
 Array = jax.Array
 
-# int dtype and symmetric max magnitude per FxP precision.
+# int dtype and symmetric max magnitude per FxP precision.  4-bit
+# values live in an int8 *container* (no sub-byte dtype on the
+# accelerator) — two codes per byte when actually stored/shipped; see
+# ``pack_nibbles`` and the sub-byte-aware
+# ``repro.core.quantizer.quantized_nbytes``.
 _FXP_SPECS = {
+    4: (jnp.int8, 7.0),
     8: (jnp.int8, 127.0),
     16: (jnp.int16, 32767.0),
     32: (jnp.int32, 2147483647.0),
@@ -200,6 +205,34 @@ class QTensor:
 
 def is_qtensor(x: Any) -> bool:
     return isinstance(x, QTensor)
+
+
+# ---------------------------------------------------------------------------
+# sub-byte (int4) storage: two codes per byte
+# ---------------------------------------------------------------------------
+
+def pack_nibbles(q: Array) -> Array:
+    """Pack int4 codes (int8 container, values in [-8, 7]) into a flat
+    uint8 array, two codes per byte (low nibble first).  Odd element
+    counts pad the final high nibble with zero.  This is the *wire/
+    storage* layout — compute unpacks back into the int8 container
+    (the FPGA's 4-bit SIMD lanes read the nibbles directly)."""
+    flat = q.reshape(-1).astype(jnp.int8)
+    if flat.size % 2:
+        flat = jnp.concatenate([flat, jnp.zeros((1,), jnp.int8)])
+    lo = (flat[0::2] & 0x0F).astype(jnp.uint8)
+    hi = (flat[1::2] & 0x0F).astype(jnp.uint8)
+    return lo | (hi << 4)
+
+
+def unpack_nibbles(packed: Array, size: int) -> Array:
+    """Inverse of :func:`pack_nibbles`: ``size`` int4 codes, sign-
+    extended back into the int8 container."""
+    lo = (packed & 0x0F).astype(jnp.int8)
+    hi = ((packed >> 4) & 0x0F).astype(jnp.int8)
+    both = jnp.stack([lo, hi], axis=1).reshape(-1)[:size]
+    # sign-extend the 4-bit two's-complement codes
+    return jnp.where(both >= 8, both - 16, both).astype(jnp.int8)
 
 
 def nbytes_of(x: Union[Array, QTensor, jax.ShapeDtypeStruct]) -> int:

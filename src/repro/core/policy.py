@@ -64,6 +64,10 @@ FXP32 = QuantPolicy(name="fxp32")  # baseline: full precision semantics
 W8A8 = QuantPolicy(name="w8a8", w_bits=8, a_bits=8)
 W8 = QuantPolicy(name="w8", w_bits=8)                       # weight-only
 W8A8KV8 = QuantPolicy(name="w8a8kv8", w_bits=8, a_bits=8, kv_bits=8)
+# the QuaRL-style W8->W4 deployment sweep: int4 weights (two codes per
+# byte on the wire/in HBM), activations fp32 or int8
+W4 = QuantPolicy(name="w4", w_bits=4)                       # weight-only
+W4A8 = QuantPolicy(name="w4a8", w_bits=4, a_bits=8)
 BF16 = QuantPolicy(name="bf16", compute_dtype=jnp.bfloat16)
 W8A8_BF16 = QuantPolicy(name="w8a8_bf16", w_bits=8, a_bits=8,
                         compute_dtype=jnp.bfloat16)
@@ -73,8 +77,8 @@ QFORCE8 = QuantPolicy(name="qforce8", w_bits=8, a_bits=8, kv_bits=8,
                       comm_bits=8, compute_dtype=jnp.bfloat16)
 
 PRESETS = {p.name: p for p in
-           [FP32, FXP8, FXP16, FXP32, W8A8, W8, W8A8KV8, BF16,
-            W8A8_BF16, QFORCE8]}
+           [FP32, FXP8, FXP16, FXP32, W8A8, W8, W8A8KV8, W4, W4A8,
+            BF16, W8A8_BF16, QFORCE8]}
 
 
 def get_policy(name: str) -> QuantPolicy:

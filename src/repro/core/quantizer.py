@@ -54,9 +54,13 @@ def quantize_params(params, policy: QuantPolicy,
     def convert(path, leaf):
         if predicate(path, leaf):
             ch = (leaf.ndim - 1) if policy.per_channel else None
-            # for stacked layers keep a scale per layer as well:
-            # reduce only the contraction axis (ndim-2)
-            if policy.per_channel and leaf.ndim >= 3:
+            # for scan-stacked layers [L, in, out] keep a scale per
+            # layer as well: reduce only the contraction axis (ndim-2).
+            # Exactly 3D — conv kernels (HWIO, 4D) take the plain
+            # per-out-channel branch below, the grid the conv forward's
+            # fake-quant uses (channel_axis=3), so packed conv weights
+            # dequantize bit-identically to the training-time grid
+            if policy.per_channel and leaf.ndim == 3:
                 amax = jnp.max(jnp.abs(leaf), axis=-2, keepdims=True)
                 from repro.core.fxp import fxp_qmax, fxp_dtype
                 scale = jnp.maximum(amax, 1e-12) / fxp_qmax(policy.w_bits)
@@ -80,13 +84,22 @@ def dequantize_params(params):
 
 
 def quantized_nbytes(params) -> Tuple[int, int]:
-    """(bytes as stored, bytes if everything were fp32) for a pytree."""
+    """(bytes as stored, bytes if everything were fp32) for a pytree.
+
+    Sub-byte aware: a QTensor whose ``bits`` is narrower than its int
+    container counts at its *packed* width — two int4 codes per byte
+    (``fxp.pack_nibbles`` is the matching storage layout) — so model-
+    size numbers track the paper's compression claims instead of the
+    container dtype.
+    """
     stored = 0
     fp32 = 0
     for leaf in jax.tree.leaves(
             params, is_leaf=lambda l: isinstance(l, QTensor)):
         if isinstance(leaf, QTensor):
-            stored += leaf.qvalue.size * leaf.qvalue.dtype.itemsize
+            container_bits = leaf.qvalue.dtype.itemsize * 8
+            payload_bits = min(int(leaf.bits), container_bits)
+            stored += (leaf.qvalue.size * payload_bits + 7) // 8
             stored += leaf.scale.size * leaf.scale.dtype.itemsize
             fp32 += leaf.qvalue.size * 4
         else:

@@ -37,10 +37,9 @@ runs).
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 from functools import partial
-from typing import Callable, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -58,55 +57,22 @@ from repro.rl.actor_learner import (VersionBuffer, collect_sharded,
                                     fleet_mask, pack_weights, sync_bytes,
                                     unpack_weights)
 from repro.rl.dists import distribution_for
-from repro.rl.envs import Discrete, Environment, make, registered
+# the inference layer (env stack + net reconstruction + action heads)
+# is shared with repro.serve — the historical rl_train names re-export
+from repro.rl.inference import (NETS, ON_POLICY_ALGOS,  # noqa: F401
+                                VALUE_ALGOS, ValueAgent, build_env,
+                                make_value_agent)
+from repro.rl.envs import Environment, make, registered
 from repro.rl.envs.spaces import head_dim
-from repro.rl.envs.wrappers import (NormStats, ensure_vector_obs,
-                                    pixel_pipeline)
-from repro.rl.nets import (conv_ac_apply, conv_ac_init, conv_q_apply,
-                           conv_q_init, conv_qr_apply, conv_qr_init,
-                           mlp_ac_apply, mlp_ac_init, mlp_pi_apply,
-                           mlp_pi_init, mlp_q_apply, mlp_q_init,
-                           mlp_qr_apply, mlp_qr_init, mlp_twin_q_apply,
-                           mlp_twin_q_init, mlp_twin_qr_apply,
-                           mlp_twin_qr_init)
+from repro.rl.envs.wrappers import NormStats
+from repro.rl.nets import (conv_ac_apply, conv_ac_init, mlp_ac_apply,
+                           mlp_ac_init)
 from repro.rl.ppo import a2c_loss, minibatch_epochs, ppo_loss, stage_mask
 from repro.rl.replay import KINDS as REPLAY_KINDS
 from repro.rl.replay import make_replay, replay_size
 from repro.rl.rollout import episode_returns, episode_returns_from
-from repro.rl.value import (DDPGConfig, DQNConfig, QRDQNConfig,
-                            ddpg_actor_loss, ddpg_critic_loss_td,
-                            dqn_loss_td, egreedy, epsilon, nstep_targets,
-                            polyak, qrdqn_loss_td)
-
-ON_POLICY_ALGOS = ("ppo", "a2c")
-VALUE_ALGOS = ("dqn", "qrdqn", "ddpg")
-NETS = ("mlp", "conv")
-
-
-def build_env(env_name: str, net: str = "mlp", frame_stack_k: int = 1,
-              norm_stats: Optional[NormStats] = None) -> Environment:
-    """The launch-path env stack for one training/eval run.
-
-    ``net="conv"`` builds the pixel pipeline — running (Welford)
-    observation normalization over raw frames, then ``frame_stack`` —
-    so catch/keydoor reach the Q-Conv stem with no
-    ``flatten_observation``.  ``norm_stats`` freezes the normalizer
-    (evaluation).  ``net="mlp"`` keeps the historical vector view
-    (images are flattened); ``--frame-stack`` is a conv-net knob.
-    """
-    if net not in NETS:
-        raise ValueError(f"unknown net {net!r} (expected one of {NETS})")
-    env = make(env_name)
-    if net == "conv":
-        if len(env.obs_shape) != 3:
-            raise ValueError(
-                f"--net conv needs image (H, W, C) observations; "
-                f"{env_name} has shape {env.obs_shape} — use --net mlp")
-        return pixel_pipeline(env, frame_stack_k, stats=norm_stats)
-    if frame_stack_k > 1:
-        raise ValueError("--frame-stack is a pixel-pipeline knob and "
-                         "requires --net conv")
-    return ensure_vector_obs(env)
+from repro.rl.value import (ddpg_actor_loss, ddpg_critic_loss_td,
+                            epsilon, nstep_targets, polyak)
 
 
 def make_agent(agent: str, env: Environment, key,
@@ -321,164 +287,6 @@ def rl_train(env_name: str = "cartpole", agent: str = "mlp",
     return params, history
 
 
-@dataclasses.dataclass
-class ValueAgent:
-    """Nets + behaviour/greedy policies for one value-based algo.
-
-    ``behave`` is the *quantized* exploration policy the actor fleet
-    runs (epsilon-greedy over Q, or deterministic actor + noise);
-    ``greedy`` is the same policy with exploration off (evaluation).
-    """
-
-    algo: str
-    cfg: object
-    params: object
-    discrete: bool
-    qvals: Optional[Callable] = None      # (p, obs, policy) -> [B, A]
-    act: Optional[Callable] = None        # (p, obs, policy) -> [B, d]
-    q_apply: Optional[Callable] = None    # raw apply for the loss
-    critic_apply: Optional[Callable] = None
-    loss_fn: Optional[Callable] = None
-
-    def behave(self, behaviour_params, obs, key, eps, policy):
-        """``behaviour_params`` is the synced subtree only: the Q net
-        (discrete) or the bare actor net (ddpg) — the twin critics
-        never ship to the fleet."""
-        if self.discrete:
-            return egreedy(key,
-                           self.qvals(behaviour_params, obs, policy),
-                           eps)
-        a = self.act(behaviour_params, obs, policy)
-        noise = (jax.random.normal(key, a.shape)
-                 * self.cfg.explore_noise * self.cfg.half_range)
-        return jnp.clip(a + noise, self.cfg.low, self.cfg.high)
-
-    def behaviour_subtree(self, params):
-        """The weights the learner actually syncs to the actor fleet."""
-        return params["actor"] if self.algo == "ddpg" else params
-
-    def greedy(self, params, obs, policy=None):
-        if self.discrete:
-            return jnp.argmax(self.qvals(params, obs, policy), axis=-1)
-        return self.act(params["actor"], obs, policy)
-
-
-def make_value_agent(algo: str, spec, key=None,
-                     n_step: int = 3,
-                     eps_decay_steps: int = 2_000,
-                     learn_start: Optional[int] = None,
-                     net: str = "mlp", tqc_drop: int = 0,
-                     critic_quantiles: int = 0) -> ValueAgent:
-    """Build the nets/policies for one value algo.  ``key=None`` skips
-    the parameter init (``agent.params`` is None) — for callers that
-    only need the apply closures and config, e.g. evaluation of
-    already-trained params.  ``net="conv"`` selects the Q-Conv pixel
-    nets (dqn/qrdqn over (H, W, C) observations).
-
-    ``tqc_drop > 0`` (ddpg only) switches the twin critics to TQC
-    quantile heads and truncates the top-k pooled target quantiles in
-    the Bellman backup; ``critic_quantiles`` sizes those heads (0 =
-    auto: 25 when truncating, scalar critics otherwise — the default
-    keeps today's TD3 min-backup bit-exact)."""
-    def tune(cfg):
-        if learn_start is None:
-            return cfg
-        return dataclasses.replace(cfg, learn_start=learn_start)
-
-    if net not in NETS:
-        raise ValueError(f"unknown net {net!r} (expected one of {NETS})")
-    conv = net == "conv"
-    if conv and len(spec.obs_shape) != 3:
-        raise ValueError(f"--net conv needs image (H, W, C) "
-                         f"observations; {spec.name} has shape "
-                         f"{spec.obs_shape}")
-    if not conv and len(spec.obs_shape) != 1:
-        raise ValueError(
-            f"{spec.name} has obs shape {spec.obs_shape}; use "
-            "--net conv for pixel envs (the mlp value nets need flat "
-            "observations)")
-    obs_dim = spec.obs_shape[0] if not conv else None
-    discrete = isinstance(spec.action_space, Discrete)
-    if algo in ("dqn", "qrdqn") and not discrete:
-        raise ValueError(f"--algo {algo} needs a Discrete action space; "
-                         f"{spec.name} is continuous — use --algo ddpg")
-    if algo == "ddpg" and discrete:
-        raise ValueError(f"--algo ddpg needs a Box action space; "
-                         f"{spec.name} is discrete — use dqn/qrdqn")
-    if algo == "ddpg" and conv:
-        raise ValueError("--net conv drives the discrete Q family "
-                         "(dqn/qrdqn); ddpg has no pixel actor-critic")
-    if (tqc_drop or critic_quantiles) and algo != "ddpg":
-        raise ValueError("--tqc-drop truncates the DDPG critic targets; "
-                         f"--algo {algo} has no twin critics")
-
-    if algo == "qrdqn":
-        cfg = tune(QRDQNConfig(n_step=n_step,
-                               eps_decay_steps=eps_decay_steps))
-        if key is None:
-            params = None
-        elif conv:
-            params = unbox(conv_qr_init(key, spec.obs_shape,
-                                        spec.n_actions, cfg.n_quantiles))
-        else:
-            params = unbox(mlp_qr_init(key, obs_dim, spec.n_actions,
-                                       cfg.n_quantiles))
-        qr_apply = conv_qr_apply if conv else mlp_qr_apply
-
-        def q_apply(p, o, pol=None):
-            return qr_apply(p, o, spec.n_actions, cfg.n_quantiles, pol)
-
-        return ValueAgent(algo, cfg, params, True,
-                          qvals=lambda p, o, pol=None:
-                              q_apply(p, o, pol).mean(-1),
-                          q_apply=q_apply, loss_fn=qrdqn_loss_td)
-    if algo == "dqn":
-        cfg = tune(DQNConfig(n_step=n_step,
-                             eps_decay_steps=eps_decay_steps))
-        if key is None:
-            params = None
-        elif conv:
-            params = unbox(conv_q_init(key, spec.obs_shape,
-                                       spec.n_actions))
-        else:
-            params = unbox(mlp_q_init(key, obs_dim, spec.n_actions))
-        q_fn = conv_q_apply if conv else mlp_q_apply
-        return ValueAgent(algo, cfg, params, True, qvals=q_fn,
-                          q_apply=q_fn, loss_fn=dqn_loss_td)
-    if algo != "ddpg":
-        raise ValueError(f"unknown value algo {algo!r} "
-                         f"(expected one of {VALUE_ALGOS})")
-    space = spec.action_space
-    if not space.bounded:
-        raise ValueError("ddpg needs finite Box action bounds")
-    act_dim = space.shape[0]
-    if critic_quantiles == 0:
-        # auto: truncation needs a return distribution to prune; the
-        # default stays the scalar TD3 min-backup, bit-exact
-        critic_quantiles = 25 if tqc_drop > 0 else 1
-    cfg = tune(DDPGConfig(low=space.low, high=space.high,
-                          n_step=n_step,
-                          critic_quantiles=critic_quantiles,
-                          tqc_drop=tqc_drop))
-    quantile = cfg.critic_quantiles > 1
-    if key is None:
-        params = None
-    else:
-        ka, kc = jax.random.split(key)
-        critic = (mlp_twin_qr_init(kc, obs_dim, act_dim,
-                                   cfg.critic_quantiles)
-                  if quantile else
-                  mlp_twin_q_init(kc, obs_dim, act_dim))
-        params = {"actor": unbox(mlp_pi_init(ka, obs_dim, act_dim)),
-                  "critic": unbox(critic)}
-    twin_apply = mlp_twin_qr_apply if quantile else mlp_twin_q_apply
-    return ValueAgent(
-        algo, cfg, params, False,
-        act=lambda p, o, pol=None: mlp_pi_apply(p, o, cfg.low, cfg.high,
-                                                pol),
-        critic_apply=lambda p, o, a, pol=None:
-            twin_apply(p, o, a, pol))
-
 
 def value_eval(algo: str, env_name: str, params,
                n_envs: int = 16, n_steps: Optional[int] = None,
@@ -611,6 +419,19 @@ def value_train(algo: str = "dqn", env_name: str = "cartpole",
             # Replay vs a saved PER tree, scalar vs quantile critics)
             # must fail with these errors, not a missing-leaf KeyError
             md = mgr.metadata()
+            md_net = str(md.get("net", net))
+            if md_net != net:
+                raise ValueError(
+                    f"checkpoint in {ckpt_dir} was saved by --net "
+                    f"{md_net!r}, not {net!r} — the torso family (and "
+                    "the obs pipeline) differs; relaunch with the "
+                    "original flags")
+            md_env = str(md.get("env", env_name))
+            if md_env != env_name:
+                raise ValueError(
+                    f"checkpoint in {ckpt_dir} was saved by --env "
+                    f"{md_env!r}, not {env_name!r} — relaunch with the "
+                    "original flags")
             md_algo = str(md.get("algo", ""))
             if md_algo != algo:
                 raise ValueError(
@@ -751,8 +572,15 @@ def value_train(algo: str = "dqn", env_name: str = "cartpole",
                   f"episodes {int(n_ep):4d}  "
                   f"replay {int(replay_size(buf)):6d}")
         if mgr and mgr.should_save(it):
+            # env/net/frame_stack/n_envs make the checkpoint
+            # self-describing for the serving loader
+            # (repro.serve.load_policy rebuilds the net and — for conv
+            # policies — the env-state template from these alone)
             md_out = {"algo": algo, "it": it, "replay": replay,
-                      "tqc_drop": tqc_drop}
+                      "tqc_drop": tqc_drop, "env": env_name, "net": net,
+                      "frame_stack": frame_stack_k, "n_envs": n_envs,
+                      "n_step": n_step,
+                      "actor_policy": actor_policy or "fp32"}
             if rb.prioritized:
                 md_out.update(per_alpha=per_alpha, per_beta0=per_beta0,
                               per_beta_iters=beta_iters)

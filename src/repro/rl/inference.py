@@ -1,0 +1,257 @@
+"""The shared policy-inference path: net reconstruction + action heads.
+
+Training (``value_train``), evaluation (``value_eval``) and the batched
+policy server (:mod:`repro.serve`) all act through the SAME objects in
+this module — :func:`build_env` for the observation stack,
+:func:`make_value_agent` for the net reconstruction, and
+``ValueAgent.greedy``/``ValueAgent.sampled`` for the action heads — so
+a served policy can never drift from what the evaluation loop measures:
+there is exactly one greedy forward per algo, and the server calls it
+with int8/int4 ``QTensor`` weights where the eval loop calls it with
+fp32 weights under a fake-quant policy (bit-identical grids at w8 by
+construction of :func:`repro.core.quantizer.quantize_params`).
+
+Nothing here touches replay buffers, optimizers or target networks —
+this is the layer a deployment loads, which is why it lives outside
+``repro.launch``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.module import unbox
+from repro.rl.envs import Discrete, Environment, make
+from repro.rl.envs.wrappers import (NormStats, ensure_vector_obs,
+                                    pixel_pipeline)
+from repro.rl.nets import (conv_q_apply, conv_q_init, conv_qr_apply,
+                           conv_qr_init, mlp_pi_apply, mlp_pi_init,
+                           mlp_q_apply, mlp_q_init, mlp_qr_apply,
+                           mlp_qr_init, mlp_twin_q_apply, mlp_twin_q_init,
+                           mlp_twin_qr_apply, mlp_twin_qr_init)
+from repro.rl.value import (DDPGConfig, DQNConfig, QRDQNConfig,
+                            dqn_loss_td, egreedy, qrdqn_loss_td)
+
+Array = jax.Array
+
+ON_POLICY_ALGOS = ("ppo", "a2c")
+VALUE_ALGOS = ("dqn", "qrdqn", "ddpg")
+NETS = ("mlp", "conv")
+
+
+def build_env(env_name: str, net: str = "mlp", frame_stack_k: int = 1,
+              norm_stats: Optional[NormStats] = None) -> Environment:
+    """The launch-path env stack for one training/eval/serving run.
+
+    ``net="conv"`` builds the pixel pipeline — running (Welford)
+    observation normalization over raw frames, then ``frame_stack`` —
+    so catch/keydoor reach the Q-Conv stem with no
+    ``flatten_observation``.  ``norm_stats`` freezes the normalizer
+    (evaluation/serving).  ``net="mlp"`` keeps the historical vector
+    view (images are flattened); ``--frame-stack`` is a conv-net knob.
+    """
+    if net not in NETS:
+        raise ValueError(f"unknown net {net!r} (expected one of {NETS})")
+    env = make(env_name)
+    if net == "conv":
+        if len(env.obs_shape) != 3:
+            raise ValueError(
+                f"--net conv needs image (H, W, C) observations; "
+                f"{env_name} has shape {env.obs_shape} — use --net mlp")
+        return pixel_pipeline(env, frame_stack_k, stats=norm_stats)
+    if frame_stack_k > 1:
+        raise ValueError("--frame-stack is a pixel-pipeline knob and "
+                         "requires --net conv")
+    return ensure_vector_obs(env)
+
+
+@dataclasses.dataclass
+class ValueAgent:
+    """Nets + behaviour/greedy policies for one value-based algo.
+
+    ``behave`` is the *quantized* exploration policy the actor fleet
+    runs (epsilon-greedy over Q, or deterministic actor + noise);
+    ``greedy`` is the same policy with exploration off (evaluation and
+    greedy serving); ``sampled`` is the stochastic serving head
+    (Boltzmann over Q for Discrete, bounded Gaussian for Box).
+    """
+
+    algo: str
+    cfg: object
+    params: object
+    discrete: bool
+    qvals: Optional[Callable] = None      # (p, obs, policy) -> [B, A]
+    act: Optional[Callable] = None        # (p, obs, policy) -> [B, d]
+    q_apply: Optional[Callable] = None    # raw apply for the loss
+    critic_apply: Optional[Callable] = None
+    loss_fn: Optional[Callable] = None
+
+    def behave(self, behaviour_params, obs, key, eps, policy):
+        """``behaviour_params`` is the synced subtree only: the Q net
+        (discrete) or the bare actor net (ddpg) — the twin critics
+        never ship to the fleet."""
+        if self.discrete:
+            return egreedy(key,
+                           self.qvals(behaviour_params, obs, policy),
+                           eps)
+        a = self.act(behaviour_params, obs, policy)
+        noise = (jax.random.normal(key, a.shape)
+                 * self.cfg.explore_noise * self.cfg.half_range)
+        return jnp.clip(a + noise, self.cfg.low, self.cfg.high)
+
+    def behaviour_subtree(self, params):
+        """The weights the learner actually syncs to the actor fleet —
+        also exactly the subtree a deployment serves."""
+        return params["actor"] if self.algo == "ddpg" else params
+
+    def from_behaviour(self, behaviour_params):
+        """Inverse of :meth:`behaviour_subtree`: re-wrap a served
+        subtree into the tree shape ``greedy``/``sampled`` expect."""
+        if self.algo == "ddpg":
+            return {"actor": behaviour_params}
+        return behaviour_params
+
+    def greedy(self, params, obs, policy=None):
+        if self.discrete:
+            return jnp.argmax(self.qvals(params, obs, policy), axis=-1)
+        return self.act(params["actor"], obs, policy)
+
+    def sampled(self, params, obs, key, temperature: float = 1.0,
+                policy=None):
+        """Stochastic action head for serving: Boltzmann exploration
+        over the Q values (Discrete) or the greedy action + bounded
+        Gaussian noise scaled by ``temperature`` x half-range (Box).
+        ``temperature -> 0`` recovers ``greedy``."""
+        t = jnp.maximum(jnp.asarray(temperature, jnp.float32), 1e-6)
+        if self.discrete:
+            return jax.random.categorical(
+                key, self.qvals(params, obs, policy) / t)
+        a = self.act(params["actor"], obs, policy)
+        noise = jax.random.normal(key, a.shape) * t * self.cfg.half_range
+        return jnp.clip(a + noise, self.cfg.low, self.cfg.high)
+
+
+def make_value_agent(algo: str, spec, key=None,
+                     n_step: int = 3,
+                     eps_decay_steps: int = 2_000,
+                     learn_start: Optional[int] = None,
+                     net: str = "mlp", tqc_drop: int = 0,
+                     critic_quantiles: int = 0,
+                     hidden: Optional[int] = None) -> ValueAgent:
+    """Build the nets/policies for one value algo.  ``key=None`` skips
+    the parameter init (``agent.params`` is None) — for callers that
+    only need the apply closures and config, e.g. evaluation of
+    already-trained params.  ``net="conv"`` selects the Q-Conv pixel
+    nets (dqn/qrdqn over (H, W, C) observations).
+
+    ``tqc_drop > 0`` (ddpg only) switches the twin critics to TQC
+    quantile heads and truncates the top-k pooled target quantiles in
+    the Bellman backup; ``critic_quantiles`` sizes those heads (0 =
+    auto: 25 when truncating, scalar critics otherwise — the default
+    keeps today's TD3 min-backup bit-exact).  ``hidden`` overrides the
+    torso width (None = the nets' default)."""
+    def tune(cfg):
+        if learn_start is None:
+            return cfg
+        return dataclasses.replace(cfg, learn_start=learn_start)
+
+    hidden_kw = {} if hidden is None else {"hidden": hidden}
+    if net not in NETS:
+        raise ValueError(f"unknown net {net!r} (expected one of {NETS})")
+    conv = net == "conv"
+    if conv and len(spec.obs_shape) != 3:
+        raise ValueError(f"--net conv needs image (H, W, C) "
+                         f"observations; {spec.name} has shape "
+                         f"{spec.obs_shape}")
+    if not conv and len(spec.obs_shape) != 1:
+        raise ValueError(
+            f"{spec.name} has obs shape {spec.obs_shape}; use "
+            "--net conv for pixel envs (the mlp value nets need flat "
+            "observations)")
+    obs_dim = spec.obs_shape[0] if not conv else None
+    discrete = isinstance(spec.action_space, Discrete)
+    if algo in ("dqn", "qrdqn") and not discrete:
+        raise ValueError(f"--algo {algo} needs a Discrete action space; "
+                         f"{spec.name} is continuous — use --algo ddpg")
+    if algo == "ddpg" and discrete:
+        raise ValueError(f"--algo ddpg needs a Box action space; "
+                         f"{spec.name} is discrete — use dqn/qrdqn")
+    if algo == "ddpg" and conv:
+        raise ValueError("--net conv drives the discrete Q family "
+                         "(dqn/qrdqn); ddpg has no pixel actor-critic")
+    if (tqc_drop or critic_quantiles) and algo != "ddpg":
+        raise ValueError("--tqc-drop truncates the DDPG critic targets; "
+                         f"--algo {algo} has no twin critics")
+
+    if algo == "qrdqn":
+        cfg = tune(QRDQNConfig(n_step=n_step,
+                               eps_decay_steps=eps_decay_steps))
+        if key is None:
+            params = None
+        elif conv:
+            params = unbox(conv_qr_init(key, spec.obs_shape,
+                                        spec.n_actions, cfg.n_quantiles,
+                                        **hidden_kw))
+        else:
+            params = unbox(mlp_qr_init(key, obs_dim, spec.n_actions,
+                                       cfg.n_quantiles, **hidden_kw))
+        qr_apply = conv_qr_apply if conv else mlp_qr_apply
+
+        def q_apply(p, o, pol=None):
+            return qr_apply(p, o, spec.n_actions, cfg.n_quantiles, pol)
+
+        return ValueAgent(algo, cfg, params, True,
+                          qvals=lambda p, o, pol=None:
+                              q_apply(p, o, pol).mean(-1),
+                          q_apply=q_apply, loss_fn=qrdqn_loss_td)
+    if algo == "dqn":
+        cfg = tune(DQNConfig(n_step=n_step,
+                             eps_decay_steps=eps_decay_steps))
+        if key is None:
+            params = None
+        elif conv:
+            params = unbox(conv_q_init(key, spec.obs_shape,
+                                       spec.n_actions, **hidden_kw))
+        else:
+            params = unbox(mlp_q_init(key, obs_dim, spec.n_actions,
+                                      **hidden_kw))
+        q_fn = conv_q_apply if conv else mlp_q_apply
+        return ValueAgent(algo, cfg, params, True, qvals=q_fn,
+                          q_apply=q_fn, loss_fn=dqn_loss_td)
+    if algo != "ddpg":
+        raise ValueError(f"unknown value algo {algo!r} "
+                         f"(expected one of {VALUE_ALGOS})")
+    space = spec.action_space
+    if not space.bounded:
+        raise ValueError("ddpg needs finite Box action bounds")
+    act_dim = space.shape[0]
+    if critic_quantiles == 0:
+        # auto: truncation needs a return distribution to prune; the
+        # default stays the scalar TD3 min-backup, bit-exact
+        critic_quantiles = 25 if tqc_drop > 0 else 1
+    cfg = tune(DDPGConfig(low=space.low, high=space.high,
+                          n_step=n_step,
+                          critic_quantiles=critic_quantiles,
+                          tqc_drop=tqc_drop))
+    quantile = cfg.critic_quantiles > 1
+    if key is None:
+        params = None
+    else:
+        ka, kc = jax.random.split(key)
+        critic = (mlp_twin_qr_init(kc, obs_dim, act_dim,
+                                   cfg.critic_quantiles, **hidden_kw)
+                  if quantile else
+                  mlp_twin_q_init(kc, obs_dim, act_dim, **hidden_kw))
+        params = {"actor": unbox(mlp_pi_init(ka, obs_dim, act_dim,
+                                             **hidden_kw)),
+                  "critic": unbox(critic)}
+    twin_apply = mlp_twin_qr_apply if quantile else mlp_twin_q_apply
+    return ValueAgent(
+        algo, cfg, params, False,
+        act=lambda p, o, pol=None: mlp_pi_apply(p, o, cfg.low, cfg.high,
+                                                pol),
+        critic_apply=lambda p, o, a, pol=None:
+            twin_apply(p, o, a, pol))

@@ -1,0 +1,18 @@
+"""Batched RL policy serving: checkpoint -> packed weights -> actions.
+
+The deployment half of the QForce-RL story as a subsystem: load a
+value-RL checkpoint (:func:`load_policy`), pack the behaviour net to
+int8/int4 ``QTensor``s (:meth:`ServedPolicy.pack`), and answer action
+requests for banks of concurrent episodes through the micro-batching
+engine (:class:`PolicyServer` / :func:`serve_episodes`).
+"""
+from repro.serve.engine import (EpisodeStats, PolicyServer, bucket_for,
+                                bucket_sizes, check_parity,
+                                serve_episodes)
+from repro.serve.loader import (PRECISIONS, ServedPolicy, load_policy)
+
+__all__ = [
+    "EpisodeStats", "PolicyServer", "PRECISIONS", "ServedPolicy",
+    "bucket_for", "bucket_sizes", "check_parity", "load_policy",
+    "serve_episodes",
+]

@@ -1,0 +1,185 @@
+"""Checkpoint -> servable policy, with no training machinery.
+
+``load_policy`` is the deployment entry point: it reads a value-RL
+checkpoint written by ``repro.launch.rl_train.value_train``, validates
+the run flags against the sidecar metadata (a mismatch fails with an
+error naming the flag, never a missing-leaf ``KeyError`` from the tree
+restore), reconstructs the matching net through the shared
+:func:`repro.rl.inference.make_value_agent`, and restores ONLY the
+parameter (and, for conv, the frozen-normalizer) subtrees — the replay
+buffer, optimizer state and target net never leave the file.
+
+The partial restore works because ``checkpointer.restore`` walks the
+*template's* leaves: a ``None`` in the 6-tuple template
+``(params, target, opt, replay, env_state, obs)`` is an empty subtree,
+so only the requested positions are read back.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.core.policy import QuantPolicy, get_policy
+from repro.core.quantizer import quantize_params
+from repro.rl.envs.wrappers import (NormStats, merge_norm_stats,
+                                    norm_stats_of)
+from repro.rl.inference import (NETS, VALUE_ALGOS, ValueAgent, build_env,
+                                make_value_agent)
+from repro.rl.rollout import init_envs
+
+# serving precision points: (weight pack bits, apply-policy preset).
+# "w8" matches value_eval's fxp8 grid bit-for-bit (the parity the CI
+# smoke asserts); "w4" is the QuaRL-style int4 deployment sweep.
+PRECISIONS = {
+    "fp32": (None, None),
+    "w8": (8, "fxp8"),
+    "w4": (4, "w4a8"),
+}
+
+
+def _mismatch(ckpt_dir: str, flag: str, saved, asked) -> ValueError:
+    return ValueError(
+        f"checkpoint in {ckpt_dir} was saved by --{flag} {saved!r}, "
+        f"not {asked!r} — serve with the checkpoint's own flags "
+        f"(or omit --{flag} to take it from the metadata)")
+
+
+@dataclasses.dataclass
+class ServedPolicy:
+    """Everything serving needs, nothing training needs.
+
+    ``params`` is the restored fp32 tree; :meth:`pack` produces the
+    immutable ``QTensor`` weights actually shipped to the engine.
+    ``env`` is the frozen evaluation env (conv normalizer stats merged
+    and frozen) so episode slots see the training obs pipeline.
+    """
+
+    algo: str
+    net: str
+    env_name: str
+    frame_stack: int
+    step: int
+    metadata: Dict
+    agent: ValueAgent
+    params: object
+    env: object
+    norm_stats: Optional[NormStats] = None
+
+    @classmethod
+    def from_agent(cls, agent: ValueAgent, env_name: str,
+                   net: str = "mlp", frame_stack: int = 1,
+                   norm_stats: Optional[NormStats] = None
+                   ) -> "ServedPolicy":
+        """Wrap an in-process agent (``agent.params`` initialized) as a
+        servable policy — benchmarks and tests that measure the serving
+        machinery itself, where no checkpoint exists."""
+        if agent.params is None:
+            raise ValueError("from_agent needs initialized params "
+                             "(make_value_agent with a key)")
+        env = build_env(env_name, net, frame_stack,
+                        norm_stats=norm_stats)
+        return cls(algo=agent.algo, net=net, env_name=env_name,
+                   frame_stack=frame_stack, step=0, metadata={},
+                   agent=agent, params=agent.params, env=env,
+                   norm_stats=norm_stats)
+
+    def behaviour_params(self):
+        """The served subtree: the Q net, or the bare ddpg actor."""
+        return self.agent.behaviour_subtree(self.params)
+
+    def pack(self, precision: str = "w8"):
+        """(packed behaviour subtree, apply QuantPolicy | None).
+
+        ``w8``/``w4`` replace matmul weights with per-channel QTensors
+        (int8 container; two int4 codes per byte when stored) and pick
+        the apply policy whose activation grid matches training-time
+        fake-quant.  ``fp32`` serves the weights as restored.
+        """
+        if precision not in PRECISIONS:
+            raise ValueError(f"unknown serving precision {precision!r} "
+                             f"(expected one of {sorted(PRECISIONS)})")
+        bits, pol_name = PRECISIONS[precision]
+        bp = self.behaviour_params()
+        if bits is None:
+            return bp, None
+        packed = quantize_params(
+            bp, QuantPolicy(name=f"w{bits}", w_bits=bits,
+                            per_channel=True))
+        return packed, get_policy(pol_name)
+
+
+def load_policy(ckpt_dir: str, algo: Optional[str] = None,
+                net: Optional[str] = None,
+                env_name: Optional[str] = None,
+                step: Optional[int] = None) -> ServedPolicy:
+    """Reconstruct a servable policy from a value-RL checkpoint.
+
+    ``algo``/``net``/``env_name`` are optional cross-checks: ``None``
+    trusts the sidecar metadata; a non-``None`` value that disagrees
+    with the metadata raises a :class:`ValueError` naming the flag.
+    Metadata-free positions (older checkpoints) fall back to the
+    caller's value and fail loudly when neither side knows.
+    """
+    mgr = CheckpointManager(ckpt_dir)
+    step = step if step is not None else mgr.latest_step()
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    md = mgr.metadata(step)
+
+    def pick(flag: str, asked, default=None):
+        saved = md.get(flag, None)
+        if saved is None:
+            if asked is None and default is None:
+                raise ValueError(
+                    f"checkpoint in {ckpt_dir} predates '{flag}' "
+                    f"metadata — pass --{flag} explicitly")
+            return asked if asked is not None else default
+        saved = str(saved)
+        if asked is not None and str(asked) != saved:
+            raise _mismatch(ckpt_dir, flag, saved, asked)
+        return saved
+
+    algo = pick("algo", algo)
+    net = pick("net", net, default="mlp")
+    env_name = pick("env", env_name)
+    if algo not in VALUE_ALGOS:
+        raise ValueError(f"checkpoint in {ckpt_dir} holds --algo "
+                         f"{algo!r}; serving drives the value family "
+                         f"{VALUE_ALGOS}")
+    if net not in NETS:
+        raise ValueError(f"checkpoint in {ckpt_dir} holds --net "
+                         f"{net!r} (expected one of {NETS})")
+    frame_stack = int(md.get("frame_stack", 1))
+    tqc_drop = int(md.get("tqc_drop", 0))
+
+    # template agent: same init path as training, so the restore
+    # template's tree paths match the saved tree exactly
+    train_env = build_env(env_name, net, frame_stack)
+    agent = make_value_agent(algo, train_env.spec,
+                             key=jax.random.PRNGKey(0), net=net,
+                             tqc_drop=tqc_drop)
+
+    norm_stats = None
+    if net == "conv":
+        # conv checkpoints carry the Welford normalizer inside the env
+        # state (position 4 of the saved tuple); restore it alongside
+        # the params and freeze the merged stats for serving
+        n_envs = int(md.get("n_envs", 1))
+        est, _ = init_envs(train_env, jax.random.PRNGKey(0), n_envs)
+        (params, _, _, _, est, _), md = mgr.restore(
+            (agent.params, None, None, None, est, None), step=step)
+        norm_stats = merge_norm_stats(norm_stats_of(est))
+        env = build_env(env_name, net, frame_stack,
+                        norm_stats=norm_stats)
+    else:
+        (params, _, _, _, _, _), md = mgr.restore(
+            (agent.params, None, None, None, None, None), step=step)
+        env = build_env(env_name, net, frame_stack)
+
+    return ServedPolicy(algo=algo, net=net, env_name=env_name,
+                        frame_stack=frame_stack, step=int(step),
+                        metadata=dict(md), agent=agent, params=params,
+                        env=env, norm_stats=norm_stats)

@@ -1,0 +1,270 @@
+"""Policy-serving subsystem: int4 packing, micro-batching, checkpoint
+loading, and the serve-vs-eval parity guarantee."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.fxp import (QTensor, fxp_dtype, fxp_qmax, pack_nibbles,
+                            unpack_nibbles)
+from repro.core.policy import QuantPolicy, get_policy
+from repro.core.quantizer import quantize_params, quantized_nbytes
+from repro.launch.rl_train import value_train
+from repro.rl.inference import build_env, make_value_agent
+from repro.serve import (PolicyServer, ServedPolicy, bucket_for,
+                         bucket_sizes, check_parity, load_policy,
+                         serve_episodes)
+
+
+# ---------------------------------------------------------------------------
+# int4: grid, nibble packing, sub-byte storage accounting
+# ---------------------------------------------------------------------------
+
+def test_int4_quant_grid():
+    """4-bit codes live in an int8 container on the symmetric [-7, 7]
+    grid (qmax 7), the int4 analogue of int8's [-127, 127]."""
+    assert fxp_dtype(4) == jnp.int8
+    assert fxp_qmax(4) == 7.0
+    w = jax.random.normal(jax.random.PRNGKey(0), (32, 16))
+    qt = quantize_params({"w": w}, QuantPolicy(w_bits=4))["w"]
+    assert qt.bits == 4
+    q = np.asarray(qt.qvalue)
+    assert q.min() >= -7 and q.max() <= 7
+
+
+@pytest.mark.parametrize("n", [8, 9])          # even and odd counts
+def test_nibble_roundtrip(n):
+    q = jnp.arange(-7, -7 + n, dtype=jnp.int8) % 15 - 7
+    packed = pack_nibbles(q)
+    assert packed.dtype == jnp.uint8
+    assert packed.size == (n + 1) // 2
+    back = unpack_nibbles(packed, n)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(q))
+
+
+def test_quantized_nbytes_sub_byte():
+    """int4 QTensors count at their packed width: two codes per byte,
+    not the int8 container size."""
+    w = jax.random.normal(jax.random.PRNGKey(1), (64, 64))
+    q8 = quantize_params({"w": w}, QuantPolicy(w_bits=8))["w"]
+    q4 = quantize_params({"w": w}, QuantPolicy(w_bits=4))["w"]
+    s8, f8 = quantized_nbytes({"w": q8})
+    s4, f4 = quantized_nbytes({"w": q4})
+    assert f8 == f4 == 64 * 64 * 4
+    scales = 64 * 4                              # fp32 per-channel
+    assert s8 == 64 * 64 + scales
+    assert s4 == 64 * 64 // 2 + scales
+    # odd element counts round the payload up to whole bytes
+    odd = QTensor(jnp.zeros((3, 3), jnp.int8), jnp.ones((1, 3)), 4)
+    s_odd, _ = quantized_nbytes({"w": odd})
+    assert s_odd == (9 * 4 + 7) // 8 + 3 * 4
+
+
+def test_conv_kernels_pack_on_the_forward_grid():
+    """4D conv kernels take per-out-channel scales — the exact grid
+    ``conv2d_apply``'s fake-quant uses — while scan-stacked 3D layers
+    keep their per-(layer, channel) scales."""
+    wc = jax.random.normal(jax.random.PRNGKey(2), (3, 3, 8, 16))
+    qc = quantize_params({"w": wc}, QuantPolicy(w_bits=8))["w"]
+    assert qc.scale.shape == (1, 1, 1, 16)
+    ws = jax.random.normal(jax.random.PRNGKey(3), (4, 8, 16))
+    qs = quantize_params({"w": ws}, QuantPolicy(w_bits=8))["w"]
+    assert qs.scale.shape == (4, 1, 16)
+
+
+# ---------------------------------------------------------------------------
+# micro-batching: bucket ladder, padding, jit program cache
+# ---------------------------------------------------------------------------
+
+def test_bucket_ladder():
+    assert bucket_sizes(16) == [1, 2, 4, 8, 16]
+    assert bucket_sizes(1) == [1]
+    assert bucket_sizes(24) == [1, 2, 4, 8, 16, 24]
+    sizes = bucket_sizes(16)
+    assert bucket_for(1, sizes) == 1
+    assert bucket_for(3, sizes) == 4
+    assert bucket_for(16, sizes) == 16
+
+
+def _mlp_policy(algo="dqn", env_name="cartpole", seed=0):
+    env = build_env(env_name, "mlp")
+    agent = make_value_agent(algo, env.spec,
+                             key=jax.random.PRNGKey(seed), net="mlp")
+    return ServedPolicy.from_agent(agent, env_name)
+
+
+def test_microbatched_actions_match_direct_forward():
+    """Chunking + pad-to-bucket must not change a single action: a
+    40-request batch through max_bucket=16 equals the direct greedy
+    forward over all 40 observations."""
+    policy = _mlp_policy()
+    server = PolicyServer(policy, precision="w8", max_bucket=16)
+    obs = jax.random.normal(jax.random.PRNGKey(5), (40, 4))
+    served = server.act(obs)
+    direct = policy.agent.greedy(server.served_params, obs,
+                                 server.apply_policy)
+    np.testing.assert_array_equal(np.asarray(served),
+                                  np.asarray(direct))
+    # 40 = 16 + 16 + 8: two bucket sizes -> two compiled programs
+    assert set(server._jit_cache) == {16, 8}
+    assert server.stats()["requests"] == 40
+
+
+def test_one_program_per_bucket_size():
+    policy = _mlp_policy()
+    server = PolicyServer(policy, precision="fp32", max_bucket=8)
+    for n in (1, 2, 3, 5, 8, 11, 30):
+        server.act(jnp.zeros((n, 4)))
+    # every request shape mapped onto the ladder {1, 2, 4, 8}
+    assert set(server._jit_cache) <= {1, 2, 4, 8}
+    stats = server.stats()
+    assert stats["jit_programs"] == len(server._jit_cache)
+    assert stats["requests"] == 1 + 2 + 3 + 5 + 8 + 11 + 30
+
+
+def test_sampled_mode_respects_action_space():
+    policy = _mlp_policy()
+    server = PolicyServer(policy, precision="w8", mode="sample",
+                          temperature=0.7, max_bucket=8)
+    acts = np.asarray(server.act(jnp.zeros((12, 4))))
+    assert acts.shape == (12,)
+    assert set(np.unique(acts)) <= {0, 1}
+    env = build_env("pendulum", "mlp")
+    agent = make_value_agent("ddpg", env.spec,
+                             key=jax.random.PRNGKey(1), net="mlp")
+    bpolicy = ServedPolicy.from_agent(agent, "pendulum")
+    bserver = PolicyServer(bpolicy, precision="w8", mode="sample",
+                           temperature=0.5, max_bucket=8)
+    bacts = np.asarray(bserver.act(jnp.zeros((12, 3))))
+    assert bacts.shape == (12, 1)
+    assert (bacts >= agent.cfg.low - 1e-6).all()
+    assert (bacts <= agent.cfg.high + 1e-6).all()
+
+
+def test_serve_episodes_counts_and_stats():
+    policy = _mlp_policy()
+    server = PolicyServer(policy, precision="w8", max_bucket=8)
+    st = serve_episodes(server, episodes=6, n_slots=8, seed=0)
+    assert st.episodes >= 6
+    assert st.env_steps % 8 == 0
+    assert np.isfinite(st.mean_return)
+    s = st.server
+    assert s["requests"] == st.env_steps
+    assert s["actions_per_s"] > 0
+    assert s["p99_ms"] >= s["p50_ms"] > 0
+    assert s["model_bytes"] < s["model_fp32_bytes"]
+
+
+# ---------------------------------------------------------------------------
+# parity: packed serving == evaluation forward, bit for bit at w8
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("algo,env_name", [("dqn", "cartpole"),
+                                           ("qrdqn", "cartpole"),
+                                           ("ddpg", "pendulum")])
+def test_w8_parity_mlp(algo, env_name):
+    env = build_env(env_name, "mlp")
+    agent = make_value_agent(algo, env.spec,
+                             key=jax.random.PRNGKey(7), net="mlp")
+    policy = ServedPolicy.from_agent(agent, env_name)
+    assert check_parity(policy, "w8", n_obs=96) == 0
+
+
+def test_w8_parity_conv():
+    env = build_env("catch", "conv", 2)
+    agent = make_value_agent("dqn", env.spec,
+                             key=jax.random.PRNGKey(8), net="conv")
+    policy = ServedPolicy.from_agent(agent, "catch", net="conv",
+                                     frame_stack=2)
+    assert check_parity(policy, "w8", n_obs=64) == 0
+
+
+def test_w8_qvalues_bit_identical_not_just_argmax():
+    """The strong form: the full Q vectors match, so parity can't be an
+    argmax-robustness accident."""
+    env = build_env("cartpole", "mlp")
+    agent = make_value_agent("dqn", env.spec,
+                             key=jax.random.PRNGKey(9), net="mlp")
+    pol = get_policy("fxp8")
+    obs = jax.random.normal(jax.random.PRNGKey(10), (32, 4))
+    packed = quantize_params(agent.params,
+                             QuantPolicy(w_bits=8, per_channel=True))
+    q_eval = agent.qvals(agent.params, obs, pol)
+    q_serve = agent.qvals(packed, obs, pol)
+    assert jnp.array_equal(q_eval, q_serve)
+
+
+def test_parity_rejects_fp32():
+    policy = _mlp_policy()
+    with pytest.raises(ValueError, match="packed"):
+        check_parity(policy, "fp32")
+
+
+# ---------------------------------------------------------------------------
+# checkpoint loading: metadata validation on the serving path
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def dqn_ckpt(tmp_path_factory):
+    d = str(tmp_path_factory.mktemp("serve_ckpt") / "dqn")
+    value_train("dqn", "cartpole", iters=6, n_envs=4, rollout_len=2,
+                learn_start=8, ckpt_dir=d, save_every=5, verbose=False)
+    return d
+
+
+def test_load_policy_roundtrip(dqn_ckpt):
+    policy = load_policy(dqn_ckpt)
+    assert (policy.algo, policy.net, policy.env_name) == \
+        ("dqn", "mlp", "cartpole")
+    assert policy.step == 5
+    assert policy.metadata["algo"] == "dqn"
+    # the restored params drive the server end to end
+    server = PolicyServer(policy, precision="w8", max_bucket=4)
+    st = serve_episodes(server, episodes=2, n_slots=4)
+    assert st.episodes >= 2
+    assert check_parity(policy, "w8", n_obs=32) == 0
+
+
+@pytest.mark.parametrize("kw,wrong,flag", [
+    ("algo", "qrdqn", "--algo"),
+    ("net", "conv", "--net"),
+    ("env_name", "acrobot", "--env"),
+])
+def test_load_policy_names_the_mismatched_flag(dqn_ckpt, kw, wrong,
+                                               flag):
+    """A wrong flag fails with the launcher's own error naming the
+    flag — never a missing-leaf KeyError from the tree restore."""
+    with pytest.raises(ValueError, match=flag):
+        load_policy(dqn_ckpt, **{kw: wrong})
+
+
+def test_load_policy_missing_dir(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        load_policy(str(tmp_path / "nope"))
+
+
+def test_value_train_resume_rejects_net_mismatch(dqn_ckpt):
+    """Resuming a checkpoint under a different --net fails with the
+    launcher error naming --net (the obs pipeline differs), before any
+    tree restore is attempted."""
+    with pytest.raises(ValueError, match="--net"):
+        value_train("dqn", "catch", iters=1, n_envs=4, rollout_len=2,
+                    ckpt_dir=dqn_ckpt, net="conv", frame_stack_k=2,
+                    verbose=False)
+    with pytest.raises(ValueError, match="--env"):
+        value_train("dqn", "acrobot", iters=1, n_envs=4, rollout_len=2,
+                    ckpt_dir=dqn_ckpt, verbose=False)
+
+
+def test_serve_precision_names(dqn_ckpt):
+    policy = load_policy(dqn_ckpt)
+    with pytest.raises(ValueError, match="precision"):
+        policy.pack("w2")
+    packed, pol = policy.pack("w4")
+    qts = [l for l in jax.tree.leaves(
+        packed, is_leaf=lambda l: isinstance(l, QTensor))
+        if isinstance(l, QTensor)]
+    assert qts and all(q.bits == 4 for q in qts)
+    assert pol.a_bits == 8
