@@ -1,0 +1,26 @@
+"""repro.analysis — static invariant checker for the quantized RL stack.
+
+Two modes, one CLI (``python -m repro.analysis``), both CI-gated:
+
+* **lint** (:mod:`repro.analysis.lint`) — AST rules over ``src/repro``
+  that ruff cannot express because they need repo conventions and a
+  cross-module jit-reachability graph: raw matmuls outside the blessed
+  Q-MAC entry points (QF101), Python control flow on likely tracers
+  (QF201), nondeterminism inside jit-reachable code (QF301), jitted
+  state-threading loops without donation (QF401), and env wrappers that
+  bypass the ``wrapper_stack`` tagging protocol (QF501).  Audited
+  exceptions live in ``allowlist.toml`` next to this file; unlisted
+  findings fail, stale entries fail too.
+
+* **trace** (:mod:`repro.analysis.trace_audit`) — abstract evaluation
+  (``jax.eval_shape`` / ``jax.make_jaxpr`` / ``jit.lower``, no real
+  FLOPs) over every (env x net x algo x precision) combination the
+  training CLI accepts: no 64-bit or weak-type promotion in the traced
+  step (QF901), every packed QTensor on its consumer's per-out-channel
+  scale grid (QF902 — the PR 6 conv-bug class, checked for all current
+  and future layers), exactly one compiled program per serving bucket
+  (QF903), and donation that actually survives lowering (QF904).
+"""
+from repro.analysis.rules import Finding, RULES, rule_ids
+
+__all__ = ["Finding", "RULES", "rule_ids"]

@@ -1,0 +1,60 @@
+"""QF301 — host-side nondeterminism inside jit-reachable code.
+
+Randomness in traced code must flow through ``jax.random`` keys
+(``fold_in``/``split``) so runs are reproducible and resumable;
+``numpy.random``/stdlib ``random`` draw from hidden host state that is
+baked in at trace time, and wall-clock reads (``time.time`` et al.)
+make the compiled program depend on when it was traced.  Host-level
+timing *outside* traced code (e.g. serving latency measurement) is
+fine and not flagged.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from repro.analysis.rules import (Finding, LintContext, dotted_name,
+                                  resolve_dotted)
+from repro.analysis.rules.tracer_control import _own_statements
+
+RULE_ID = "QF301"
+SUMMARY = ("numpy.random / stdlib random / wall-clock read in "
+           "jit-reachable code (thread jax.random keys instead)")
+
+BANNED_EXACT = {
+    "time.time", "time.time_ns", "time.perf_counter",
+    "time.perf_counter_ns", "time.monotonic", "time.monotonic_ns",
+    "datetime.datetime.now", "datetime.datetime.utcnow",
+    "datetime.date.today",
+}
+BANNED_PREFIXES = ("numpy.random.", "random.")
+
+
+def _banned(resolved: str) -> bool:
+    if resolved.startswith("jax."):
+        return False                      # jax.random is the fix
+    if resolved in BANNED_EXACT:
+        return True
+    return any(resolved.startswith(p) for p in BANNED_PREFIXES)
+
+
+def check(ctx: LintContext) -> List[Finding]:
+    findings: List[Finding] = []
+    for f in ctx.files:
+        for qn, info in f.functions.items():
+            if not ctx.is_reachable(f.rel, qn):
+                continue
+            for node in _own_statements(info.node):
+                if not isinstance(node, ast.Call):
+                    continue
+                name = dotted_name(node.func)
+                if name is None:
+                    continue
+                resolved = resolve_dotted(name, f.imports)
+                if _banned(resolved):
+                    findings.append(Finding(
+                        f.rel, node.lineno, RULE_ID,
+                        f"nondeterministic `{name}` in jit-reachable "
+                        f"`{qn}` — use jax.random with fold_in keys",
+                        qn))
+    return findings

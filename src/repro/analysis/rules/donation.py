@@ -1,0 +1,150 @@
+"""QF401 — jitted state-threading loops must declare buffer donation.
+
+A jitted step that takes a buffer-sized pytree (optimizer state,
+replay buffer, observation bank, ...) and returns its updated version
+holds *two* copies live across every call unless the input is donated.
+The rule flags ``jax.jit`` sites — decorator, ``partial(jax.jit, ...)``
+or direct call on a locally-defined function — where the wrapped
+function threads a known state-pytree name through to its return value
+without ``donate_argnums``/``donate_argnames``.
+
+Deliberately narrow: ``params`` is *not* a state name (packed actor
+weights may alias parameter leaves, making donation unsafe), and only
+returns of *bare names* count — a function returning fresh computed
+values isn't threading state.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional, Set
+
+from repro.analysis.rules import (Finding, LintContext, dotted_name,
+                                  func_params, resolve_dotted)
+
+RULE_ID = "QF401"
+SUMMARY = ("jax.jit threads a buffer-sized state pytree without "
+           "donate_argnums")
+
+# parameter names that carry buffer-sized threaded state in this repo
+STATE_NAMES = {
+    "opt", "opt_state", "buf", "buffer", "replay", "target", "est",
+    "env_state", "obs", "state", "caches", "rb_state",
+}
+JIT_NAMES = {"jax.jit", "jax.pmap"}
+PARTIAL_NAMES = {"functools.partial", "partial"}
+DONATE_KWS = {"donate_argnums", "donate_argnames"}
+
+
+def _jit_call_kwargs(call: ast.Call, imports) -> Optional[Set[str]]:
+    """If ``call`` is jax.jit(...) or partial(jax.jit, ...), return the
+    set of keyword names it passes; else None."""
+    name = dotted_name(call.func)
+    if name is None:
+        return None
+    resolved = resolve_dotted(name, imports)
+    if resolved in JIT_NAMES:
+        return {kw.arg for kw in call.keywords if kw.arg}
+    if resolved in PARTIAL_NAMES and call.args:
+        inner = dotted_name(call.args[0])
+        if inner and resolve_dotted(inner, imports) in JIT_NAMES:
+            return {kw.arg for kw in call.keywords if kw.arg}
+    return None
+
+
+def _returned_bare_names(func: ast.AST) -> Set[str]:
+    names: Set[str] = set()
+    for node in ast.walk(func):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda)) and node is not func:
+            continue
+        if isinstance(node, ast.Return) and node.value is not None:
+            vals = (node.value.elts
+                    if isinstance(node.value, ast.Tuple)
+                    else [node.value])
+            for v in vals:
+                if isinstance(v, ast.Name):
+                    names.add(v.id)
+    return names
+
+
+def _threaded_state(func: ast.AST) -> Set[str]:
+    params = set(func_params(func))
+    return (params & STATE_NAMES) & _returned_bare_names(func)
+
+
+def check(ctx: LintContext) -> List[Finding]:
+    findings: List[Finding] = []
+    for f in ctx.files:
+        # qualname lookup by def node, and by (scope, name) for
+        # resolving jax.jit(fn) on a local function
+        by_node = {id(info.node): qn
+                   for qn, info in f.functions.items()}
+        by_name = {}
+        for _qn, info in f.functions.items():
+            if isinstance(info.node, (ast.FunctionDef,
+                                      ast.AsyncFunctionDef)):
+                by_name.setdefault(info.node.name, info)
+
+        def flag(func_node, qn, threaded, rel=f.rel):
+            findings.append(Finding(
+                rel, func_node.lineno, RULE_ID,
+                f"jit of `{qn}` threads state "
+                f"{sorted(threaded)} without donate_argnums",
+                qn))
+
+        # 1) decorator sites
+        for qn, info in f.functions.items():
+            node = info.node
+            if isinstance(node, ast.Lambda):
+                continue
+            for dec in node.decorator_list:
+                kwargs = None
+                if isinstance(dec, ast.Call):
+                    kwargs = _jit_call_kwargs(dec, f.imports)
+                else:
+                    name = dotted_name(dec)
+                    if name and resolve_dotted(
+                            name, f.imports) in JIT_NAMES:
+                        kwargs = set()
+                if kwargs is None:
+                    continue
+                if kwargs & DONATE_KWS:
+                    continue
+                threaded = _threaded_state(node)
+                if threaded:
+                    flag(node, qn, threaded)
+
+        # 2) direct jax.jit(local_fn, ...) call sites
+        for node in ast.walk(f.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            kwargs = _jit_call_kwargs(node, f.imports)
+            if kwargs is None or kwargs & DONATE_KWS:
+                continue
+            # the wrapped function: first positional arg (or second,
+            # after jax.jit itself, for the partial form)
+            name = dotted_name(node.func)
+            resolved = resolve_dotted(name, f.imports) if name else ""
+            args = node.args
+            target = (args[1] if resolved in PARTIAL_NAMES
+                      and len(args) > 1
+                      else args[0] if resolved in JIT_NAMES and args
+                      else None)
+            if not isinstance(target, ast.Name):
+                continue
+            info = by_name.get(target.id)
+            if info is None:
+                continue
+            threaded = _threaded_state(info.node)
+            if threaded:
+                flag(node, by_node.get(id(info.node), target.id),
+                     threaded)
+
+    # a def can carry the decorator AND appear in a call — dedupe
+    seen, out = set(), []
+    for fd in findings:
+        key = (fd.path, fd.qualname)
+        if key not in seen:
+            seen.add(key)
+            out.append(fd)
+    return out

@@ -115,7 +115,7 @@ def restore(path: str, like: Any,
         sleaves = [None] * len(flat)
 
     leaves = []
-    for (p, leaf), shard in zip(flat, sleaves):
+    for (p, _leaf), shard in zip(flat, sleaves, strict=True):
         key = _path_str(p)
         meta = side["leaves"].get(key)
         if meta is None:

@@ -58,7 +58,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     result = {
         "arch": arch, "shape": shape_name, "status": "ok",
         "mesh": dict(zip(mesh.axis_names,
-                         (int(s) for s in mesh.devices.shape))),
+                         (int(s) for s in mesh.devices.shape), strict=True)),
         "step": meta["step"], "policy": policy_name,
         "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
         "memory": mem, "cost": cost, "roofline": roof,

@@ -32,5 +32,5 @@ def make_host_mesh(n_devices: Optional[int] = None):
 
 
 def describe(mesh) -> str:
-    return (f"mesh {dict(zip(mesh.axis_names, mesh.devices.shape))} "
+    return (f"mesh {dict(zip(mesh.axis_names, mesh.devices.shape, strict=True))} "
             f"({mesh.devices.size} devices)")

@@ -38,7 +38,6 @@ from __future__ import annotations
 
 import argparse
 import time
-from functools import partial
 from typing import Optional
 
 import jax
@@ -51,11 +50,10 @@ from repro.distributed.sharding import data_axis_size
 from repro.launch.mesh import describe, make_host_mesh, make_production_mesh
 from repro.models import hrl
 from repro.nn.module import unbox
-from repro.optim import AdamWConfig, adamw_init, adamw_update, constant
-from repro.rl import PPOConfig, batch_from_traj, init_envs
-from repro.rl.actor_learner import (VersionBuffer, collect_sharded,
-                                    fleet_mask, pack_weights, sync_bytes,
-                                    unpack_weights)
+from repro.optim import AdamWConfig, adamw_init, constant
+from repro.rl import PPOConfig, init_envs
+from repro.rl.actor_learner import (VersionBuffer, pack_weights,
+                                    sync_bytes)
 from repro.rl.dists import distribution_for
 # the inference layer (env stack + net reconstruction + action heads)
 # is shared with repro.serve — the historical rl_train names re-export
@@ -67,12 +65,12 @@ from repro.rl.envs.spaces import head_dim
 from repro.rl.envs.wrappers import NormStats
 from repro.rl.nets import (conv_ac_apply, conv_ac_init, mlp_ac_apply,
                            mlp_ac_init)
-from repro.rl.ppo import a2c_loss, minibatch_epochs, ppo_loss, stage_mask
+from repro.rl.ppo import a2c_loss, ppo_loss, stage_mask
 from repro.rl.replay import KINDS as REPLAY_KINDS
 from repro.rl.replay import make_replay, replay_size
-from repro.rl.rollout import episode_returns, episode_returns_from
-from repro.rl.value import (ddpg_actor_loss, ddpg_critic_loss_td,
-                            epsilon, nstep_targets, polyak)
+from repro.rl.rollout import episode_returns_from
+from repro.rl.train_steps import (make_onpolicy_iteration,
+                                  make_value_iteration)
 
 
 def make_agent(agent: str, env: Environment, key,
@@ -220,34 +218,15 @@ def rl_train(env_name: str = "cartpole", agent: str = "mlp",
                       f"(stage {md_stage}, iter {it} done)")
 
     versions = VersionBuffer(max_lag)
-    learner_apply = lambda p, o: apply_fn(p, o, None)
     # synchronous driver: every device delivers; the mask still flows
     # through the loss so an async aggregator only has to flip bits
     alive = jnp.ones((n_slots,), bool)
 
     total_sync_payload = 0
 
-    @jax.jit
-    def iteration(params, opt, est, obs, packed, key, gmask, alive):
-        k1, k2 = jax.random.split(key)
-        res = collect_sharded(packed, env, apply_fn, a_policy, k1, est,
-                              obs, rollout_len, mesh, dist)
-        mask = fleet_mask(alive, n_envs // n_slots)
-        # the learner's fp32 value head prices the truncation bootstrap
-        batch = batch_from_traj(res.traj, res.last_value, pcfg,
-                                actor_mask=mask,
-                                value_fn=lambda o: learner_apply(params,
-                                                                 o)[1])
-
-        def opt_step(p, s, g):
-            p, s, _ = adamw_update(g, s, p, sched, ocfg)
-            return p, s
-
-        params, opt, stats = minibatch_epochs(
-            k2, params, opt, batch, learner_apply, pcfg, opt_step,
-            loss_fn=loss_fn, grad_mask=gmask, dist=dist)
-        ret, n_ep = episode_returns(res.traj)
-        return params, opt, res.final_env, res.final_obs, ret, n_ep
+    iteration = make_onpolicy_iteration(
+        env, apply_fn, a_policy, mesh, dist, pcfg, loss_fn, sched,
+        ocfg, rollout_len=rollout_len, n_envs=n_envs, n_slots=n_slots)
 
     history = []
     t0 = time.time()
@@ -474,73 +453,12 @@ def value_train(algo: str = "dqn", env_name: str = "cartpole",
                 print(f"resumed at iter {start} "
                       f"(replay size {int(replay_size(buf))})")
 
-    # donate the threaded state: without it XLA copies the whole
-    # replay buffer (capacity x obs, the dominant allocation) on every
-    # iteration just to apply the circular write.  `params` is NOT
-    # donated — `packed` aliases its unquantized leaves (biases, or the
-    # whole tree under fp32 actors), and a buffer cannot be both
-    # donated and passed as a second argument
-    @partial(jax.jit, donate_argnums=(1, 2, 3, 5, 6))
-    def iteration(params, target, opt, buf, packed, est, obs, key, it):
-        k_collect, k_update = jax.random.split(key)
-        actor_params = unpack_weights(packed)
-        eps = (epsilon(it * rollout_len, cfg) if discrete
-               else jnp.zeros(()))
-
-        def one_full(carry, k):
-            est, o = carry
-            a = agent.behave(actor_params, o, k, eps, a_policy)
-            est, nxt, r, d, tr, fo = jax.vmap(env.step)(est, a)
-            return (est, nxt), (o, a, r, d, tr, fo)
-
-        keys = jax.random.split(k_collect, rollout_len)
-        (est, obs), (O, A, R, D, Tr, FO) = jax.lax.scan(
-            one_full, (est, obs), keys)
-
-        rets, nxt, disc = nstep_targets(R, D, Tr, FO, cfg.gamma,
-                                        cfg.n_step)
-        T, B = R.shape
-        flat = lambda x: x.reshape((T * B,) + x.shape[2:])
-        buf = rb.add(buf, flat(O), flat(A), flat(rets), flat(nxt),
-                     flat(disc))
-
-        # PER bias correction anneals toward full (beta=1) over the
-        # run; uniform ignores it (python literal, compiles away)
-        beta = (per_beta0 + (1.0 - per_beta0)
-                * jnp.clip(it / beta_iters, 0.0, 1.0)
-                if rb.prioritized else 1.0)
-
-        def opt_step(p, s, g):
-            p, s, _ = adamw_update(g, s, p, sched, ocfg)
-            return p, s
-
-        for _ in range(updates_per_iter):
-            k_update, k_s, k_n = jax.random.split(k_update, 3)
-            batch = rb.sample(buf, k_s, cfg.batch_size,
-                              min_size=cfg.learn_start, beta=beta)
-            if algo == "ddpg":
-                g_c, td = jax.grad(ddpg_critic_loss_td, has_aux=True)(
-                    params["critic"], target["critic"], target["actor"],
-                    agent.critic_apply, agent.act, batch, cfg, k_n)
-                c_p, c_s = opt_step(params["critic"], opt["critic"], g_c)
-                g_a = jax.grad(ddpg_actor_loss)(
-                    params["actor"], c_p, agent.critic_apply, agent.act,
-                    batch)
-                a_p, a_s = opt_step(params["actor"], opt["actor"], g_a)
-                params = {"actor": a_p, "critic": c_p}
-                opt = {"actor": a_s, "critic": c_s}
-                target = polyak(target, params, cfg.tau)
-            else:
-                g, td = jax.grad(agent.loss_fn, has_aux=True)(
-                    params, target,
-                    lambda p, o: agent.q_apply(p, o, None), batch, cfg)
-                params, opt = opt_step(params, opt, g)
-                target = polyak(target, params, cfg.target_tau)
-            # priority refresh from the fresh TD errors (uniform: no-op)
-            buf = rb.update(buf, batch["indices"], td)
-
-        ret, n_ep = episode_returns_from(R, D | Tr)
-        return params, target, opt, buf, est, obs, ret, n_ep
+    # the donation contract (threaded replay/target/env state) lives
+    # with the step itself — see repro.rl.train_steps
+    iteration = make_value_iteration(
+        env, agent, rb, a_policy, sched, ocfg, algo=algo,
+        rollout_len=rollout_len, updates_per_iter=updates_per_iter,
+        per_beta0=per_beta0, beta_iters=beta_iters)
 
     history = []
     total_sync_payload = 0

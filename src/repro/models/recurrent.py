@@ -130,7 +130,7 @@ def forward(params, tokens: Array, cfg: ArchConfig,
             super_body, policy=jax.checkpoint_policies.nothing_saveable)
     x, _ = jax.lax.scan(lambda h, p: (super_body(p, h), None), x,
                         params["supers"])
-    for p, kind in zip(params.get("tail", []), tail):
+    for p, kind in zip(params.get("tail", []), tail, strict=True):
         x = _sub_apply(p, x, kind, cfg, policy, positions)
     x = rmsnorm_apply(params["ln_f"], x)
     if return_hidden:
@@ -222,7 +222,7 @@ def prefill(params, tokens: Array, cfg: ArchConfig,
     caches = {"supers": super_caches}
     if tail:
         tail_caches = []
-        for p, kind in zip(params["tail"], tail):
+        for p, kind in zip(params["tail"], tail, strict=True):
             x, c = sub_prefill(p, x, kind)
             tail_caches.append(c)
         caches["tail"] = tail_caches
@@ -252,7 +252,7 @@ def decode_step(params, token: Array, caches, index, cfg: ArchConfig,
     out_caches = {"supers": super_caches}
     if tail:
         tail_caches = []
-        for p, kind, c in zip(params["tail"], tail, caches["tail"]):
+        for p, kind, c in zip(params["tail"], tail, caches["tail"], strict=True):
             x, c = _sub_decode(p, x, kind, cfg, policy, c, index, kv_bits)
             tail_caches.append(c)
         out_caches["tail"] = tail_caches

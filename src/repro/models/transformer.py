@@ -151,7 +151,8 @@ def forward(params, tokens: Array, cfg: ArchConfig,
                             x, params["blocks"])
     else:
         for i in range(cfg.n_layers):
-            x = body(jax.tree.map(lambda l: l[i], params["blocks"]), x)
+            x = body(jax.tree.map(lambda l, i=i: l[i],
+                                  params["blocks"]), x)
 
     x = rmsnorm_apply(params["ln_f"], x)
     if return_hidden:

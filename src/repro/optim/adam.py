@@ -73,7 +73,7 @@ def adamw_update(grads, state, params, schedule: Callable,
     flat_nu = tdef.flatten_up_to(state["nu"])
     flat_p = tdef.flatten_up_to(params)
     out = [upd(g, m, n, p) for g, m, n, p in
-           zip(flat_g, flat_mu, flat_nu, flat_p)]
+           zip(flat_g, flat_mu, flat_nu, flat_p, strict=True)]
     new_params = tdef.unflatten([o[0] for o in out])
     new_state = {
         "mu": tdef.unflatten([o[1] for o in out]),

@@ -156,7 +156,7 @@ def collect_sharded(packed, env: Environment, apply_fn: Callable,
         raise ValueError(
             f"n_envs={B} does not divide evenly over the mesh's "
             f"{n_slots} data slot(s) "
-            f"({dict(zip(mesh.axis_names, mesh.devices.shape))})")
+            f"({dict(zip(mesh.axis_names, mesh.devices.shape, strict=True))})")
     if dist is None:
         dist = distribution_for(env.action_space)
 

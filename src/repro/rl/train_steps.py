@@ -1,0 +1,147 @@
+"""Jitted per-iteration step functions for both training families.
+
+Factories, not loose functions: each returns the *already-jitted*
+iteration with the donation contract baked in, closing over everything
+that is static for a run (env, nets, optimizer config, replay
+backend).  Extracted from ``launch/rl_train.py`` so that
+
+* the drivers stay orchestration-only (checkpoint flow, logging,
+  weight-sync bookkeeping), and
+* the trace audit (:mod:`repro.analysis.trace_audit`) can lower the
+  real step functions abstractly — the exact programs training runs —
+  and assert dtype/donation invariants on them without running a
+  single iteration.
+
+Donation contracts (QF401):
+
+* on-policy ``iteration(params, opt, est, obs, packed, key, gmask,
+  alive)`` donates ``opt``/``est``/``obs`` (argnums 1-3) — the
+  threaded state.  ``params`` is NOT donated: ``packed`` aliases its
+  unquantized leaves (biases, or the whole tree under fp32 actors),
+  and a buffer cannot be both donated and passed again.
+* value-based ``iteration(params, target, opt, buf, packed, est, obs,
+  key, it)`` donates ``target``/``opt``/``buf``/``est``/``obs``
+  (argnums 1, 2, 3, 5, 6) — without it XLA copies the whole replay
+  buffer (capacity x obs, the dominant allocation) every iteration
+  just to apply the circular write.  Same ``params``/``packed``
+  aliasing caveat.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import adamw_update
+from repro.rl.actor_learner import (collect_sharded, fleet_mask,
+                                    unpack_weights)
+from repro.rl.ppo import batch_from_traj, minibatch_epochs
+from repro.rl.rollout import episode_returns, episode_returns_from
+from repro.rl.value import (ddpg_actor_loss, ddpg_critic_loss_td,
+                            epsilon, nstep_targets, polyak)
+
+
+def make_onpolicy_iteration(env, apply_fn, a_policy, mesh, dist, pcfg,
+                            loss_fn, sched, ocfg, *, rollout_len: int,
+                            n_envs: int, n_slots: int):
+    """One sharded-collect + minibatch-update step (ppo / a2c)."""
+    learner_apply = lambda p, o: apply_fn(p, o, None)  # noqa: E731
+
+    @partial(jax.jit, donate_argnums=(1, 2, 3))
+    def iteration(params, opt, est, obs, packed, key, gmask, alive):
+        k1, k2 = jax.random.split(key)
+        res = collect_sharded(packed, env, apply_fn, a_policy, k1, est,
+                              obs, rollout_len, mesh, dist)
+        mask = fleet_mask(alive, n_envs // n_slots)
+        # the learner's fp32 value head prices the truncation bootstrap
+        batch = batch_from_traj(res.traj, res.last_value, pcfg,
+                                actor_mask=mask,
+                                value_fn=lambda o: learner_apply(params,
+                                                                 o)[1])
+
+        def opt_step(p, s, g):
+            p, s, _ = adamw_update(g, s, p, sched, ocfg)
+            return p, s
+
+        params, opt, stats = minibatch_epochs(
+            k2, params, opt, batch, learner_apply, pcfg, opt_step,
+            loss_fn=loss_fn, grad_mask=gmask, dist=dist)
+        ret, n_ep = episode_returns(res.traj)
+        return params, opt, res.final_env, res.final_obs, ret, n_ep
+
+    return iteration
+
+
+def make_value_iteration(env, agent, rb, a_policy, sched, ocfg, *,
+                         algo: str, rollout_len: int,
+                         updates_per_iter: int, per_beta0: float,
+                         beta_iters: int):
+    """One collect-into-replay + sampled-updates step (dqn / qrdqn /
+    ddpg)."""
+    cfg = agent.cfg
+    discrete = agent.discrete
+
+    @partial(jax.jit, donate_argnums=(1, 2, 3, 5, 6))
+    def iteration(params, target, opt, buf, packed, est, obs, key, it):
+        k_collect, k_update = jax.random.split(key)
+        actor_params = unpack_weights(packed)
+        eps = (epsilon(it * rollout_len, cfg) if discrete
+               else jnp.zeros(()))
+
+        def one_full(carry, k):
+            est, o = carry
+            a = agent.behave(actor_params, o, k, eps, a_policy)
+            est, nxt, r, d, tr, fo = jax.vmap(env.step)(est, a)
+            return (est, nxt), (o, a, r, d, tr, fo)
+
+        keys = jax.random.split(k_collect, rollout_len)
+        (est, obs), (O, A, R, D, Tr, FO) = jax.lax.scan(
+            one_full, (est, obs), keys)
+
+        rets, nxt, disc = nstep_targets(R, D, Tr, FO, cfg.gamma,
+                                        cfg.n_step)
+        T, B = R.shape
+        flat = lambda x: x.reshape((T * B,) + x.shape[2:])  # noqa: E731
+        buf = rb.add(buf, flat(O), flat(A), flat(rets), flat(nxt),
+                     flat(disc))
+
+        # PER bias correction anneals toward full (beta=1) over the
+        # run; uniform ignores it (python literal, compiles away)
+        beta = (per_beta0 + (1.0 - per_beta0)
+                * jnp.clip(it / beta_iters, 0.0, 1.0)
+                if rb.prioritized else 1.0)
+
+        def opt_step(p, s, g):
+            p, s, _ = adamw_update(g, s, p, sched, ocfg)
+            return p, s
+
+        for _ in range(updates_per_iter):
+            k_update, k_s, k_n = jax.random.split(k_update, 3)
+            batch = rb.sample(buf, k_s, cfg.batch_size,
+                              min_size=cfg.learn_start, beta=beta)
+            if algo == "ddpg":
+                g_c, td = jax.grad(ddpg_critic_loss_td, has_aux=True)(
+                    params["critic"], target["critic"], target["actor"],
+                    agent.critic_apply, agent.act, batch, cfg, k_n)
+                c_p, c_s = opt_step(params["critic"], opt["critic"], g_c)
+                g_a = jax.grad(ddpg_actor_loss)(
+                    params["actor"], c_p, agent.critic_apply, agent.act,
+                    batch)
+                a_p, a_s = opt_step(params["actor"], opt["actor"], g_a)
+                params = {"actor": a_p, "critic": c_p}
+                opt = {"actor": a_s, "critic": c_s}
+                target = polyak(target, params, cfg.tau)
+            else:
+                g, td = jax.grad(agent.loss_fn, has_aux=True)(
+                    params, target,
+                    lambda p, o: agent.q_apply(p, o, None), batch, cfg)
+                params, opt = opt_step(params, opt, g)
+                target = polyak(target, params, cfg.target_tau)
+            # priority refresh from the fresh TD errors (uniform: no-op)
+            buf = rb.update(buf, batch["indices"], td)
+
+        ret, n_ep = episode_returns_from(R, D | Tr)
+        return params, target, opt, buf, est, obs, ret, n_ep
+
+    return iteration

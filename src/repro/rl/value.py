@@ -147,7 +147,7 @@ def nstep_targets(rewards: Array, dones: Array, truncated: Array,
     open_ = ~boundary                                # window extendable
 
     for k in range(1, min(n, T)):
-        def shift(x, fill):
+        def shift(x, fill, k=k):
             pad = jnp.full((k,) + x.shape[1:], fill, x.dtype)
             return jnp.concatenate([x[k:], pad], axis=0)
 

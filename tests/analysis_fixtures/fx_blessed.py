@@ -1,0 +1,6 @@
+"""Blessed contraction module for the QF101 fixture config."""
+import jax.numpy as jnp
+
+
+def q_matmul(x, w):
+    return jnp.dot(x, w)          # blessed module: never flagged

@@ -1,0 +1,18 @@
+"""QF101 fixture: raw contractions in a quantized data-path module."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def bad_head(w, x):
+    return jnp.dot(x, w)          # QF101 positive: raw contraction
+
+
+@jax.jit
+def bad_operator(w, x):
+    return x @ w                  # QF101 positive: MatMult
+
+
+@jax.jit
+def good_elementwise(w, x):
+    return jnp.add(x, w)          # negative: not a contraction

@@ -1,0 +1,47 @@
+"""QF201 fixture: Python control flow on tracers in jit-reachable code."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def bad_branch(x):
+    if x.sum() > 0:               # QF201 positive: tracer in `if`
+        return x
+    return -x
+
+
+@jax.jit
+def bad_len(x):
+    y = jnp.tanh(x)
+    return len(y)                 # QF201 positive: len() on tracer
+
+
+def scan_body(carry, x):
+    if carry.sum() > 0:           # QF201 positive: reachable via scan
+        return carry, x
+    return carry, -x
+
+
+def drive(xs):
+    return jax.lax.scan(scan_body, jnp.zeros(3), xs)
+
+
+@jax.jit
+def good_static(x, n: int):
+    if x.shape[0] > n:            # negative: shape is static
+        return x * 2.0
+    return x
+
+
+@jax.jit
+def good_none_guard(x, mask=None):
+    if mask is None:              # negative: `is None` is concrete
+        return x
+    return x * mask
+
+
+def table_lookup(x):
+    y = jnp.abs(x)
+    if y.mean() > 0:              # negative: not jit-reachable
+        return y
+    return -y

@@ -1,0 +1,30 @@
+"""QF301 fixture: nondeterministic host calls in jit-reachable code."""
+import random
+import time
+
+import jax
+import numpy as np
+
+
+@jax.jit
+def bad_noise(x):
+    return x + np.random.rand()   # QF301 positive: numpy.random
+
+
+@jax.jit
+def bad_clock(x):
+    return x * time.time()        # QF301 positive: wall clock
+
+
+@jax.jit
+def bad_shuffle(x):
+    return x + random.random()    # QF301 positive: stdlib random
+
+
+@jax.jit
+def good_noise(x, key):
+    return x + jax.random.normal(key, x.shape)   # negative: jax.random
+
+
+def host_timer():
+    return time.time()            # negative: not jit-reachable

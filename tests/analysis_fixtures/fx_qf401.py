@@ -1,0 +1,24 @@
+"""QF401 fixture: jitted state threading without donation."""
+from functools import partial
+
+import jax
+
+
+@jax.jit
+def bad_step(params, buf):
+    buf = buf.at[0].set(params["w"].sum())
+    return params, buf            # QF401 positive: buf not donated
+
+
+@partial(jax.jit, donate_argnums=(1,))
+def good_step(params, buf):
+    buf = buf.at[0].set(params["w"].sum())
+    return params, buf            # negative: donated
+
+
+def _local_update(state):
+    return state
+
+
+bad_jit = jax.jit(_local_update)  # QF401 positive: call site
+good_jit = jax.jit(_local_update, donate_argnums=(0,))   # negative

@@ -24,7 +24,7 @@ def tree_example():
 def assert_tree_equal(a, b):
     la = jax.tree.leaves(a, is_leaf=lambda x: isinstance(x, QTensor))
     lb = jax.tree.leaves(b, is_leaf=lambda x: isinstance(x, QTensor))
-    for x, y in zip(la, lb):
+    for x, y in zip(la, lb, strict=True):
         if isinstance(x, QTensor):
             np.testing.assert_array_equal(np.asarray(x.qvalue),
                                           np.asarray(y.qvalue))

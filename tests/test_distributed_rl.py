@@ -51,7 +51,7 @@ def test_one_device_shard_map_bit_exact_vs_plain_rollout():
                           16, mesh)
     ref = collect(packed, env, mlp_ac_apply, FXP8,
                   jax.random.fold_in(key, 0), est, obs, 16)
-    for a, b in zip(jax.tree.leaves(res), jax.tree.leaves(ref)):
+    for a, b in zip(jax.tree.leaves(res), jax.tree.leaves(ref), strict=True):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
@@ -159,7 +159,7 @@ def test_eight_device_parity_vs_manual_per_device_collect():
         np.testing.assert_array_equal(np.asarray(res.last_value[sl]),
                                       np.asarray(ref.last_value))
         for a, b in zip(jax.tree.leaves(res.final_env),
-                        jax.tree.leaves(ref.final_env)):
+                        jax.tree.leaves(ref.final_env), strict=True):
             np.testing.assert_array_equal(np.asarray(a)[sl],
                                           np.asarray(b))
 

@@ -242,7 +242,7 @@ def test_time_limit_truncates_and_force_resets():
     assert env.spec.max_steps == 5
     s, _ = env.reset(jax.random.PRNGKey(0))
     step = jax.jit(env.step)
-    for i in range(5):
+    for _ in range(5):
         s, obs, r, d, tr, final_obs = step(s, jnp.zeros((1,)))
     # a pure timeout is TRUNCATED, never folded into done
     assert bool(tr), "episode must truncate at the wrapper limit"

@@ -103,6 +103,7 @@ def test_grad_flows_through_all_policies():
     w = jax.random.normal(jax.random.PRNGKey(1), (16, 8)) * 0.1
     for pol in [FP32, FXP8, FXP16, W8, W8A8]:
         gx, gw = jax.grad(
-            lambda x, w: q_matmul(x, w, pol).sum(), argnums=(0, 1))(x, w)
+            lambda x, w, pol=pol: q_matmul(x, w, pol).sum(),
+            argnums=(0, 1))(x, w)
         assert bool(jnp.isfinite(gx).all() and jnp.isfinite(gw).all()), pol
         assert float(jnp.abs(gw).max()) > 0

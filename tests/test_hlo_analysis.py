@@ -145,3 +145,84 @@ def test_op_histogram():
     assert h["while"] == 1
     assert h["dot"] == 2
     assert h["all-reduce"] == 1
+
+
+# ---------------------------------------------------------------------------
+# quantized data-path costing: the qmac (int8 MXU dot) and qconv paths
+# ---------------------------------------------------------------------------
+
+QMAC_SYNTH = """\
+HloModule qmac
+
+ENTRY %main (x: s8[16,32], w: s8[32,24]) -> f32[16,24] {
+  %x = s8[16,32] parameter(0)
+  %w = s8[32,24] parameter(1)
+  %acc = s32[16,24] dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  ROOT %deq = f32[16,24] convert(%acc)
+}
+"""
+
+QCONV_SYNTH = """\
+HloModule qconv
+
+ENTRY %main (x: f32[2,8,8,3], w: f32[3,3,3,8]) -> f32[2,4,4,8] {
+  %x = f32[2,8,8,3] parameter(0)
+  %w = f32[3,3,3,8] parameter(1)
+  ROOT %c = f32[2,4,4,8] convolution(%x, %w), window={size=3x3 stride=2x2 pad=1_1x1_1}, dim_labels=b01f_01io->b01f
+}
+"""
+
+
+def test_qmac_synthetic_int_dot_counted_as_int_ops():
+    t = H.CostModel(QMAC_SYNTH).totals()
+    # 2 * M*N * K on the s32-accumulating int8 dot, none as fp flops
+    assert t["int_ops"] == 2 * 16 * 24 * 32
+    assert t["flops"] == 0.0
+    # operand + output traffic: s8 inputs, s32 acc, f32 out
+    assert t["bytes"] >= 16 * 32 + 32 * 24 + 16 * 24 * 4
+
+
+def test_qconv_synthetic_flops_from_kernel_volume():
+    t = H.CostModel(QCONV_SYNTH).totals()
+    # 2 * out_elems * (kh * kw * c_in)
+    assert t["flops"] == 2 * (2 * 4 * 4 * 8) * (3 * 3 * 3)
+    assert t["int_ops"] == 0.0
+
+
+def test_qmac_live_w8a8_routes_to_int_ops():
+    from repro.core import W8, W8A8
+    from repro.core.qmatmul import q_matmul
+
+    x = jax.random.normal(jax.random.PRNGKey(0), (16, 32))
+    w = jax.random.normal(jax.random.PRNGKey(1), (32, 24)) * 0.1
+    c = jax.jit(lambda x, w: q_matmul(x, w, W8A8)).lower(x, w).compile()
+    t = H.cost_terms(c)
+    # the contraction runs on the int8 path: counted as int_ops, and
+    # no fp dot appears anywhere in the program
+    assert t["int_ops"] == 2 * 16 * 24 * 32
+    assert t["flops"] == 0.0
+    assert t["bytes"] > 0
+
+    # weight-only serving (W8) dequantizes and uses the fp dot
+    cw = jax.jit(lambda x, w: q_matmul(x, w, W8)).lower(x, w).compile()
+    tw = H.cost_terms(cw)
+    assert tw["flops"] == 2 * 16 * 24 * 32
+    assert tw["int_ops"] == 0.0
+
+
+def test_qconv_live_block_flops_and_bytes():
+    from repro.core import W8
+    from repro.nn.conv import conv2d_init, qconv_block
+    from repro.nn.module import unbox
+
+    p = unbox(conv2d_init(jax.random.PRNGKey(2), 3, 8, 3))
+    x = jax.random.normal(jax.random.PRNGKey(3), (2, 8, 8, 3))
+    c = jax.jit(lambda p, x: qconv_block(p, x, stride=2,
+                                         policy=W8)).lower(p, x).compile()
+    t = H.cost_terms(c)
+    # stride-2 SAME conv: [2,8,8,3] -> [2,4,4,8], kernel volume 3*3*3
+    assert t["flops"] == 2 * (2 * 4 * 4 * 8) * (3 * 3 * 3)
+    assert t["int_ops"] == 0.0
+    # at least the conv boundary traffic (inputs + weights + output)
+    assert t["bytes"] >= (2 * 8 * 8 * 3 + 3 * 3 * 3 * 8
+                          + 2 * 4 * 4 * 8) * 4

@@ -299,7 +299,7 @@ def test_pixel_agents_train_both_precisions(algo, actor_policy):
                                   key0, net="conv").params)
     delta = sum(float(jnp.sum(jnp.abs(a - b)))
                 for a, b in zip(jax.tree.leaves(init),
-                                jax.tree.leaves(params)))
+                                jax.tree.leaves(params), strict=True))
     assert delta > 0, "conv params never moved"
 
 

@@ -69,7 +69,7 @@ def test_sum_tree_update_preserves_internal_sums_exactly():
     rng = np.random.RandomState(0)
     t = sum_tree.init(23)                 # non-power-of-two capacity
     upd = jax.jit(sum_tree.update)
-    for round_ in range(5):
+    for _ in range(5):
         m = rng.randint(1, 23)
         idx = rng.choice(23, size=m, replace=False)
         vals = rng.uniform(0.0, 10.0, size=m).astype(np.float32)
@@ -255,7 +255,7 @@ def test_uniform_backend_bit_exact_with_pre_refactor_buffer():
         disc = jnp.asarray(rng.uniform(0, 1, batch), jnp.float32)
         new = rb.add(new, obs, act, rew, obs + 1, disc)
         old = _legacy_replay_add(old, obs, act, rew, obs + 1, disc)
-        for a, b in zip(jax.tree.leaves(new), jax.tree.leaves(old)):
+        for a, b in zip(jax.tree.leaves(new), jax.tree.leaves(old), strict=True):
             np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
         key = jax.random.PRNGKey(batch)
         s_new = rb.sample(new, key, 16, min_size=2)
@@ -397,7 +397,7 @@ def test_per_train_mechanics_both_precisions(actor_policy):
     assert len(hist) == 6 and all(np.isfinite(h) for h in hist)
     delta = sum(float(jnp.sum(jnp.abs(a - b)))
                 for a, b in zip(jax.tree.leaves(agent0.params),
-                                jax.tree.leaves(params)))
+                                jax.tree.leaves(params), strict=True))
     assert delta > 0, "updates were warmup no-ops"
 
     buf = out["replay"]
@@ -456,7 +456,7 @@ def test_per_checkpoint_resume_roundtrip(tmp_path):
     params2, hist2 = value_train("dqn", state_out=out2, **kw)
     assert len(hist2) == 1
     for a, b in zip(jax.tree.leaves(out["replay"]),
-                    jax.tree.leaves(out2["replay"])):
+                    jax.tree.leaves(out2["replay"]), strict=True):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
     # the sampling stream is part of the run: backend switches refuse,

@@ -336,11 +336,11 @@ def test_two_stage_grad_mask_freezes_offstage_subtree():
             jax.random.PRNGKey(3), params, opt, batch, fn, PPOConfig(),
             opt_step, grad_mask=gmask, dist=dist)
         for a, b in zip(jax.tree.leaves(params[frozen]),
-                        jax.tree.leaves(new_params[frozen])):
+                        jax.tree.leaves(new_params[frozen]), strict=True):
             np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
         delta = sum(float(jnp.sum(jnp.abs(a - b)))
                     for a, b in zip(jax.tree.leaves(params[trained]),
-                                    jax.tree.leaves(new_params[trained])))
+                                    jax.tree.leaves(new_params[trained]), strict=True))
         assert delta > 0, f"stage {stage} did not train {trained}"
 
 
@@ -690,7 +690,7 @@ def test_ddpg_losses_and_polyak():
     # polyak moves the target a tau-fraction toward the online params
     tgt = jax.tree.map(jnp.zeros_like, actor)
     moved = polyak(tgt, actor, 0.25)
-    for t, o in zip(jax.tree.leaves(moved), jax.tree.leaves(actor)):
+    for t, o in zip(jax.tree.leaves(moved), jax.tree.leaves(actor), strict=True):
         np.testing.assert_allclose(np.asarray(t), 0.25 * np.asarray(o),
                                    rtol=1e-6)
 
@@ -707,7 +707,7 @@ def test_sync_bytes_4x_reduction():
 def test_pack_unpack_roundtrip_error_bounded():
     params = unbox(mlp_ac_init(jax.random.PRNGKey(0), 4, 2))
     rec = unpack_weights(pack_weights(params, 8))
-    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(rec)):
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(rec), strict=True):
         scale = float(jnp.max(jnp.abs(a))) / 127.0
         assert float(jnp.max(jnp.abs(a - b))) <= scale * 0.51 + 1e-8
 
@@ -761,7 +761,7 @@ def test_merge_results_final_env_resumes_collection():
             == jax.tree.structure(states[0]))
     for leaf, a, b in zip(jax.tree.leaves(merged.final_env),
                           jax.tree.leaves(states[0]),
-                          jax.tree.leaves(states[1])):
+                          jax.tree.leaves(states[1]), strict=True):
         assert leaf.shape[0] == 8
         np.testing.assert_array_equal(np.asarray(leaf),
                                       np.concatenate([np.asarray(a),

@@ -86,7 +86,7 @@ def test_value_algos_train_under_both_precisions(algo, env_name,
     assert len(hist) == 4 and all(np.isfinite(h) for h in hist)
     delta = sum(float(jnp.sum(jnp.abs(a - b)))
                 for a, b in zip(jax.tree.leaves(agent0.params),
-                                jax.tree.leaves(params)))
+                                jax.tree.leaves(params), strict=True))
     assert delta > 0, "updates were warmup no-ops"
     ret, _ = value_eval(algo, env_name, params, n_envs=4, n_steps=32,
                         actor_policy=actor_policy)
@@ -144,7 +144,7 @@ def test_replay_and_targets_resume_roundtrip(tmp_path):
     assert int(buf.ptr) == 5 * 16 * 4
     # target is a real polyak-lagged copy, not the online params
     deltas = [float(jnp.max(jnp.abs(a - b)))
-              for a, b in zip(jax.tree.leaves(p), jax.tree.leaves(tgt))]
+              for a, b in zip(jax.tree.leaves(p), jax.tree.leaves(tgt), strict=True)]
     assert any(dl > 0 for dl in deltas)
 
     # relaunch: resumes at it=5 (exactly the missing iteration) and
