@@ -7,6 +7,14 @@ env-steps/s and the int8 weight-sync payload (MiB) — the fleet-level
 view of the paper's throughput claims, extending bench_rewards.py
 beyond cartpole.
 
+The ``value_throughput`` rows time the full sharded *off-policy* loop
+(qrdqn collect + replay shards + psum learner) end to end at each
+device count, in both weight-sync modes: ``lockstep`` fences the
+dispatch stream every iteration, ``doublebuf`` fetches one version
+behind and lets the next collect overlap the in-flight learner update.
+``value_sync`` reports the doublebuf/lockstep speedup per device
+count.
+
 Standalone (8 forced host devices):
 
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
@@ -70,6 +78,57 @@ def bench_one(env_name: str, policy_name: str, n_dev: int,
     return steps_per_s
 
 
+def bench_value_one(env_name: str, algo: str, sync: str, n_dev: int,
+                    n_envs: int, rollout_len: int,
+                    iters: int = 6) -> float:
+    """Time the sharded value loop (FleetSync fetch + collect + learn,
+    barrier included in lockstep mode) end to end, compile excluded."""
+    import time as _time
+
+    from repro.rl.actor_learner import FleetSync
+    from repro.rl.trainer import ValueTrainer
+
+    tr = ValueTrainer(algo, env_name, iters=iters, n_envs=n_envs,
+                      rollout_len=rollout_len, verbose=False,
+                      replay_capacity=8192, learn_start=64,
+                      mesh_kind="host", mesh_devices=n_dev, sync=sync)
+    state = tr.init_state()
+    iteration = tr.build_iteration()
+    fleet = FleetSync(tr.n_slots, max_lag=tr.max_lag)
+    payload = 0
+
+    def one(state, g):
+        nonlocal payload
+        fleet.push(tr.pack(state))
+        stale = fleet.fetch(tr.fetch_lag)
+        payload, _ = sync_bytes(stale)
+        sub = jax.random.fold_in(tr.key, g)
+        state, ret, _ = tr.step(iteration, state, stale, sub, g, None,
+                                fleet.alive())
+        if tr.barrier:
+            jax.block_until_ready((state, ret))
+        return state
+
+    # warmup must reach the steady-state trace: the first calls see
+    # eager-init avals (and, at fetch lag 1, a one-iteration-old packed
+    # tree), each a distinct jit entry — 3 iterations cover them all
+    for g in range(3):
+        state = one(state, g)
+    jax.block_until_ready(state)
+    t0 = _time.perf_counter()
+    for g in range(3, 3 + iters):
+        state = one(state, g)
+    jax.block_until_ready(state)
+    sec = (_time.perf_counter() - t0) / iters
+    steps_per_s = n_envs * rollout_len / sec
+    emit("value_throughput", f"{env_name}/{algo}/{sync}/{n_dev}dev",
+         env=env_name, algo=algo, sync=sync, devices=n_dev,
+         n_envs=n_envs, rollout_len=rollout_len,
+         steps_per_s=int(steps_per_s),
+         sync_mib=round(payload / 2**20, 4))
+    return steps_per_s
+
+
 def run(fast: bool = True, n_envs: int = 0, rollout_len: int = 0,
         device_counts=None):
     counts = list(device_counts or _device_counts())
@@ -92,6 +151,15 @@ def run(fast: bool = True, n_envs: int = 0, rollout_len: int = 0,
                              f"{env_name}/{policy_name}/{n_dev}dev",
                              speedup_vs_1dev=round(
                                  results[n_dev] / results[1], 2))
+    # the sharded value loop, lock-step vs double-buffered weight sync
+    for env_name, algo in (("cartpole", "qrdqn"),):
+        for n_dev in counts:
+            ls = bench_value_one(env_name, algo, "lockstep", n_dev,
+                                 n_envs, rollout_len)
+            db = bench_value_one(env_name, algo, "doublebuf", n_dev,
+                                 n_envs, rollout_len)
+            emit("value_sync", f"{env_name}/{algo}/{n_dev}dev",
+                 devices=n_dev, doublebuf_speedup=round(db / ls, 2))
 
 
 def main(argv=None):

@@ -70,7 +70,7 @@ def accepted_combos() -> List[Tuple[str, str, str, str]]:
     from repro.rl.envs import make, registered
     from repro.rl.inference import (NETS, ON_POLICY_ALGOS, VALUE_ALGOS,
                                     build_env, make_value_agent)
-    from repro.launch.rl_train import make_agent
+    from repro.rl.trainer import make_agent
 
     combos = []
     key = jax.random.PRNGKey(0)
@@ -289,7 +289,7 @@ def _build_value_step(env_name, net, algo, precision):
 def _build_onpolicy_step(env_name, net, algo, precision):
     from repro.core.policy import get_policy
     from repro.launch.mesh import make_host_mesh
-    from repro.launch.rl_train import make_agent
+    from repro.rl.trainer import make_agent
     from repro.optim import AdamWConfig, adamw_init, constant
     from repro.rl import PPOConfig
     from repro.rl.actor_learner import pack_weights
@@ -328,19 +328,86 @@ def _build_onpolicy_step(env_name, net, algo, precision):
     return iteration, args, threaded, out_slots, params
 
 
+def _build_sharded_value_step(env_name, net, algo, precision,
+                              replay_kind="uniform"):
+    from repro.core.policy import get_policy
+    from repro.launch.mesh import make_host_mesh
+    from repro.optim import AdamWConfig, adamw_init, constant
+    from repro.rl.actor_learner import pack_weights
+    from repro.rl.inference import build_env, make_value_agent
+    from repro.rl.replay import make_sharded_replay
+    from repro.rl.rollout import init_envs
+    from repro.rl.train_steps import make_sharded_value_iteration
+
+    env = build_env(env_name, net)
+    spec = env.spec
+    key = jax.random.PRNGKey(0)
+    a_policy = get_policy("fxp8") if precision == "fxp8" else None
+    agent = make_value_agent(algo, spec, key, net=net)
+    params = agent.params
+    target = jax.tree.map(jnp.copy, params)
+    mesh = make_host_mesh(1)
+    if algo == "ddpg":
+        opt = {"actor": adamw_init(params["actor"]),
+               "critic": adamw_init(params["critic"])}
+        srb = make_sharded_replay(replay_kind, 1, _CAPACITY,
+                                  spec.obs_shape,
+                                  spec.action_space.shape, jnp.float32)
+    else:
+        opt = adamw_init(params)
+        srb = make_sharded_replay(replay_kind, 1, _CAPACITY,
+                                  spec.obs_shape)
+    buf = srb.init()
+    est, obs = init_envs(env, jax.random.PRNGKey(1), _N_ENVS,
+                         mesh=mesh)
+    iteration = make_sharded_value_iteration(
+        env, agent, srb, a_policy, constant(1e-3),
+        AdamWConfig(weight_decay=0.0, max_grad_norm=10.0), mesh,
+        algo=algo, rollout_len=_ROLLOUT, updates_per_iter=1,
+        per_beta0=0.4, beta_iters=1)
+    comm = 8 if a_policy else 32
+    packed = pack_weights(agent.behaviour_subtree(params), comm)
+    args = (params, target, opt, buf, packed, est, obs,
+            jax.random.PRNGKey(2), jnp.asarray(0),
+            jnp.ones((1,), bool))
+    threaded = {"params": params, "target": target, "opt": opt,
+                "buf": buf, "est": est, "obs": obs}
+    out_slots = ("params", "target", "opt", "buf", "est", "obs")
+    return iteration, args, threaded, out_slots, params
+
+
+# the sharded value path (mesh-mapped collection + per-device replay
+# shards + psum'd learner) must satisfy the same invariants as the
+# single-device programs — QF904 especially: the double-buffered
+# overlap doubles peak memory if donation silently fails to stick
+SHARDED_VALUE_COMBOS = (
+    ("cartpole", "mlp", "dqn", "fp32", "uniform"),
+    ("cartpole", "mlp", "dqn", "fxp8", "per"),
+    ("cartpole", "mlp", "qrdqn", "fxp8", "uniform"),
+    ("pendulum", "mlp", "ddpg", "fxp8", "uniform"),
+)
+
+
 # ---------------------------------------------------------------------------
 # audits
 # ---------------------------------------------------------------------------
 
 
-def audit_step(env_name, net, algo, precision) -> List[Finding]:
+def audit_step(env_name, net, algo, precision,
+               sharded_replay: Optional[str] = None) -> List[Finding]:
     from repro.rl.inference import ON_POLICY_ALGOS
 
     tag = _combo_tag(env_name, net, algo, precision)
-    build = (_build_onpolicy_step if algo in ON_POLICY_ALGOS
-             else _build_value_step)
-    iteration, args, threaded, out_slots, params = build(
-        env_name, net, algo, precision)
+    if sharded_replay is not None:
+        tag += f"/sharded-{sharded_replay}"
+        iteration, args, threaded, out_slots, params = \
+            _build_sharded_value_step(env_name, net, algo, precision,
+                                      sharded_replay)
+    else:
+        build = (_build_onpolicy_step if algo in ON_POLICY_ALGOS
+                 else _build_value_step)
+        iteration, args, threaded, out_slots, params = build(
+            env_name, net, algo, precision)
 
     findings: List[Finding] = []
 
@@ -443,6 +510,14 @@ def run_trace_audit(fast: bool = False,
     for env_name, net, algo, precision in all_combos:
         findings.extend(audit_step(env_name, net, algo, precision))
         checked.append(_combo_tag(env_name, net, algo, precision))
+
+    # the sharded value programs (per-device collect + replay shards +
+    # psum learner), donation assertion included
+    for env_name, net, algo, precision, rep in SHARDED_VALUE_COMBOS:
+        findings.extend(audit_step(env_name, net, algo, precision,
+                                   sharded_replay=rep))
+        checked.append(_combo_tag(env_name, net, algo, precision)
+                       + f"/sharded-{rep}")
 
     # the serving ladder, on both torso families
     findings.extend(audit_buckets("cartpole", "mlp"))

@@ -3,513 +3,48 @@ learner + int8 weight sync (the paper's Fig. 2 system).
 
     PYTHONPATH=src python -m repro.launch.rl_train --env cartpole \
         --iters 40 --actor-policy fxp8 [--algo ppo|a2c|dqn|qrdqn|ddpg] \
-        [--agent hrl] [--two-stage]
+        [--agent hrl] [--two-stage] [--mesh host] [--replay per]
+
+This module is CLI parsing + dispatch only: the drivers live in
+:mod:`repro.rl.trainer` (the ``Trainer`` protocol — ``init /
+iteration / save / restore / eval_policy`` — with the train loop,
+checkpoint flow, RNG derivation and FleetSync weight sync implemented
+once for both families).  The historical names (``rl_train``,
+``value_train``, ``value_eval``, ``make_agent``, ``build_mesh``, the
+inference-layer re-exports) remain importable from here.
 
 Two training families share the quantized-actor/fp32-learner split:
 
-  * on-policy (``--algo ppo|a2c``): the actor fleet is shard_map'd over
-    the data axes of a real device mesh (``--mesh host`` by default —
-    whatever this host exposes, e.g. 8 CPU devices under
-    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``; ``--mesh
-    production`` for the 16x16 pod shape).  Each device dequantizes the
-    broadcast int8 weight sync locally and rolls ``n_envs/n_devices``
-    environments; per-device trajectories come back as one global batch
-    whose per-device slots carry a liveness mask into the PPO loss (and
-    out of the advantage statistics).  This synchronous driver always
-    reports every slot alive — an async aggregator only has to flip
-    mask bits to drop a straggler, it never has to reshape the loss.
-    Truncated episodes bootstrap through the timeout (GAE consumes the
-    env's terminated/truncated split).
-  * off-policy value-based (``--algo dqn|qrdqn|ddpg``): the quantized
-    behaviour actor (epsilon-greedy Q net, or deterministic actor +
-    exploration noise for Box envs) fills a truncation-aware n-step
-    replay (``--replay {uniform,per}`` — uniform circular, or sum-tree
-    prioritized with ``--per-alpha/--per-beta0/--per-beta-iters``; see
-    :mod:`repro.rl.replay`); the fp32 learner updates Double-DQN /
-    QR-DQN / TD3-style twin-critic DDPG (``--tqc-drop`` swaps the
-    min-backup for TQC quantile truncation) against polyak target
-    networks — see :mod:`repro.rl.value`.
+  * on-policy (``--algo ppo|a2c``): the actor fleet is shard_map'd
+    over the data axes of a real device mesh (``--mesh host`` by
+    default); see :mod:`repro.rl.trainer.onpolicy`.
+  * off-policy value-based (``--algo dqn|qrdqn|ddpg``): quantized
+    behaviour actors fill a truncation-aware n-step replay
+    (``--replay {uniform,per}``), the fp32 learner updates against
+    polyak targets.  With ``--mesh host`` collection and learning
+    shard over the mesh: per-device local replay shards with
+    stratified global (PER) sampling, psum'd learner grads, and
+    ``--sync doublebuf`` double-buffered weight sync (the next collect
+    overlaps the learner update); see :mod:`repro.rl.trainer.value`.
 
 Checkpoints make both loops restart-safe (including mid-stage restarts
-of ``--two-stage`` runs and the replay/target state of value-based
-runs).
+of ``--two-stage`` runs and the sharded replay/target state of
+value-based runs).
 """
 from __future__ import annotations
 
 import argparse
-import time
-from typing import Optional
 
-import jax
-import jax.numpy as jnp
-
-from repro.checkpoint import CheckpointManager
-from repro.configs.e2hrl import HRLConfig
-from repro.core.policy import get_policy
-from repro.distributed.sharding import data_axis_size
-from repro.launch.mesh import describe, make_host_mesh, make_production_mesh
-from repro.models import hrl
-from repro.nn.module import unbox
-from repro.optim import AdamWConfig, adamw_init, constant
-from repro.rl import PPOConfig, init_envs
-from repro.rl.actor_learner import (VersionBuffer, pack_weights,
-                                    sync_bytes)
-from repro.rl.dists import distribution_for
 # the inference layer (env stack + net reconstruction + action heads)
 # is shared with repro.serve — the historical rl_train names re-export
 from repro.rl.inference import (NETS, ON_POLICY_ALGOS,  # noqa: F401
                                 VALUE_ALGOS, ValueAgent, build_env,
                                 make_value_agent)
-from repro.rl.envs import Environment, make, registered
-from repro.rl.envs.spaces import head_dim
-from repro.rl.envs.wrappers import NormStats
-from repro.rl.nets import (conv_ac_apply, conv_ac_init, mlp_ac_apply,
-                           mlp_ac_init)
-from repro.rl.ppo import a2c_loss, ppo_loss, stage_mask
+from repro.rl.envs import registered
 from repro.rl.replay import KINDS as REPLAY_KINDS
-from repro.rl.replay import make_replay, replay_size
-from repro.rl.rollout import episode_returns_from
-from repro.rl.train_steps import (make_onpolicy_iteration,
-                                  make_value_iteration)
-
-
-def make_agent(agent: str, env: Environment, key,
-               policy_name: Optional[str], net: str = "mlp"):
-    spec = env.spec
-    if agent == "mlp":
-        if net == "conv":
-            if len(spec.obs_shape) != 3:
-                raise ValueError(
-                    f"{spec.name} has obs shape {spec.obs_shape}; "
-                    "--net conv needs image (H, W, C) observations")
-            params = unbox(conv_ac_init(key, spec.obs_shape,
-                                        head_dim(spec.action_space)))
-            return params, conv_ac_apply
-        if len(spec.obs_shape) != 1:
-            raise ValueError(
-                f"{spec.name} has obs shape {spec.obs_shape}; use "
-                "--net conv for the Q-Conv pixel stem, wrap with "
-                "envs.wrappers.flatten_observation for the mlp agent, "
-                "or use --agent hrl")
-        params = unbox(mlp_ac_init(key, spec.obs_shape[0],
-                                   head_dim(spec.action_space)))
-        apply_fn = mlp_ac_apply
-        return params, apply_fn
-    if net != "mlp":
-        raise ValueError("--net conv selects the standalone conv "
-                         "actor-critic; the hrl agent has its own conv "
-                         "stem — drop --net")
-    if len(spec.obs_shape) != 3:
-        raise ValueError(
-            f"{spec.name} has obs shape {spec.obs_shape}; the hrl agent "
-            "needs image (H, W, C) observations — use --agent mlp")
-    cfg = HRLConfig(obs_shape=spec.obs_shape, n_actions=spec.n_actions)
-    params = unbox(hrl.init(key, cfg))
-
-    def apply_fn(p, obs, policy=None):
-        logits, value, _ = hrl.apply(p, obs, cfg, policy)
-        return logits, value
-
-    return params, apply_fn
-
-
-def build_mesh(mesh_kind: str = "host",
-               mesh_devices: Optional[int] = None):
-    if mesh_kind == "production":
-        if mesh_devices is not None:
-            raise ValueError("--mesh-devices restricts the host mesh "
-                             "only; the production mesh shape is fixed")
-        return make_production_mesh()
-    if mesh_kind == "host":
-        return make_host_mesh(mesh_devices)
-    raise ValueError(f"unknown mesh kind {mesh_kind!r} "
-                     "(expected 'host' or 'production')")
-
-
-def rl_train(env_name: str = "cartpole", agent: str = "mlp",
-             iters: int = 40, n_envs: int = 32, rollout_len: int = 128,
-             actor_policy: Optional[str] = "fxp8", lr: float = 3e-3,
-             comm_bits: int = 8, max_lag: int = 1, seed: int = 0,
-             two_stage: bool = False, ckpt_dir: Optional[str] = None,
-             save_every: int = 10, mesh_kind: str = "host",
-             mesh_devices: Optional[int] = None,
-             log_every: int = 5, verbose: bool = True,
-             algo: str = "ppo", net: str = "mlp",
-             frame_stack_k: int = 1,
-             state_out: Optional[dict] = None):
-    if algo not in ON_POLICY_ALGOS:
-        raise ValueError(f"rl_train drives the on-policy family "
-                         f"{ON_POLICY_ALGOS}; use value_train for "
-                         f"{VALUE_ALGOS} (or the --algo CLI dispatch)")
-    if two_stage and agent != "hrl":
-        raise ValueError("--two-stage trains the HRL sub-goal curriculum "
-                         "and requires --agent hrl")
-    if net == "conv":
-        env = build_env(env_name, net, frame_stack_k)
-    else:
-        # the mlp/hrl agents keep the historical raw-env view
-        # (make_agent validates the obs shape)
-        if frame_stack_k > 1:
-            raise ValueError("--frame-stack is a pixel-pipeline knob "
-                             "and requires --net conv")
-        env = make(env_name)
-    dist = distribution_for(env.action_space)
-    key = jax.random.PRNGKey(seed)
-    params, apply_fn = make_agent(agent, env, key, actor_policy, net)
-    a_policy = get_policy(actor_policy) if actor_policy else None
-
-    if mesh_kind == "host" and mesh_devices is None:
-        # default: the largest device prefix that divides n_envs, so
-        # odd host device counts degrade to fewer slots instead of
-        # failing (explicit --mesh-devices keeps the hard error below)
-        mesh_devices = len(jax.devices())
-        while mesh_devices > 1 and n_envs % mesh_devices != 0:
-            mesh_devices -= 1
-    mesh = build_mesh(mesh_kind, mesh_devices)
-    n_slots = data_axis_size(mesh)
-    if n_envs % n_slots != 0:
-        raise ValueError(f"--n-envs {n_envs} must be divisible by the "
-                         f"mesh's {n_slots} data slot(s)")
-    if verbose:
-        print(f"{describe(mesh)}: {n_slots} actor slot(s) x "
-              f"{n_envs // n_slots} envs")
-
-    opt = adamw_init(params)
-    ocfg = AdamWConfig(weight_decay=0.0, max_grad_norm=0.5)
-    # a2c: one pass over the whole batch, no clipping surrogate
-    pcfg = (PPOConfig() if algo == "ppo"
-            else PPOConfig(epochs=1, minibatches=1))
-    loss_fn = ppo_loss if algo == "ppo" else a2c_loss
-    sched = constant(lr)
-    stage_list = (["action", "subgoal"] if two_stage else [None])
-    stage_names = [s or "all" for s in stage_list]
-    est, obs = init_envs(env, jax.random.PRNGKey(seed + 1), n_envs,
-                         mesh=mesh)
-    start = 0
-    mgr = None
-    if ckpt_dir:
-        mgr = CheckpointManager(ckpt_dir, keep=2, save_every=save_every)
-        if mgr.latest_step() is not None:
-            # env state rides in the checkpoint so wrapper carries
-            # (e.g. the Welford running-norm stats) resume exactly
-            (params, opt, est, obs), md = mgr.restore(
-                (params, opt, est, obs))
-            md_stage = str(md.get("stage", "all"))
-            if md_stage not in stage_names:
-                raise ValueError(
-                    f"checkpoint in {ckpt_dir} was saved in stage "
-                    f"{md_stage!r} but this run's stages are "
-                    f"{stage_names} — relaunch with the original "
-                    "--two-stage/--agent flags")
-            # the checkpoint holds post-update state for its step, so
-            # training continues at the NEXT step (re-running the saved
-            # one would apply its optimizer update twice); the global
-            # step is rebuilt from the recorded (stage, stage_iter) so
-            # a changed --iters cannot land the resume in the wrong
-            # stage
-            it = int(md.get("stage_iter", md.get("step", 0)))
-            # clamp for a shrunken --iters: the recorded stage already
-            # met the new budget, so continue at the next stage rather
-            # than skipping past the end of the whole run
-            start = stage_names.index(md_stage) * iters + min(it + 1,
-                                                              iters)
-            if verbose:
-                print(f"resumed at global iter {start} "
-                      f"(stage {md_stage}, iter {it} done)")
-
-    versions = VersionBuffer(max_lag)
-    # synchronous driver: every device delivers; the mask still flows
-    # through the loss so an async aggregator only has to flip bits
-    alive = jnp.ones((n_slots,), bool)
-
-    total_sync_payload = 0
-
-    iteration = make_onpolicy_iteration(
-        env, apply_fn, a_policy, mesh, dist, pcfg, loss_fn, sched,
-        ocfg, rollout_len=rollout_len, n_envs=n_envs, n_slots=n_slots)
-
-    history = []
-    t0 = time.time()
-    for si, stage in enumerate(stage_list):
-        # the stage grad-mask actually freezes the off-stage subtree
-        # (zero grads keep adam state at zero -> bitwise-frozen params)
-        gmask = stage_mask(params, stage) if stage else None
-        for it in range(iters):
-            g = si * iters + it   # global step: stages never collide
-            if g < start:
-                continue          # resume lands mid-stage, not at stage 1
-            # learner -> actors: quantized weight sync (staleness-aware)
-            packed = pack_weights(params, comm_bits)
-            versions.push(packed)
-            stale = versions.stale(max_lag - 1)
-            payload, fp32_eq = sync_bytes(stale)
-            total_sync_payload += payload
-            key, sub = jax.random.split(key)
-            params, opt, est, obs, ret, n_ep = iteration(
-                params, opt, est, obs, stale, sub, gmask, alive)
-            history.append(float(ret))
-            if verbose and (it % log_every == 0 or it == iters - 1):
-                sfx = f" [stage={stage}]" if stage else ""
-                print(f"iter {it:4d}  return {float(ret):8.2f}  "
-                      f"episodes {int(n_ep):4d}  "
-                      f"sync {payload / 2**20:.2f} MiB "
-                      f"(fp32 {fp32_eq / 2**20:.2f}){sfx}")
-            if mgr and mgr.should_save(g):
-                mgr.save(g, (params, opt, est, obs),
-                         metadata={"stage": stage or "all",
-                                   "stage_iter": it})
-    if verbose:
-        print(f"done in {time.time() - t0:.0f}s; "
-              f"total sync payload {total_sync_payload / 2**20:.1f} MiB")
-    if state_out is not None:
-        state_out.update(env_state=est, obs=obs)
-    return params, history
-
-
-
-def value_eval(algo: str, env_name: str, params,
-               n_envs: int = 16, n_steps: Optional[int] = None,
-               actor_policy: Optional[str] = None, seed: int = 0,
-               net: str = "mlp", frame_stack_k: int = 1,
-               norm_stats: Optional[NormStats] = None):
-    """Greedy-policy evaluation: (mean episode return, episode count).
-
-    Runs the trained policy with exploration off for ``n_steps``
-    (default: one full episode horizon plus slack) — the training-loop
-    returns only count episodes that *complete inside a chunk*, which
-    undercounts long-horizon envs; this is the clean measurement.
-
-    ``net="conv"`` evaluates over the pixel pipeline with the running
-    normalizer *frozen*: pass the training run's merged stats as
-    ``norm_stats`` (see ``wrappers.norm_stats_of``/``merge_norm_stats``;
-    None falls back to the identity transform).
-    """
-    if net == "conv":
-        from repro.rl.envs.wrappers import init_norm_stats
-        frozen = (norm_stats if norm_stats is not None
-                  else init_norm_stats(make(env_name).obs_shape))
-        env = build_env(env_name, net, frame_stack_k, norm_stats=frozen)
-    else:
-        env = build_env(env_name, net, frame_stack_k)
-    spec = env.spec
-    agent = make_value_agent(algo, spec, net=net)  # closures, no init
-    policy = get_policy(actor_policy) if actor_policy else None
-    n_steps = n_steps or spec.max_steps + spec.max_steps // 4
-
-    @jax.jit
-    def run(params, key):
-        est, obs = init_envs(env, key, n_envs)
-
-        def one(carry, _):
-            est, o = carry
-            a = agent.greedy(params, o, policy)
-            est, nxt, r, d, tr, _ = jax.vmap(env.step)(est, a)
-            return (est, nxt), (r, d | tr)
-
-        (_, _), (rews, bounds) = jax.lax.scan(one, (est, obs), None,
-                                              length=n_steps)
-        return episode_returns_from(rews, bounds)
-
-    ret, n_ep = run(params, jax.random.PRNGKey(seed + 17))
-    return float(ret), int(n_ep)
-
-
-def value_train(algo: str = "dqn", env_name: str = "cartpole",
-                iters: int = 300, n_envs: int = 32, rollout_len: int = 8,
-                actor_policy: Optional[str] = "fxp8", lr: float = 1e-3,
-                comm_bits: int = 8, seed: int = 0,
-                ckpt_dir: Optional[str] = None, save_every: int = 50,
-                replay_capacity: int = 50_000, n_step: int = 3,
-                updates_per_iter: int = 4, log_every: int = 20,
-                verbose: bool = True,
-                learn_start: Optional[int] = None, net: str = "mlp",
-                frame_stack_k: int = 1,
-                replay: str = "uniform", per_alpha: float = 0.6,
-                per_beta0: float = 0.4,
-                per_beta_iters: Optional[int] = None,
-                tqc_drop: int = 0,
-                state_out: Optional[dict] = None):
-    """Off-policy value-based training (paper Fig. 2 split, replay
-    flavour): the *quantized* behaviour actor collects ``rollout_len``
-    steps per iteration into a truncation-aware n-step replay; the
-    fp32 learner runs ``updates_per_iter`` sampled updates against
-    polyak target networks.  Checkpoints capture params, targets,
-    optimizer state, the replay buffer (pointers included) AND the env
-    state (so wrapper carries like the Welford running-norm stats
-    survive preemption), so a relaunch with the same command line
-    resumes exactly.  ``state_out`` (optional dict) receives the final
-    ``env_state``/``obs``/``replay`` state — e.g. to extract the
-    normalizer stats for a frozen evaluation.
-
-    ``replay`` picks the backend (:mod:`repro.rl.replay`): ``uniform``
-    is the bit-exact historical buffer; ``per`` is sum-tree
-    proportional prioritization — transitions insert at max priority,
-    sampling follows ``(|td| + eps) ** per_alpha``, the losses weight
-    each sample by its annealed-beta importance weight (``per_beta0``
-    -> 1 over ``per_beta_iters`` iterations, default the whole run),
-    and every TD update writes the fresh per-sample errors back into
-    the tree.  ``tqc_drop`` (ddpg) truncates the top-k pooled target
-    quantiles — see :func:`make_value_agent`.
-    """
-    if algo not in VALUE_ALGOS:
-        raise ValueError(f"value_train drives {VALUE_ALGOS}, got "
-                         f"{algo!r}; use rl_train for {ON_POLICY_ALGOS}")
-    env = build_env(env_name, net, frame_stack_k)
-    spec = env.spec
-    key = jax.random.PRNGKey(seed)
-    a_policy = get_policy(actor_policy) if actor_policy else None
-    comm = comm_bits if a_policy else 32
-    # epsilon anneals over the first half of the step budget
-    decay = max((iters * rollout_len) // 2, 1)
-
-    agent = make_value_agent(algo, spec, key, n_step=n_step,
-                             eps_decay_steps=decay,
-                             learn_start=learn_start, net=net,
-                             tqc_drop=tqc_drop)
-    cfg, params = agent.cfg, agent.params
-    discrete = agent.discrete
-    # fresh buffers, not an alias: params and target are both donated
-    # to the jitted iteration, and a shared buffer cannot donate twice
-    target = jax.tree.map(jnp.copy, params)
-    if algo == "ddpg":
-        opt = {"actor": adamw_init(params["actor"]),
-               "critic": adamw_init(params["critic"])}
-        rb = make_replay(replay, replay_capacity, spec.obs_shape,
-                         spec.action_space.shape, jnp.float32,
-                         alpha=per_alpha)
-    else:
-        opt = adamw_init(params)
-        rb = make_replay(replay, replay_capacity, spec.obs_shape,
-                         alpha=per_alpha)
-    buf = rb.init()
-    beta_iters = max(per_beta_iters if per_beta_iters is not None
-                     else iters, 1)
-    ocfg = AdamWConfig(weight_decay=0.0, max_grad_norm=10.0)
-    sched = constant(lr)
-
-    est, obs = init_envs(env, jax.random.PRNGKey(seed + 1), n_envs)
-    start = 0
-    mgr = None
-    if ckpt_dir:
-        mgr = CheckpointManager(ckpt_dir, keep=2, save_every=save_every)
-        if mgr.latest_step() is not None:
-            # flags are validated against the sidecar metadata BEFORE
-            # the tree restore: a mismatched template (e.g. uniform
-            # Replay vs a saved PER tree, scalar vs quantile critics)
-            # must fail with these errors, not a missing-leaf KeyError
-            md = mgr.metadata()
-            md_net = str(md.get("net", net))
-            if md_net != net:
-                raise ValueError(
-                    f"checkpoint in {ckpt_dir} was saved by --net "
-                    f"{md_net!r}, not {net!r} — the torso family (and "
-                    "the obs pipeline) differs; relaunch with the "
-                    "original flags")
-            md_env = str(md.get("env", env_name))
-            if md_env != env_name:
-                raise ValueError(
-                    f"checkpoint in {ckpt_dir} was saved by --env "
-                    f"{md_env!r}, not {env_name!r} — relaunch with the "
-                    "original flags")
-            md_algo = str(md.get("algo", ""))
-            if md_algo != algo:
-                raise ValueError(
-                    f"checkpoint in {ckpt_dir} was saved by --algo "
-                    f"{md_algo!r}, not {algo!r} — relaunch with the "
-                    "original flags")
-            md_replay = str(md.get("replay", "uniform"))
-            if md_replay != replay:
-                raise ValueError(
-                    f"checkpoint in {ckpt_dir} was saved by --replay "
-                    f"{md_replay!r}, not {replay!r} — the sampling "
-                    "stream (and the PER tree state) is part of the "
-                    "run; relaunch with the original flags")
-            md_tqc = int(md.get("tqc_drop", 0))
-            if md_tqc != tqc_drop:
-                raise ValueError(
-                    f"checkpoint in {ckpt_dir} was saved by --tqc-drop "
-                    f"{md_tqc}, not {tqc_drop} — the critic head shape "
-                    "differs (restore does not shape-check); relaunch "
-                    "with the original flags")
-            if replay == "per":
-                # the priority exponent and beta schedule shape every
-                # subsequent draw: a silent change would diverge from
-                # the uninterrupted run's sampling stream
-                for flag, have in (("per_alpha", per_alpha),
-                                   ("per_beta0", per_beta0),
-                                   ("per_beta_iters", beta_iters)):
-                    saved = md.get(flag)
-                    if saved is not None and float(saved) != float(have):
-                        raise ValueError(
-                            f"checkpoint in {ckpt_dir} was saved with "
-                            f"--{flag.replace('_', '-')} {saved}, not "
-                            f"{have} — the prioritized sampling stream "
-                            "depends on it; relaunch with the original "
-                            "flags")
-            (params, target, opt, buf, est, obs), md = mgr.restore(
-                (params, target, opt, buf, est, obs))
-            start = int(md.get("it", md.get("step", 0))) + 1
-            if verbose:
-                print(f"resumed at iter {start} "
-                      f"(replay size {int(replay_size(buf))})")
-
-    # the donation contract (threaded replay/target/env state) lives
-    # with the step itself — see repro.rl.train_steps
-    iteration = make_value_iteration(
-        env, agent, rb, a_policy, sched, ocfg, algo=algo,
-        rollout_len=rollout_len, updates_per_iter=updates_per_iter,
-        per_beta0=per_beta0, beta_iters=beta_iters)
-
-    history = []
-    total_sync_payload = 0
-    t0 = time.time()
-    if verbose:
-        pol = actor_policy if a_policy else "fp32"
-        rep = (f"per(alpha={per_alpha}, beta {per_beta0}->1/"
-               f"{beta_iters}it)" if rb.prioritized else "uniform")
-        print(f"{algo} on {spec.name}: {n_envs} envs x {rollout_len} "
-              f"steps/iter, n_step={cfg.n_step}, {pol} behaviour actor, "
-              f"{rep} replay")
-    for it in range(start, iters):
-        # only the behaviour net ships to the fleet (ddpg: the actor
-        # alone — syncing the twin critics would triple the payload)
-        packed = pack_weights(agent.behaviour_subtree(params), comm)
-        payload, _ = sync_bytes(packed)
-        total_sync_payload += payload
-        # key derived from the iteration index, not a running split:
-        # a resumed run at iteration k draws the same stream the
-        # uninterrupted run would have (sequential splits would replay
-        # the stream from 0 after every preemption)
-        sub = jax.random.fold_in(key, it)
-        params, target, opt, buf, est, obs, ret, n_ep = iteration(
-            params, target, opt, buf, packed, est, obs, sub,
-            jnp.asarray(it))
-        history.append(float(ret))
-        if verbose and (it % log_every == 0 or it == iters - 1):
-            print(f"iter {it:4d}  return {float(ret):8.2f}  "
-                  f"episodes {int(n_ep):4d}  "
-                  f"replay {int(replay_size(buf)):6d}")
-        if mgr and mgr.should_save(it):
-            # env/net/frame_stack/n_envs make the checkpoint
-            # self-describing for the serving loader
-            # (repro.serve.load_policy rebuilds the net and — for conv
-            # policies — the env-state template from these alone)
-            md_out = {"algo": algo, "it": it, "replay": replay,
-                      "tqc_drop": tqc_drop, "env": env_name, "net": net,
-                      "frame_stack": frame_stack_k, "n_envs": n_envs,
-                      "n_step": n_step,
-                      "actor_policy": actor_policy or "fp32"}
-            if rb.prioritized:
-                md_out.update(per_alpha=per_alpha, per_beta0=per_beta0,
-                              per_beta_iters=beta_iters)
-            mgr.save(it, (params, target, opt, buf, est, obs),
-                     metadata=md_out)
-    if verbose:
-        print(f"done in {time.time() - t0:.0f}s; "
-              f"total sync payload {total_sync_payload / 2**20:.1f} MiB")
-    if state_out is not None:
-        state_out.update(env_state=est, obs=obs, replay=buf)
-    return params, history
+from repro.rl.trainer import (SYNC_MODES, build_mesh,  # noqa: F401
+                              make_agent, rl_train, value_eval,
+                              value_train)
 
 
 def main(argv=None):
@@ -538,10 +73,18 @@ def main(argv=None):
     ap.add_argument("--two-stage", action="store_true")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--save-every", type=int, default=None)
-    ap.add_argument("--mesh", default="host",
-                    choices=["host", "production"])
+    ap.add_argument("--mesh", default=None,
+                    choices=["host", "production"],
+                    help="device mesh for the actor fleet (default: "
+                         "host for on-policy; unset = single-device "
+                         "for value-based)")
     ap.add_argument("--mesh-devices", type=int, default=None,
                     help="restrict the host mesh to the first N devices")
+    ap.add_argument("--sync", default=None, choices=list(SYNC_MODES),
+                    help="sharded value weight sync: lockstep fences "
+                         "every iteration; doublebuf overlaps the next "
+                         "collect with the learner update (default "
+                         "with a mesh)")
     # value-based knobs (--algo dqn|qrdqn|ddpg)
     ap.add_argument("--replay-capacity", type=int, default=50_000)
     ap.add_argument("--replay", default="uniform",
@@ -567,10 +110,12 @@ def main(argv=None):
     args = ap.parse_args(argv)
     actor_policy = None if args.fp32_actors else args.actor_policy
     if args.algo not in VALUE_ALGOS and (args.replay != "uniform"
-                                         or args.tqc_drop):
+                                         or args.tqc_drop
+                                         or args.sync is not None):
         raise ValueError(
-            "--replay/--tqc-drop configure the value-based replay "
-            f"loop; --algo {args.algo} is on-policy — drop these flags")
+            "--replay/--tqc-drop/--sync configure the value-based "
+            f"replay loop; --algo {args.algo} is on-policy — drop "
+            "these flags")
     if args.replay != "per" and (args.per_alpha != 0.6
                                  or args.per_beta0 != 0.4
                                  or args.per_beta_iters is not None):
@@ -583,13 +128,11 @@ def main(argv=None):
             raise ValueError("--two-stage/--agent hrl are on-policy "
                              "(PPO) features; value-based algos drive "
                              "the MLP nets")
-        if (args.mesh != "host" or args.mesh_devices is not None
-                or args.max_lag != 1):
-            raise ValueError(
-                "--mesh/--mesh-devices/--max-lag configure the sharded "
-                "on-policy driver; the value-based loop is single-host "
-                "— drop these flags (sharded value collection is a "
-                "ROADMAP follow-up)")
+        if args.sync is not None and args.mesh is None:
+            raise ValueError("--sync configures the sharded weight "
+                             "sync — add --mesh host")
+        sync = args.sync or ("doublebuf" if args.mesh is not None
+                             else "lockstep")
         value_train(args.algo, args.env,
                     iters=args.iters if args.iters is not None else 300,
                     n_envs=args.n_envs,
@@ -608,7 +151,9 @@ def main(argv=None):
                     replay=args.replay, per_alpha=args.per_alpha,
                     per_beta0=args.per_beta0,
                     per_beta_iters=args.per_beta_iters,
-                    tqc_drop=args.tqc_drop)
+                    tqc_drop=args.tqc_drop, mesh_kind=args.mesh,
+                    mesh_devices=args.mesh_devices, sync=sync,
+                    max_lag=args.max_lag)
     else:
         rl_train(args.env, args.agent,
                  args.iters if args.iters is not None else 40,
@@ -621,7 +166,8 @@ def main(argv=None):
                  two_stage=args.two_stage, ckpt_dir=args.ckpt_dir,
                  save_every=(args.save_every
                              if args.save_every is not None else 10),
-                 mesh_kind=args.mesh, mesh_devices=args.mesh_devices,
+                 mesh_kind=args.mesh or "host",
+                 mesh_devices=args.mesh_devices,
                  algo=args.algo, net=args.net,
                  frame_stack_k=args.frame_stack)
 

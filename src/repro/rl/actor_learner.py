@@ -10,8 +10,10 @@ Sync is modeled exactly as the paper argues it matters:
   actor -> learner: trajectories, aggregated with a liveness mask —
       a dead/straggling actor's slot is masked out of the PPO loss
       (timeout semantics), so the step never blocks on one actor.
-Policy lag: a FIFO of the last ``max_lag`` packed versions lets actors
-run k versions stale (asynchrony without an actual async runtime — the
+Policy lag: ``FleetSync`` is a versioned mailbox of packed weights —
+the learner pushes, slots fetch at a chosen lag (0 lock-step, 1
+double-buffered overlap), and per-slot staleness drives the ``alive``
+straggler mask (asynchrony via dispatch overlap, not threads — the
 math, staleness and payloads are faithful; transport is jit-internal).
 
 On a real mesh the actor fleet is shard_map'd over the data axes by
@@ -72,22 +74,58 @@ def sync_bytes(packed) -> Tuple[int, int]:
 
 # -- the actor fleet ---------------------------------------------------------
 
-class VersionBuffer:
-    """FIFO of packed weight versions (policy-lag emulation)."""
+class FleetSync:
+    """Versioned int8 weight mailbox between the learner and the fleet.
 
-    def __init__(self, max_lag: int):
+    The learner ``push``es each new packed version; actor slots
+    ``fetch`` with a chosen lag (0 = lock-step, 1 = double-buffered:
+    the collect for iteration k+1 runs against version k while the
+    learner's k+1 update is still in flight).  Each fetch is recorded
+    per slot, so ``staleness``/``alive`` are *derived* from what the
+    fleet actually read — a slot that stops fetching (straggler /
+    dead actor) drops out of ``alive()`` once it falls more than
+    ``max_lag`` versions behind, and the driver masks its batch out of
+    the loss via ``fleet_mask`` instead of blocking on it.
+    """
+
+    def __init__(self, n_slots: int, max_lag: int = 1, depth: int = 2):
+        self.n_slots = max(n_slots, 1)
         self.max_lag = max(max_lag, 1)
-        self._buf: List = []
+        self.depth = max(depth, max_lag + 1, 2)
+        self._buf: List = []                      # [(version, packed)]
+        self._version = -1
+        self._seen = [-1] * self.n_slots
 
-    def push(self, packed):
-        self._buf.append(packed)
-        if len(self._buf) > self.max_lag:
+    @property
+    def version(self) -> int:
+        """Latest published version id (-1 before the first push)."""
+        return self._version
+
+    def push(self, packed) -> int:
+        self._version += 1
+        self._buf.append((self._version, packed))
+        if len(self._buf) > self.depth:
             self._buf.pop(0)
+        return self._version
 
-    def stale(self, lag: int = 0):
-        """lag=0 -> freshest available; lag=k -> k versions old."""
-        idx = max(len(self._buf) - 1 - lag, 0)
-        return self._buf[idx]
+    def fetch(self, lag: int = 0, slots: Optional[List[int]] = None):
+        """Read the version ``lag`` behind the newest (clamped to the
+        oldest retained) and record the read for ``slots`` (default:
+        the whole fleet)."""
+        idx = max(len(self._buf) - 1 - max(lag, 0), 0)
+        version, packed = self._buf[idx]
+        for s in (range(self.n_slots) if slots is None else slots):
+            self._seen[s] = version
+        return packed
+
+    def staleness(self) -> Array:
+        """Versions-behind-newest per slot, [n_slots] int32."""
+        return jnp.asarray([self._version - s for s in self._seen],
+                           jnp.int32)
+
+    def alive(self) -> Array:
+        """[n_slots] bool — slots within the staleness budget."""
+        return self.staleness() <= self.max_lag
 
 
 def collect(packed, env: Environment, apply_fn: Callable,
@@ -181,3 +219,85 @@ def collect_sharded(packed, env: Environment, apply_fn: Callable,
                                            final_obs=batch),
                    check_replication=False)
     return fn(packed, key, env_state, obs)
+
+
+# -- value-family collection (eps-greedy / noisy behaviour actors) ------------
+
+def slot_keys(key: Array, n_slots: int) -> Array:
+    """Per-slot RNG key stack [n_slots, key_shape].
+
+    Slot 0 keeps the caller's raw key so a 1-slot sharded run consumes
+    exactly the stream the single-device path does (bit-exact by
+    construction); slots d > 0 fold in the slot index for independent
+    streams.  Note this differs from the on-policy ``collect_sharded``
+    convention, which folds the index into every slot including 0.
+    """
+    ks = [key] + [jax.random.fold_in(key, d) for d in range(1, n_slots)]
+    return jnp.stack(ks)
+
+
+def slot_key(key: Array, idx) -> Array:
+    """In-graph counterpart of ``slot_keys`` for a *traced* slot index
+    (``lax.axis_index`` inside shard_map): slot 0 keeps the raw key,
+    others fold the index in — bitwise the same per-slot streams as
+    ``slot_keys(key, n)[idx]``."""
+    return jnp.where(idx == 0, key, jax.random.fold_in(key, idx))
+
+
+def collect_value(packed, env: Environment, behave_fn: Callable,
+                  actor_policy: Optional[QuantPolicy], key: Array,
+                  env_state, obs, n_steps: int, eps: Array):
+    """One value-family actor's contribution: dequantize the synced
+    weights once, scan ``n_steps`` behaviour-policy env steps.
+
+    Returns ``((est, obs), (O, A, R, D, Tr, FO))`` with time-major
+    [T, B, ...] trajectory leaves — the exact scan the value iteration
+    ran inline before this was extracted, bit for bit.
+    """
+    actor_params = unpack_weights(packed)
+
+    def one_full(carry, k):
+        est, o = carry
+        a = behave_fn(actor_params, o, k, eps, actor_policy)
+        est, nxt, r, d, tr, fo = jax.vmap(env.step)(est, a)
+        return (est, nxt), (o, a, r, d, tr, fo)
+
+    keys = jax.random.split(key, n_steps)
+    return jax.lax.scan(one_full, (env_state, obs), keys)
+
+
+def collect_value_sharded(packed, env: Environment, behave_fn: Callable,
+                          actor_policy: Optional[QuantPolicy], key: Array,
+                          env_state, obs, n_steps: int, eps: Array,
+                          mesh: Mesh):
+    """shard_map the value-family fleet over the mesh's data axes.
+
+    The packed int8 weights and epsilon are broadcast; device ``d``
+    dequantizes locally and rolls its envs under ``slot_keys(key)[d]``.
+    On a 1-device mesh the output is bit-identical to
+    ``collect_value(..., key, ...)`` — slot 0 keeps the raw stream.
+    """
+    axes = data_axes(mesh)
+    if not axes:
+        raise ValueError(f"mesh {mesh.axis_names} has no data axes to "
+                         "shard the actor fleet over")
+    n_slots = data_axis_size(mesh)
+    B = jax.tree.leaves(obs)[0].shape[0]
+    if B % n_slots != 0:
+        raise ValueError(
+            f"n_envs={B} does not divide evenly over the mesh's "
+            f"{n_slots} data slot(s) "
+            f"({dict(zip(mesh.axis_names, mesh.devices.shape, strict=True))})")
+    keys = slot_keys(key, n_slots)
+
+    def body(packed, keys, eps, est, obs):
+        return collect_value(packed, env, behave_fn, actor_policy,
+                             keys[0], est, obs, n_steps, eps)
+
+    batch = P(axes)             # env axis (axis 0) over the data axes
+    time_major = P(None, axes)  # trajectory leaves are [T, B, ...]
+    fn = shard_map(body, mesh=mesh,
+                   in_specs=(P(), batch, P(), batch, batch),
+                   out_specs=((batch, batch), (time_major,) * 6),
+                   check_replication=False)
+    return fn(packed, keys, eps, env_state, obs)

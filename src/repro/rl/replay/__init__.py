@@ -9,6 +9,11 @@ protocol (:class:`ReplayBuffer`, built by :func:`make_replay`):
     (max-priority insertion, alpha priority exponent, annealed-beta
     importance weights, post-update priority refresh).
 
+Either backend shards over a device mesh via
+:func:`make_sharded_replay`: per-device local buffers (leading
+[n_slots] state axis), stratified-by-device global sampling, and
+globally-corrected IS weights — see :mod:`repro.rl.replay.sharded`.
+
 See :mod:`repro.rl.replay.base` for the batch contract.
 """
 from repro.rl.replay import sum_tree
@@ -16,12 +21,16 @@ from repro.rl.replay.base import (KINDS, ReplayBuffer, make_replay,
                                   replay_size)
 from repro.rl.replay.per import (PERState, PRIORITY_EPS, per_add,
                                  per_init, per_sample, per_update)
+from repro.rl.replay.sharded import (make_sharded_replay,
+                                     normalize_weights,
+                                     per_global_weights)
 from repro.rl.replay.uniform import (Replay, replay_add, replay_init,
                                      replay_sample)
 
 __all__ = [
     "KINDS", "PERState", "PRIORITY_EPS", "Replay", "ReplayBuffer",
-    "make_replay", "per_add", "per_init", "per_sample", "per_update",
-    "replay_add", "replay_init", "replay_sample", "replay_size",
-    "sum_tree",
+    "make_replay", "make_sharded_replay", "normalize_weights",
+    "per_add", "per_global_weights", "per_init", "per_sample",
+    "per_update", "replay_add", "replay_init", "replay_sample",
+    "replay_size", "sum_tree",
 ]

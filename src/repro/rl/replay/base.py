@@ -28,7 +28,7 @@ backend — ``--replay {uniform,per}`` is one string.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Tuple
+from typing import Any, Callable, Optional, Tuple
 
 import jax.numpy as jnp
 
@@ -43,11 +43,13 @@ class ReplayBuffer:
     """One replay backend bound to its static configuration."""
 
     kind: str                      # one of KINDS
-    capacity: int
+    capacity: int                  # global transition capacity
     init: Callable[[], Any]        # () -> state
     add: Callable[..., Any]        # (state, obs, act, rew, nxt, disc)
     sample: Callable[..., dict]    # (state, key, n, min_size=, beta=)
     update: Callable[..., Any]     # (state, indices, td_abs) -> state
+    n_slots: int = 1               # >1: leading per-device slot axis
+    local: Optional["ReplayBuffer"] = None  # per-slot backend (sharded)
 
     @property
     def prioritized(self) -> bool:
@@ -55,10 +57,11 @@ class ReplayBuffer:
 
 
 def replay_size(state):
-    """Valid-entry count of either backend's state (scalar int32)."""
+    """Valid-entry count of any backend's state (scalar int32) — for a
+    sharded state ([n_slots] leading axis) the sum over slots."""
     if isinstance(state, _per.PERState):
-        return state.store.size
-    return state.size
+        return jnp.sum(state.store.size)
+    return jnp.sum(state.size)
 
 
 def make_replay(kind: str, capacity: int, obs_shape,

@@ -1,0 +1,123 @@
+"""Sharded replay: per-device local buffers, stratified global sampling.
+
+The distributed-PER layout (Ape-X flavoured, but in-graph): every leaf
+of the single-device state gains a leading ``[n_slots]`` axis — slot
+``d`` is device ``d``'s *local* circular buffer (and, under PER, its
+local sum tree) of capacity ``capacity // n_slots``.  Collection writes
+each device's transitions into its own slot; sampling is **stratified
+by device**: each slot draws ``n // n_slots`` transitions from its own
+tree, which together form the global batch.
+
+The importance weights are where the global view re-enters.  Under
+stratified-by-slot sampling, a given draw lands on slot ``d``'s item
+``i`` with effective probability ``p_local(i) / n_slots``, so the
+PER bias correction must use that probability together with the
+*global* size ``N = sum_d size_d`` and normalize by the *global* batch
+max — :func:`per_global_weights` implements the first part and is
+shared verbatim by this module's host-side facade and by the
+shard_map'd learner (:func:`repro.rl.train_steps.
+make_sharded_value_iteration`), where the same math runs per device
+with ``psum``/``pmax`` supplying the cross-slot reductions.
+
+Bit-exactness contract: at ``n_slots=1`` every formula degrades to the
+single-device backend exactly (``x / 1.0`` and 1-device ``psum`` are
+bitwise identities, and slot 0 keeps the caller's raw RNG stream via
+:func:`repro.rl.actor_learner.slot_keys`), so a 1-slot sharded run
+reproduces the legacy path bit for bit.  The state stays a flat pytree:
+it donates, checkpoints, and restores bitwise like any other training
+state — the PER tree included.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.rl.actor_learner import slot_keys
+from repro.rl.replay.base import ReplayBuffer, make_replay, replay_size
+from repro.rl.replay.uniform import check_min_size
+
+Array = jax.Array
+
+
+def per_global_weights(probs_local: Array, size_global, beta,
+                       n_slots: int) -> Array:
+    """Unnormalized IS weights for stratified-by-slot PER sampling.
+
+    ``probs_local`` are each slot's *local* sampling probabilities
+    (``mass / local_total``); the effective global per-draw probability
+    is ``probs_local / n_slots``.  The caller normalizes by the global
+    batch max (``jnp.max`` host-side, ``pmax`` of the local max inside
+    shard_map) via :func:`normalize_weights`.
+    """
+    N = jnp.maximum(size_global, 1).astype(jnp.float32)
+    return ((N * (probs_local / float(n_slots)))
+            ** (-jnp.asarray(beta, jnp.float32)))
+
+
+def normalize_weights(w: Array, w_max: Array) -> Array:
+    """Max-normalize so the effective learning rate only ever shrinks."""
+    return w / jnp.maximum(w_max, 1e-12)
+
+
+def make_sharded_replay(kind: str, n_slots: int, capacity: int,
+                        obs_shape, action_shape: Tuple[int, ...] = (),
+                        action_dtype=jnp.int32, *,
+                        alpha: float = 0.6) -> ReplayBuffer:
+    """Build the sharded facade: ``n_slots`` local buffers of capacity
+    ``capacity // n_slots`` behind the standard ``ReplayBuffer``
+    protocol, with slot-major [n_slots, b, ...] batches.
+
+    ``add`` expects slot-major inputs [n_slots, B_local, ...] (device
+    ``d``'s transitions in row ``d``); ``sample`` stratifies the global
+    batch ``n`` as ``n // n_slots`` per slot under the
+    :func:`~repro.rl.actor_learner.slot_keys` streams and attaches
+    globally-corrected weights; ``update`` writes priorities back
+    slot-locally.  The per-slot backend is exposed as ``.local`` for
+    the shard_map'd iteration, which runs the identical math device-
+    side.
+    """
+    if n_slots < 1:
+        raise ValueError(f"n_slots must be >= 1, got {n_slots}")
+    if capacity % n_slots != 0:
+        raise ValueError(
+            f"replay capacity {capacity} does not divide evenly over "
+            f"{n_slots} slot(s); round it to a multiple of the mesh "
+            "size (--replay-capacity)")
+    local = make_replay(kind, capacity // n_slots, obs_shape,
+                        action_shape, action_dtype, alpha=alpha)
+
+    def init():
+        return jax.tree.map(lambda x: jnp.stack([x] * n_slots),
+                            local.init())
+
+    add = jax.vmap(local.add)
+
+    def sample(state, key, n, min_size: int = 1, beta=1.0):
+        if n % n_slots != 0:
+            raise ValueError(
+                f"batch size {n} does not divide evenly over "
+                f"{n_slots} replay slot(s)")
+        n_local = n // n_slots
+        size_g = replay_size(state)
+        # global underfill semantics: learn_start counts *total*
+        # collected transitions, not per-slot fill
+        ok = check_min_size(size_g, max(int(min_size), 1))
+        keys = slot_keys(key, n_slots)
+        batch = jax.vmap(
+            lambda s, k: local.sample(s, k, n_local, min_size=1,
+                                      beta=beta))(state, keys)
+        if local.prioritized:
+            w = per_global_weights(batch["probs"], size_g, beta, n_slots)
+            w = normalize_weights(w, jnp.max(w))
+            batch["weight"] = w * ok
+        else:
+            batch["weight"] = jnp.broadcast_to(ok, (n_slots, n_local))
+        return batch
+
+    update = jax.vmap(local.update)
+
+    return ReplayBuffer(kind, capacity, init=init, add=add,
+                        sample=sample, update=update,
+                        n_slots=n_slots, local=local)

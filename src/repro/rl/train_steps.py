@@ -25,6 +25,9 @@ Donation contracts (QF401):
   buffer (capacity x obs, the dominant allocation) every iteration
   just to apply the circular write.  Same ``params``/``packed``
   aliasing caveat.
+* the sharded value step (``make_sharded_value_iteration``) appends a
+  per-slot ``alive`` arg but keeps the identical donation contract —
+  the audit asserts donation survives the shard_map'd lowering too.
 """
 from __future__ import annotations
 
@@ -33,10 +36,16 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.sharding import data_axes, shard_map
 from repro.optim import adamw_update
-from repro.rl.actor_learner import (collect_sharded, fleet_mask,
-                                    unpack_weights)
+from repro.rl.actor_learner import (collect_sharded, collect_value,
+                                    collect_value_sharded, fleet_mask,
+                                    slot_key)
 from repro.rl.ppo import batch_from_traj, minibatch_epochs
+from repro.rl.replay import (normalize_weights, per_global_weights,
+                             replay_size)
 from repro.rl.rollout import episode_returns, episode_returns_from
 from repro.rl.value import (ddpg_actor_loss, ddpg_critic_loss_td,
                             epsilon, nstep_targets, polyak)
@@ -85,19 +94,11 @@ def make_value_iteration(env, agent, rb, a_policy, sched, ocfg, *,
     @partial(jax.jit, donate_argnums=(1, 2, 3, 5, 6))
     def iteration(params, target, opt, buf, packed, est, obs, key, it):
         k_collect, k_update = jax.random.split(key)
-        actor_params = unpack_weights(packed)
         eps = (epsilon(it * rollout_len, cfg) if discrete
                else jnp.zeros(()))
-
-        def one_full(carry, k):
-            est, o = carry
-            a = agent.behave(actor_params, o, k, eps, a_policy)
-            est, nxt, r, d, tr, fo = jax.vmap(env.step)(est, a)
-            return (est, nxt), (o, a, r, d, tr, fo)
-
-        keys = jax.random.split(k_collect, rollout_len)
-        (est, obs), (O, A, R, D, Tr, FO) = jax.lax.scan(
-            one_full, (est, obs), keys)
+        (est, obs), (O, A, R, D, Tr, FO) = collect_value(
+            packed, env, agent.behave, a_policy, k_collect, est, obs,
+            rollout_len, eps)
 
         rets, nxt, disc = nstep_targets(R, D, Tr, FO, cfg.gamma,
                                         cfg.n_step)
@@ -141,6 +142,156 @@ def make_value_iteration(env, agent, rb, a_policy, sched, ocfg, *,
             # priority refresh from the fresh TD errors (uniform: no-op)
             buf = rb.update(buf, batch["indices"], td)
 
+        ret, n_ep = episode_returns_from(R, D | Tr)
+        return params, target, opt, buf, est, obs, ret, n_ep
+
+    return iteration
+
+
+def make_sharded_value_iteration(env, agent, srb, a_policy, sched, ocfg,
+                                 mesh, *, algo: str, rollout_len: int,
+                                 updates_per_iter: int, per_beta0: float,
+                                 beta_iters: int):
+    """The value-family step shard_mapped over the mesh's data axes.
+
+    Device ``d`` collects its envs under its own behaviour stream,
+    writes into *its* local replay slot, samples its stratified share
+    of the global batch, and contributes a local gradient; the learner
+    is the explicit ``psum`` over the data axes (divided by the alive
+    count), so every device applies the identical optimizer step and
+    the params stay replicated.  The PER bias correction goes global
+    the same way: ``psum`` of the local sizes and ``pmax`` of the local
+    weight maxima feed :func:`per_global_weights`/
+    :func:`normalize_weights` — the exact math the host-side
+    ``make_sharded_replay`` facade computes.
+
+    A straggler slot (``alive[d]`` False, derived from ``FleetSync``
+    staleness) still runs shape-stably but its batch weights are zeroed
+    and the psum denominator counts only live slots.
+
+    At ``n_slots=1`` the whole step is bit-exact vs
+    :func:`make_value_iteration`: slot 0 keeps the raw RNG streams,
+    1-device ``psum``/``pmax`` are identities, and ``/ 1.0`` and
+    ``* 1.0`` are IEEE-exact.  Signature adds the per-slot ``alive``
+    vector; donation contract is unchanged (argnums 1, 2, 3, 5, 6).
+    """
+    cfg = agent.cfg
+    discrete = agent.discrete
+    rb = srb.local if srb.local is not None else srb
+    n_slots = srb.n_slots
+    axes = data_axes(mesh)
+    if not axes:
+        raise ValueError(f"mesh {mesh.axis_names} has no data axes to "
+                         "shard the value fleet over")
+    if cfg.batch_size % n_slots != 0:
+        raise ValueError(
+            f"batch size {cfg.batch_size} does not divide evenly over "
+            f"{n_slots} replay slot(s) (--batch-size)")
+    n_local = cfg.batch_size // n_slots
+    learn_min = max(int(cfg.learn_start), 1)
+    batch_spec = P(axes)
+
+    def psum_mean(tree, n_alive):
+        return jax.tree.map(
+            lambda x: jax.lax.psum(x, axes) / n_alive, tree)
+
+    def opt_step(p, s, g):
+        p, s, _ = adamw_update(g, s, p, sched, ocfg)
+        return p, s
+
+    def update_shard(params, target, opt, buf, trans, key, it, alive):
+        # leading slot axis arrives sharded to size 1: take local views
+        lbuf = jax.tree.map(lambda x: x[0], buf)
+        O, A, rets, nxt, disc = (x[0] for x in trans)
+        a_live = alive[0].astype(jnp.float32)
+        n_alive = jnp.maximum(
+            jax.lax.psum(a_live, axes), 1.0)
+
+        idx = jax.lax.axis_index(axes[0])
+        for a in axes[1:]:
+            idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
+
+        lbuf = rb.add(lbuf, O, A, rets, nxt, disc)
+        # global underfill gate: learn_start counts total transitions
+        size_g = jax.lax.psum(replay_size(lbuf), axes)
+        ok = (size_g >= learn_min).astype(jnp.float32)
+
+        beta = (per_beta0 + (1.0 - per_beta0)
+                * jnp.clip(it / beta_iters, 0.0, 1.0)
+                if rb.prioritized else 1.0)
+
+        k_update = key
+        for _ in range(updates_per_iter):
+            k_update, k_s, k_n = jax.random.split(k_update, 3)
+            k_s, k_n = slot_key(k_s, idx), slot_key(k_n, idx)
+            batch = rb.sample(lbuf, k_s, n_local, min_size=1, beta=beta)
+            if rb.prioritized:
+                w = per_global_weights(batch["probs"], size_g, beta,
+                                       n_slots)
+                w = normalize_weights(
+                    w, jax.lax.pmax(jnp.max(w), axes))
+                batch["weight"] = w * ok * a_live
+            else:
+                batch["weight"] = jnp.broadcast_to(ok * a_live,
+                                                   (n_local,))
+            if algo == "ddpg":
+                g_c, td = jax.grad(ddpg_critic_loss_td, has_aux=True)(
+                    params["critic"], target["critic"], target["actor"],
+                    agent.critic_apply, agent.act, batch, cfg, k_n)
+                c_p, c_s = opt_step(params["critic"], opt["critic"],
+                                    psum_mean(g_c, n_alive))
+                g_a = jax.grad(ddpg_actor_loss)(
+                    params["actor"], c_p, agent.critic_apply, agent.act,
+                    batch)
+                a_p, a_s = opt_step(params["actor"], opt["actor"],
+                                    psum_mean(g_a, n_alive))
+                params = {"actor": a_p, "critic": c_p}
+                opt = {"actor": a_s, "critic": c_s}
+                target = polyak(target, params, cfg.tau)
+            else:
+                g, td = jax.grad(agent.loss_fn, has_aux=True)(
+                    params, target,
+                    lambda p, o: agent.q_apply(p, o, None), batch, cfg)
+                params, opt = opt_step(params, opt,
+                                       psum_mean(g, n_alive))
+                target = polyak(target, params, cfg.target_tau)
+            lbuf = rb.update(lbuf, batch["indices"], td)
+
+        buf = jax.tree.map(lambda x: x[None], lbuf)
+        return params, target, opt, buf
+
+    update_fn = shard_map(
+        update_shard, mesh=mesh,
+        in_specs=(P(), P(), P(), batch_spec, batch_spec, P(), P(),
+                  batch_spec),
+        out_specs=(P(), P(), P(), batch_spec),
+        check_replication=False)
+
+    @partial(jax.jit, donate_argnums=(1, 2, 3, 5, 6))
+    def iteration(params, target, opt, buf, packed, est, obs, key, it,
+                  alive):
+        k_collect, k_update = jax.random.split(key)
+        eps = (epsilon(it * rollout_len, cfg) if discrete
+               else jnp.zeros(()))
+        (est, obs), (O, A, R, D, Tr, FO) = collect_value_sharded(
+            packed, env, agent.behave, a_policy, k_collect, est, obs,
+            rollout_len, eps, mesh)
+
+        rets, nxt, disc = nstep_targets(R, D, Tr, FO, cfg.gamma,
+                                        cfg.n_step)
+        T, B = R.shape
+        Bl = B // n_slots
+
+        def slotted(x):
+            # [T, B, ...] -> [n_slots, T*Bl, ...]: slot d's rows in
+            # the same t-major order the single-device flat() produced
+            x = x.reshape((T, n_slots, Bl) + x.shape[2:])
+            x = jnp.swapaxes(x, 0, 1)
+            return x.reshape((n_slots, T * Bl) + x.shape[3:])
+
+        trans = tuple(slotted(x) for x in (O, A, rets, nxt, disc))
+        params, target, opt, buf = update_fn(params, target, opt, buf,
+                                             trans, k_update, it, alive)
         ret, n_ep = episode_returns_from(R, D | Tr)
         return params, target, opt, buf, est, obs, ret, n_ep
 

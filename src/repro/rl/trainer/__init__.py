@@ -1,0 +1,34 @@
+"""repro.rl.trainer — the layered training-driver stack.
+
+Layers, bottom up:
+
+  * :mod:`~repro.rl.trainer.state` — the one :class:`TrainState`
+    schema (index-keyed pytree) both families checkpoint;
+  * :mod:`~repro.rl.trainer.evaluation` — the shared greedy
+    evaluation head;
+  * :mod:`~repro.rl.trainer.base` — the :class:`Trainer` protocol
+    (``init / iteration / save / restore / eval_policy``) plus the one
+    train loop, checkpoint-metadata validation, fold_in RNG
+    derivation, FleetSync weight sync and resume reconstruction;
+  * :mod:`~repro.rl.trainer.value` / :mod:`~repro.rl.trainer.onpolicy`
+    — the two families plugged into it.
+
+``launch/rl_train.py`` is CLI parsing + dispatch over this package.
+"""
+from repro.rl.trainer.base import (Trainer, build_mesh, flag_mismatch,
+                                   resolve_mesh)
+from repro.rl.trainer.evaluation import greedy_action, greedy_eval
+from repro.rl.trainer.onpolicy import (OnPolicyTrainer, make_agent,
+                                       rl_train)
+from repro.rl.trainer.state import (STATE_SCHEMA, TrainState,
+                                    onpolicy_state, value_state)
+from repro.rl.trainer.value import (SYNC_MODES, ValueTrainer,
+                                    value_eval, value_train)
+
+__all__ = [
+    "OnPolicyTrainer", "STATE_SCHEMA", "SYNC_MODES", "TrainState",
+    "Trainer", "ValueTrainer", "build_mesh", "flag_mismatch",
+    "greedy_action", "greedy_eval", "make_agent", "onpolicy_state",
+    "resolve_mesh", "rl_train", "value_eval", "value_state",
+    "value_train",
+]

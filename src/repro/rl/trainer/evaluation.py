@@ -1,0 +1,55 @@
+"""The one greedy-evaluation head both families (and the serving
+layer's parity tests) route through.
+
+``greedy_eval`` runs a deterministic policy for ``n_steps`` over fresh
+vectorized envs and returns the completed-episode mean return — the
+training-loop returns only count episodes that finish *inside a
+chunk*, which undercounts long-horizon envs; this is the clean
+measurement.  The jitted program is bit-identical to the historical
+``value_eval`` scan (same init_envs, same scan body, same
+``episode_returns_from`` reduction) — only the action head is injected
+instead of inlined.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.rl.dists import ActionDist, Categorical, TanhGaussian
+from repro.rl.rollout import episode_returns_from, init_envs
+
+
+def greedy_action(dist: ActionDist, dparams):
+    """Deterministic action for a distribution head: the mode.
+
+    Categorical -> argmax over logits; TanhGaussian -> the squashed
+    mean (ignoring the exploration std), rescaled to the action box.
+    """
+    if isinstance(dist, Categorical):
+        return jnp.argmax(dparams, axis=-1)
+    if isinstance(dist, TanhGaussian):
+        mu, _ = dist._split(dparams)
+        return dist._mid + dist._half * jnp.tanh(mu)
+    raise TypeError(f"no greedy head for distribution {type(dist).__name__}")
+
+
+def greedy_eval(env, act_fn, params, key, n_envs: int, n_steps: int):
+    """Run ``act_fn(params, obs) -> action`` greedily; returns
+    (mean completed-episode return, episode count) as Python scalars."""
+
+    @jax.jit
+    def run(params, key):
+        est, obs = init_envs(env, key, n_envs)
+
+        def one(carry, _):
+            est, o = carry
+            a = act_fn(params, o)
+            est, nxt, r, d, tr, _ = jax.vmap(env.step)(est, a)
+            return (est, nxt), (r, d | tr)
+
+        (_, _), (rews, bounds) = jax.lax.scan(one, (est, obs), None,
+                                              length=n_steps)
+        return episode_returns_from(rews, bounds)
+
+    ret, n_ep = run(params, key)
+    return float(ret), int(n_ep)

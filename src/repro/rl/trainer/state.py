@@ -1,0 +1,71 @@
+"""The one training-state schema both families thread and checkpoint.
+
+``TrainState`` is a NamedTuple registered with *index* tree paths
+(``SequenceKey``, not the NamedTuple default attribute paths), so it
+flattens to index-keyed checkpoint paths ("0/..." for params, "1/..."
+for target, ...), which is exactly the layout the value family's
+legacy 6-tuple
+``(params, target, opt, replay, est, obs)`` produced — a value
+checkpoint written before this schema restores into a ``TrainState``
+unchanged, and a new checkpoint still restores through the old tuple
+template (the serving loader's params-only 6-tuple template keeps
+working too).  The on-policy family's legacy layout was a 4-tuple
+``(params, opt, est, obs)``; its ``None`` slots here shift the index
+keys, so schema-less on-policy checkpoints go through the trainer's
+compatibility template instead (see ``trainer.base.restore_state``).
+
+Slots the family does not use are ``None`` (None pytree nodes carry no
+leaves — they cost nothing in the checkpoint and nothing under jit):
+
+* on-policy (ppo/a2c): ``target`` and ``replay`` are None;
+* value (dqn/qrdqn/ddpg): every slot is live (``replay`` holds the
+  uniform/PER/sharded-PER buffer state, pointers and tree included).
+
+The per-iteration RNG key is deliberately NOT state: both drivers
+derive it as ``fold_in(base_key, it)`` (see ``trainer.base.train_loop``)
+so it is a pure function of (seed, iteration) — a resumed run draws
+exactly the stream the uninterrupted run would have, with nothing to
+persist.
+
+Donation: every slot is threaded through the jitted iteration, and the
+step factories donate the threaded buffers (``repro.rl.train_steps``).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+# recorded in checkpoint metadata under "schema"; absence means a
+# legacy pre-TrainState tuple, anything else is a future format this
+# launcher refuses by name
+STATE_SCHEMA = "trainstate/v1"
+
+
+class TrainState(NamedTuple):
+    params: Any     # online nets (value: {"actor","critic"} for ddpg)
+    target: Any     # polyak target nets (None for on-policy)
+    opt: Any        # optimizer state (value/ddpg: per-subtree dict)
+    replay: Any     # replay buffer state (None for on-policy)
+    est: Any        # vectorized env state (wrapper carries included)
+    obs: Any        # last observations [n_envs, ...]
+
+
+# index paths, not the NamedTuple-default attribute paths: a value
+# TrainState must flatten to the identical "0/.."-"5/.." checkpoint
+# keys the legacy (params, target, opt, replay, est, obs) tuple did,
+# so pre-refactor checkpoints, the serving loader's tuple templates,
+# and bitwise resume all keep working unchanged
+import jax.tree_util as _jtu  # noqa: E402
+
+_jtu.register_pytree_with_keys(
+    TrainState,
+    lambda ts: (tuple((_jtu.SequenceKey(i), x)
+                      for i, x in enumerate(ts)), None),
+    lambda aux, children: TrainState(*children))
+
+
+def value_state(params, target, opt, replay, est, obs) -> TrainState:
+    return TrainState(params, target, opt, replay, est, obs)
+
+
+def onpolicy_state(params, opt, est, obs) -> TrainState:
+    return TrainState(params, None, opt, None, est, obs)

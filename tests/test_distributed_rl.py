@@ -102,6 +102,39 @@ def test_rl_train_forced_8dev_subprocess():
     assert "8 devices" in proc.stdout          # mesh banner printed
 
 
+@pytest.mark.skipif(
+    jax.device_count() >= 8,
+    reason="already multi-device: the in-process tests below cover this "
+           "without paying for a second jax startup")
+def test_value_train_forced_8dev_subprocess():
+    """The value-family counterpart: qrdqn over 8 sharded actor slots,
+    per-slot PER shards, double-buffered int8 weight sync."""
+    code = (
+        "from repro.launch.rl_train import value_train\n"
+        "import jax\n"
+        "assert jax.device_count() == 8, jax.device_count()\n"
+        "params, hist = value_train('qrdqn', 'cartpole', iters=3,\n"
+        "                           n_envs=16, rollout_len=8,\n"
+        "                           replay='per', replay_capacity=2048,\n"
+        "                           learn_start=64, mesh_kind='host',\n"
+        "                           sync='doublebuf')\n"
+        "assert len(hist) == 3\n"
+        "print('SHARDED_VALUE_OK')\n"
+    )
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               JAX_PLATFORM_NAME="cpu",
+               PYTHONPATH="src" + os.pathsep
+               + os.environ.get("PYTHONPATH", ""))
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          cwd=root, capture_output=True, text=True,
+                          timeout=540)
+    assert proc.returncode == 0, proc.stderr
+    assert "SHARDED_VALUE_OK" in proc.stdout
+    assert "8 actor slot(s) x 2 envs" in proc.stdout
+
+
 # -- forced multi-device ---------------------------------------------------
 
 @multi_device
@@ -184,4 +217,61 @@ def test_sharded_train_smoke_in_process():
     params, hist = rl_train(env_name="cartpole", iters=2, n_envs=16,
                             rollout_len=8, verbose=False)
     assert len(hist) == 2
+    assert all(np.isfinite(h) for h in hist)
+
+
+@multi_device
+def test_eight_device_value_collect_parity_vs_per_slot():
+    """The sharded value-family fleet must equal 8 independent
+    per-slot ``collect_value`` runs under the ``slot_keys`` streams
+    (slot 0 the raw key, others fold_in) concatenated along the env
+    axis — bit-exact, final env state included."""
+    from repro.core.policy import get_policy
+    from repro.rl.actor_learner import (collect_value,
+                                        collect_value_sharded, slot_keys)
+    from repro.rl.inference import build_env, make_value_agent
+
+    mesh = make_host_mesh(8)
+    n_envs, T = 16, 12
+    env = build_env("cartpole", "mlp")
+    agent = make_value_agent("dqn", env.spec, jax.random.PRNGKey(0))
+    packed = pack_weights(agent.behaviour_subtree(agent.params), 8)
+    pol = get_policy("fxp8")
+    key = jax.random.PRNGKey(2)
+    est, obs = init_envs(env, jax.random.PRNGKey(1), n_envs, mesh=mesh)
+    eps = jnp.asarray(0.2)
+    (est_s, obs_s), traj_s = collect_value_sharded(
+        packed, env, agent.behave, pol, key, est, obs, T, eps, mesh)
+    ks = slot_keys(key, 8)
+    per = n_envs // 8
+    for d in range(8):
+        sl = slice(d * per, (d + 1) * per)
+        est_d = jax.tree.map(lambda x: x[sl], est)
+        (est_r, obs_r), traj_r = collect_value(
+            packed, env, agent.behave, pol, ks[d], est_d, obs[sl], T,
+            eps)
+        np.testing.assert_array_equal(np.asarray(obs_s[sl]),
+                                      np.asarray(obs_r))
+        for a, b in zip(jax.tree.leaves(est_s),
+                        jax.tree.leaves(est_r), strict=True):
+            np.testing.assert_array_equal(np.asarray(a)[sl],
+                                          np.asarray(b))
+        for a, b in zip(jax.tree.leaves(traj_s),
+                        jax.tree.leaves(traj_r), strict=True):
+            np.testing.assert_array_equal(np.asarray(a)[:, sl],
+                                          np.asarray(b))
+
+
+@multi_device
+def test_sharded_value_train_smoke_in_process():
+    """qrdqn + per-slot PER shards + doublebuf int8 sync over the full
+    8-slot mesh, in process (CI's multidevice job runs this file under
+    forced 8 host devices)."""
+    from repro.rl.trainer import value_train
+    params, hist = value_train("qrdqn", "cartpole", iters=3, n_envs=16,
+                               rollout_len=8, verbose=False,
+                               replay="per", replay_capacity=2048,
+                               learn_start=64, mesh_kind="host",
+                               sync="doublebuf")
+    assert len(hist) == 3
     assert all(np.isfinite(h) for h in hist)

@@ -364,8 +364,9 @@ def test_two_stage_checkpoint_records_stage_and_resumes_in_stage(
     env = make("catch")
     params, _ = make_agent("hrl", env, jax.random.PRNGKey(0), "fxp8")
     est0, obs0 = init_envs(env, jax.random.PRNGKey(1), 4)
-    (_, _, _, _), md = mgr.restore((params, adamw_init(params),
-                                    est0, obs0))
+    from repro.rl.trainer import onpolicy_state
+    _, md = mgr.restore(onpolicy_state(params, adamw_init(params),
+                                       est0, obs0))
     assert md["stage"] == "subgoal"
     assert md["stage_iter"] == 1
 
@@ -558,19 +559,18 @@ def test_replay_sample_guards_underfilled_buffer():
     assert float(dqn_loss(params, params, fn, s, DQNConfig())) > 0.0
 
 
-def test_dqn_shim_rejects_boolean_done_column():
-    """repro.rl.dqn.replay_add stored done flags pre-PR3; the column is
-    a discount now — a legacy bool argument must be a loud TypeError,
-    not silently-inverted TD targets."""
-    from repro.rl import dqn as dqn_shim
-    buf = dqn_shim.replay_init(8, (4,))
-    obs = jnp.ones((2, 4))
-    with pytest.raises(TypeError, match="discount"):
-        dqn_shim.replay_add(buf, obs, jnp.zeros(2, jnp.int32),
-                            jnp.ones(2), obs, jnp.zeros(2, bool))
-    buf = dqn_shim.replay_add(buf, obs, jnp.zeros(2, jnp.int32),
-                              jnp.ones(2), obs, jnp.full(2, 0.99))
-    assert int(buf.size) == 2
+def test_dqn_shim_is_gone():
+    """The deprecated ``repro.rl.dqn`` compatibility shim (a PR-3
+    re-export of the replay/value split) is deleted: the import path
+    must fail loudly, and nothing in the source tree may still spell
+    it."""
+    with pytest.raises(ModuleNotFoundError):
+        import repro.rl.dqn  # noqa: F401
+    import pathlib
+    src = pathlib.Path(__file__).resolve().parents[1] / "src"
+    hits = [p for p in src.rglob("*.py")
+            if "repro.rl.dqn" in p.read_text()]
+    assert not hits, f"stale repro.rl.dqn references: {hits}"
 
 
 def test_replay_add_overflow_keeps_last_capacity_deterministically():

@@ -202,6 +202,32 @@ def test_parity_rejects_fp32():
         check_parity(policy, "fp32")
 
 
+def test_w8_eval_policy_routes_through_shared_greedy_head(dqn_ckpt):
+    """The w8 deployment guarantee lifted to the trainer's eval head:
+    ``value_eval`` is the shared ``Trainer.eval_policy`` route, and
+    substituting the served packed weights into that same greedy head
+    reproduces the evaluated return bit for bit."""
+    from repro.rl.trainer import ValueTrainer, greedy_eval, value_eval
+
+    policy = load_policy(dqn_ckpt)
+    agent = policy.agent
+    want = value_eval("dqn", "cartpole", policy.params, n_envs=8,
+                      n_steps=32, actor_policy="fxp8", seed=3)
+    tr = ValueTrainer("dqn", "cartpole", iters=1, n_envs=4,
+                      rollout_len=2, verbose=False)
+    assert tr.eval_policy(policy.params, n_envs=8, n_steps=32,
+                          actor_policy="fxp8", seed=3) == want
+    packed, pol = policy.pack("w8")
+    act = lambda p, o: agent.greedy(p, o, pol)  # noqa: E731
+    ret_eval = greedy_eval(policy.env, act, policy.params,
+                           jax.random.PRNGKey(3 + 17), 8, 32)
+    ret_served = greedy_eval(policy.env, act,
+                             agent.from_behaviour(packed),
+                             jax.random.PRNGKey(3 + 17), 8, 32)
+    assert ret_eval == want
+    assert ret_served == ret_eval
+
+
 # ---------------------------------------------------------------------------
 # checkpoint loading: metadata validation on the serving path
 # ---------------------------------------------------------------------------

@@ -1,0 +1,288 @@
+"""Trainer-layer tests: the TrainState schema, FleetSync staleness,
+checkpoint compatibility across the refactor, and the sharded value
+path's bit-exactness contracts."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointManager
+from repro.rl.actor_learner import (FleetSync, collect_value,
+                                    collect_value_sharded, pack_weights,
+                                    slot_key, slot_keys)
+from repro.rl.trainer import (STATE_SCHEMA, OnPolicyTrainer, TrainState,
+                              ValueTrainer, value_eval)
+
+
+def _tree_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    return len(la) == len(lb) and all(
+        bool(jnp.array_equal(x, y)) for x, y in zip(la, lb))
+
+
+# ---------------------------------------------------------------------------
+# TrainState schema
+# ---------------------------------------------------------------------------
+
+
+def test_trainstate_flattens_with_index_keys():
+    """TrainState registers SequenceKey (index) tree paths, so its
+    checkpoint keys are "0/..".."5/.." — identical to the legacy value
+    6-tuple layout — and None slots contribute no leaves."""
+    ts = TrainState({"w": jnp.ones(2)}, None, {"m": jnp.zeros(3)},
+                    None, jnp.ones(4), jnp.ones(5))
+    paths = jax.tree_util.tree_flatten_with_path(ts)[0]
+    idx = [p[0].idx for p, _ in paths]
+    assert idx == [0, 2, 4, 5]
+    # tree ops rebuild the NamedTuple, not a plain tuple
+    out = jax.tree.map(lambda x: x + 1, ts)
+    assert isinstance(out, TrainState) and out.target is None
+
+
+def test_trainstate_checkpoint_keys_match_legacy_tuple(tmp_path):
+    """A value checkpoint written as a TrainState restores through the
+    legacy 6-tuple template bitwise, and vice versa — the serving
+    loader's tuple templates keep working unchanged."""
+    k = jax.random.PRNGKey(0)
+    ts = TrainState({"w": jax.random.normal(k, (3, 2))},
+                    {"w": jnp.zeros((3, 2))}, {"mu": jnp.ones(2)},
+                    jnp.arange(4.0), jnp.arange(3), jnp.arange(6.0))
+    d1 = str(tmp_path / "a")
+    mgr = CheckpointManager(d1, save_every=1)
+    mgr.save(0, ts, metadata={"schema": STATE_SCHEMA})
+    legacy, md = mgr.restore(tuple(jax.tree.map(jnp.zeros_like, ts)))
+    assert md["schema"] == STATE_SCHEMA
+    assert _tree_equal(tuple(ts), legacy)
+
+    d2 = str(tmp_path / "b")
+    mgr2 = CheckpointManager(d2, save_every=1)
+    mgr2.save(0, tuple(ts))                       # legacy tuple layout
+    back, _ = mgr2.restore(jax.tree.map(jnp.zeros_like, ts))
+    assert isinstance(back, TrainState)
+    assert _tree_equal(ts, back)
+
+
+def test_unknown_schema_is_refused_by_name(tmp_path):
+    d = str(tmp_path / "ck")
+    tr = ValueTrainer("dqn", "cartpole", iters=2, n_envs=4,
+                      rollout_len=4, ckpt_dir=d, save_every=1,
+                      verbose=False)
+    state = tr.init_state()
+    mgr = CheckpointManager(d, save_every=1)
+    mgr.save(0, state, metadata={"schema": "trainstate/v999",
+                                 "algo": "dqn"})
+    with pytest.raises(ValueError, match="trainstate/v999"):
+        tr.restore(mgr, state)
+
+
+def test_legacy_onpolicy_checkpoint_restores_through_compat_template(
+        tmp_path):
+    """A schema-less on-policy checkpoint (the pre-TrainState 4-tuple
+    ``(params, opt, est, obs)``) restores through the trainer's compat
+    template into a TrainState."""
+    d = str(tmp_path / "ck")
+    tr = OnPolicyTrainer("cartpole", iters=2, n_envs=4, rollout_len=4,
+                         ckpt_dir=d, save_every=1, verbose=False)
+    state = tr.init_state()
+    mgr = CheckpointManager(d, save_every=1)
+    # write the legacy layout with legacy metadata (no schema)
+    mgr.save(0, (state.params, state.opt, state.est, state.obs),
+             metadata={"stage": "all", "stage_iter": 0})
+    got, md = tr.restore(mgr, jax.tree.map(jnp.zeros_like, state))
+    assert isinstance(got, TrainState) and got.replay is None
+    assert _tree_equal(got, state)
+    assert tr.resume_start(md) == 1
+
+
+# ---------------------------------------------------------------------------
+# FleetSync
+# ---------------------------------------------------------------------------
+
+
+def test_fleetsync_staleness_derives_alive_mask():
+    fs = FleetSync(3, max_lag=1)
+    fs.push("v0")
+    assert fs.fetch() == "v0"
+    assert fs.alive().tolist() == [True] * 3
+    # slot 2 stops fetching: it ages one version per push until it
+    # falls past max_lag and drops out of alive()
+    fs.push("v1")
+    fs.fetch(0, slots=[0, 1])
+    assert fs.staleness().tolist() == [0, 0, 1]
+    assert fs.alive().tolist() == [True, True, True]
+    fs.push("v2")
+    fs.fetch(0, slots=[0, 1])
+    assert fs.staleness().tolist() == [0, 0, 2]
+    assert fs.alive().tolist() == [True, True, False]
+
+
+def test_fleetsync_doublebuf_fetch_lags_one_version():
+    fs = FleetSync(2, max_lag=1)
+    fs.push("v0")
+    assert fs.fetch(1) == "v0"         # clamped to the oldest retained
+    fs.push("v1")
+    assert fs.fetch(1) == "v0"
+    fs.push("v2")
+    assert fs.fetch(1) == "v1"
+    assert fs.alive().tolist() == [True, True]
+
+
+# ---------------------------------------------------------------------------
+# sharded value path: bit-exactness contracts
+# ---------------------------------------------------------------------------
+
+
+def test_slot_key_matches_slot_keys_and_keeps_slot0_identity():
+    key = jax.random.PRNGKey(42)
+    ks = slot_keys(key, 4)
+    assert bool(jnp.array_equal(ks[0], key))       # slot 0: raw key
+    for i in range(4):
+        assert bool(jnp.array_equal(slot_key(key, jnp.asarray(i)),
+                                    ks[i]))
+
+
+def test_collect_value_sharded_1dev_bitwise_vs_local():
+    from repro.core.policy import get_policy
+    from repro.launch.mesh import make_host_mesh
+    from repro.rl.inference import build_env, make_value_agent
+    from repro.rl.rollout import init_envs
+
+    env = build_env("cartpole", "mlp")
+    agent = make_value_agent("dqn", env.spec, jax.random.PRNGKey(0))
+    pol = get_policy("fxp8")
+    packed = pack_weights(agent.behaviour_subtree(agent.params), 8)
+    mesh = make_host_mesh(1)
+    key = jax.random.PRNGKey(5)
+    est, obs = init_envs(env, jax.random.PRNGKey(1), 8)
+    est_m, obs_m = init_envs(env, jax.random.PRNGKey(1), 8, mesh=mesh)
+    eps = jnp.asarray(0.3)
+    (s1, o1), t1 = collect_value(packed, env, agent.behave, pol, key,
+                                 est, obs, 6, eps)
+    (s2, o2), t2 = collect_value_sharded(packed, env, agent.behave,
+                                         pol, key, est_m, obs_m, 6,
+                                         eps, mesh)
+    assert _tree_equal((o1, t1), (o2, t2))
+    assert _tree_equal(s1, s2)
+
+
+@pytest.mark.parametrize("replay", ["uniform", "per"])
+def test_sharded_value_training_1dev_bitwise_vs_legacy(replay):
+    """The whole training loop — collect, replay, learner, weight sync
+    — is bit-exact between the legacy single-device path and the
+    sharded path on a 1-device mesh (slot-0 RNG identity + 1-device
+    psum/pmax identities)."""
+    from repro.rl.trainer import value_train
+
+    kw = dict(iters=6, n_envs=8, rollout_len=8, verbose=False,
+              replay_capacity=1024, seed=3, learn_start=64,
+              replay=replay)
+    p_legacy, h_legacy = value_train("dqn", "cartpole", **kw)
+    p_shard, h_shard = value_train("dqn", "cartpole", mesh_kind="host",
+                                   mesh_devices=1, sync="lockstep",
+                                   **kw)
+    assert h_legacy == h_shard
+    assert _tree_equal(p_legacy, p_shard)
+
+
+def test_sharded_per_resume_is_bitwise(tmp_path):
+    """A preempted sharded PER run resumes bitwise in lockstep mode:
+    the per-slot sum-tree state, pointers included, round-trips the
+    checkpoint and the fold_in stream replays from the global step."""
+    import os
+
+    from repro.rl.trainer import value_train
+
+    d = str(tmp_path / "ck")
+    kw = dict(iters=6, n_envs=8, rollout_len=8, verbose=False,
+              replay_capacity=1024, seed=11, learn_start=64,
+              replay="per", mesh_kind="host", mesh_devices=1,
+              sync="lockstep", save_every=2, updates_per_iter=2)
+    full_out = {}
+    p_full, h_full = value_train("dqn", "cartpole", ckpt_dir=d,
+                                 state_out=full_out, **kw)
+    # drop the last checkpoint to simulate preemption after it=4, then
+    # resume with the same command line
+    for sfx in (".npz", ".npz.json"):
+        os.unlink(os.path.join(d, f"step_4{sfx}"))
+    resumed_out = {}
+    p_res, h_res = value_train("dqn", "cartpole", ckpt_dir=d,
+                               state_out=resumed_out, **kw)
+    assert h_res == h_full[3:]       # resumed at it=3 (step_2 + 1)
+    assert _tree_equal(p_full, p_res)
+    assert _tree_equal(full_out["replay"], resumed_out["replay"])
+
+
+def test_sharded_per_doublebuf_resume_continues(tmp_path):
+    """Doublebuf resume re-primes the weight mailbox (the FleetSync
+    buffer is not part of the checkpoint, so the first resumed collect
+    sees the freshest pack instead of the lag-1 one) — it must still
+    resume at the right step and train to completion."""
+    import os
+
+    from repro.rl.trainer import value_train
+
+    d = str(tmp_path / "ck")
+    kw = dict(iters=6, n_envs=8, rollout_len=8, verbose=False,
+              replay_capacity=1024, seed=11, learn_start=64,
+              replay="per", mesh_kind="host", mesh_devices=1,
+              sync="doublebuf", save_every=2, updates_per_iter=2)
+    _, h_full = value_train("dqn", "cartpole", ckpt_dir=d, **kw)
+    assert len(h_full) == 6
+    for sfx in (".npz", ".npz.json"):
+        os.unlink(os.path.join(d, f"step_4{sfx}"))
+    p_res, h_res = value_train("dqn", "cartpole", ckpt_dir=d, **kw)
+    assert len(h_res) == 3           # resumed at it=3 (step_2 + 1)
+    assert all(np.isfinite(r) for r in h_res)
+
+
+def test_sharded_checkpoint_refuses_mismatched_slot_layout(tmp_path):
+    """A checkpoint whose sharded-replay slot layout (or weight-sync
+    mode) differs from the relaunch flags is refused by the metadata
+    gate, before any tree restore."""
+    d = str(tmp_path / "ck")
+    tr = ValueTrainer("dqn", "cartpole", iters=2, n_envs=8,
+                      rollout_len=4, ckpt_dir=d, save_every=1,
+                      verbose=False, mesh_kind="host", mesh_devices=1)
+    state = tr.init_state()
+    mgr = CheckpointManager(d, save_every=1)
+    mgr.save(0, state, metadata={**tr.metadata(0, None),
+                                 "schema": STATE_SCHEMA,
+                                 "replay_slots": 4})
+    with pytest.raises(ValueError, match="4 replay slot"):
+        tr.restore(mgr, state)
+    mgr.save(1, state, metadata={**tr.metadata(1, None),
+                                 "schema": STATE_SCHEMA,
+                                 "sync": "doublebuf"})
+    with pytest.raises(ValueError, match="--sync"):
+        tr.restore(mgr, state)
+
+
+# ---------------------------------------------------------------------------
+# the shared evaluation head
+# ---------------------------------------------------------------------------
+
+
+def test_value_trainer_eval_policy_is_value_eval():
+    tr = ValueTrainer("dqn", "cartpole", iters=1, n_envs=4,
+                      rollout_len=4, verbose=False)
+    params = tr.agent.params
+    got = tr.eval_policy(params, n_envs=4, n_steps=24,
+                         actor_policy="fxp8", seed=2)
+    want = value_eval("dqn", "cartpole", params, n_envs=4, n_steps=24,
+                      actor_policy="fxp8", seed=2)
+    assert got == want
+
+
+def test_onpolicy_trainer_eval_policy_runs_greedy_head():
+    tr = OnPolicyTrainer("cartpole", iters=1, n_envs=4, rollout_len=4,
+                         verbose=False)
+    ret, n_ep = tr.eval_policy(tr.init_state().params, n_envs=4,
+                               n_steps=32)
+    assert np.isfinite(ret) and n_ep >= 0
+    # Box action spaces route through the TanhGaussian mode
+    trb = OnPolicyTrainer("pendulum", iters=1, n_envs=4, rollout_len=4,
+                          verbose=False)
+    retb, _ = trb.eval_policy(trb.init_state().params, n_envs=4,
+                              n_steps=16)
+    assert np.isfinite(retb)

@@ -105,11 +105,18 @@ def test_value_train_cli_dispatch(capsys):
         main(["--algo", "ddpg", "--env", "cartpole", "--iters", "1"])
     with pytest.raises(ValueError, match="on-policy"):
         main(["--algo", "dqn", "--agent", "hrl", "--iters", "1"])
-    # sharded-driver flags are rejected, not silently dropped
-    with pytest.raises(ValueError, match="single-host"):
+    # sharding knobs that need a mesh are rejected, not silently
+    # dropped; with --mesh host the value loop itself shards
+    with pytest.raises(ValueError, match="--mesh host"):
         main(["--algo", "dqn", "--mesh-devices", "8", "--iters", "1"])
-    with pytest.raises(ValueError, match="single-host"):
-        main(["--algo", "dqn", "--max-lag", "4", "--iters", "1"])
+    with pytest.raises(ValueError, match="--mesh host"):
+        main(["--algo", "dqn", "--sync", "doublebuf", "--iters", "1"])
+    with pytest.raises(ValueError, match="value-based"):
+        main(["--algo", "ppo", "--sync", "lockstep", "--iters", "1"])
+    main(["--algo", "dqn", "--mesh", "host", "--iters", "2",
+          "--n-envs", "8", "--rollout-len", "4"])
+    out = capsys.readouterr().out
+    assert "actor slot(s)" in out and "dqn on cartpole" in out
 
 
 def test_replay_and_targets_resume_roundtrip(tmp_path):
