@@ -13,6 +13,14 @@ Each leg reports env-steps/s and the int8 weight-sync payload (MiB) —
 the conv-stem counterpart of ``bench_env_throughput``'s MLP sweep, so
 the quantized vision path is measured with the same instrument.
 
+The ``pixel_stem`` table isolates the Q-Conv stem itself (the two
+stride-2 conv blocks, no env stepping): the fake-quant XLA conv
+(``backend=ref``) against the integer taps/Pallas path
+(``backend=xla``/``pallas``) on the training stem shapes, in
+conv-block applications per second (``convs_per_s``, a
+``check_regression`` rate field — the integer path's win over the
+fake-quant rows is baked into the committed baseline and gated).
+
 Standalone:
 
     PYTHONPATH=src:. python -m benchmarks.bench_pixel_throughput \
@@ -23,6 +31,7 @@ or via the orchestrator: ``python -m benchmarks.run --only pixel``.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 
 import jax
 
@@ -76,6 +85,63 @@ def bench_one(env_name: str, policy_name: str, net: str, k: int,
     return steps_per_s
 
 
+# stem variants: the fake-quant XLA conv vs the integer qconv paths
+# (repro.kernels.qconv).  The Pallas kernel leg only runs on a real
+# TPU — interpreter-mode timings measure the interpreter, not the
+# kernel — so the CI (CPU) baseline carries fakequant + int8 rows.
+STEM_VARIANTS = {
+    "fakequant": "ref",
+    "int8": "xla",
+    "pallas": "pallas",
+}
+
+
+def bench_stem(env_name: str, k: int, variant: str,
+               n_envs: int) -> float:
+    """Time the bare Q-Conv stem (both stride-2 blocks) at fxp8."""
+    from repro.nn.conv import conv2d_init, qconv_block
+    from repro.nn.module import unbox as _unbox
+    from repro.rl.nets import CONV_CHANNELS, CONV_KERNEL
+
+    pol = dataclasses.replace(get_policy("fxp8"),
+                              backend=STEM_VARIANTS[variant])
+    env = pixel_pipeline(make(env_name), k)
+    h, w, _ = env.obs_shape
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (n_envs, h, w, k))
+    layers, c_in = [], k
+    for i, c_out in enumerate(CONV_CHANNELS):
+        layers.append(_unbox(conv2d_init(jax.random.fold_in(key, i),
+                                         c_in, c_out, CONV_KERNEL)))
+        c_in = c_out
+
+    def stem(layers, x):
+        for p in layers:
+            x = qconv_block(p, x, stride=2, policy=pol)
+        return x
+
+    sec = timeit(jax.jit(stem), layers, x, warmup=2, iters=20)
+    convs_per_s = n_envs * len(layers) / sec
+    emit("pixel_stem", f"{env_name}/k{k}/{variant}",
+         env=env_name, frame_stack=k, variant=variant, n_envs=n_envs,
+         convs_per_s=int(convs_per_s),
+         us_per_stem=round(sec * 1e6, 1))
+    return convs_per_s
+
+
+def run_stem(envs=PIXEL_ENVS, stacks=(1, 4), n_envs: int = 64):
+    variants = ["fakequant", "int8"]
+    if jax.default_backend() == "tpu":
+        variants.append("pallas")
+    for env_name in envs:
+        for k in stacks:
+            rates = {v: bench_stem(env_name, k, v, n_envs)
+                     for v in variants}
+            emit("pixel_stem_q_speedup", f"{env_name}/k{k}",
+                 int8_vs_fakequant=round(rates["int8"]
+                                         / rates["fakequant"], 2))
+
+
 def run(fast: bool = True, n_envs: int = 0, rollout_len: int = 0,
         envs=PIXEL_ENVS, stacks=(1, 4)):
     n_envs = n_envs or (64 if fast else 256)
@@ -95,6 +161,7 @@ def run(fast: bool = True, n_envs: int = 0, rollout_len: int = 0,
                      f"{env_name}/k{k}/{net}",
                      fxp8_vs_fp32=round(results[("fxp8", net)]
                                         / results[("fp32", net)], 2))
+    run_stem(envs=envs, stacks=stacks, n_envs=n_envs)
 
 
 def main(argv=None):

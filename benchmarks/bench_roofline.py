@@ -1,18 +1,66 @@
 """§Roofline table emitter: reads the dry-run JSON (if present) and
 prints the per-cell roofline terms as a markdown table; used by
 EXPERIMENTS.md.  The dry-run itself runs out-of-process (it needs the
-512-device XLA flag before jax init)."""
+512-device XLA flag before jax init).
+
+Also measures one *live* integer-op row: the Q-Conv stem contraction
+(kernels/qconv taps path) against the fake-quant XLA conv on the same
+shape, in effective GMAC/s — the measured counterpart of the int-op
+roofline term, gated by ``check_regression`` (``gmacs_per_s``).
+
+Standalone:
+
+    PYTHONPATH=src:. python -m benchmarks.bench_roofline [--json out]
+"""
 from __future__ import annotations
 
+import argparse
 import json
 import os
 
-from benchmarks.common import emit
+from benchmarks.common import emit, timeit
 
 JSON_PATHS = ["dryrun_single_pod.json", "/root/repo/dryrun_single_pod.json"]
 
+# the keydoor/k4 training stem's first block, padded batch: the
+# MAC-heaviest conv CI actually runs
+QCONV_SHAPE = dict(b=64, h=32, w=32, c=12, n=16, k=3, stride=2)
+
+
+def run_qconv_int_ops():
+    import dataclasses
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.policy import get_policy
+    from repro.nn.conv import conv2d_apply, conv2d_init
+    from repro.nn.module import unbox
+
+    s = QCONV_SHAPE
+    x = jax.random.normal(jax.random.PRNGKey(0),
+                          (s["b"], s["h"], s["w"], s["c"]))
+    p = unbox(conv2d_init(jax.random.PRNGKey(1), s["c"], s["n"],
+                          s["k"]))
+    ho = -(-s["h"] // s["stride"])
+    wo = -(-s["w"] // s["stride"])
+    macs = s["b"] * ho * wo * s["k"] * s["k"] * s["c"] * s["n"]
+    fxp8 = get_policy("fxp8")
+    for variant, backend in (("qconv_int8", "xla"),
+                             ("qconv_fakequant", "ref")):
+        pol = dataclasses.replace(fxp8, backend=backend)
+        fn = jax.jit(lambda xx, pol=pol: conv2d_apply(
+            p, xx, stride=s["stride"], policy=pol))
+        sec = timeit(fn, x, warmup=2, iters=20)
+        emit("roofline", variant,
+             bound="live-int-op", backend=jax.default_backend(),
+             gmacs_per_s=round(macs / sec / 1e9, 2),
+             us_per_conv=round(sec * 1e6, 1),
+             shape="x".join(str(v) for v in s.values()))
+
 
 def run():
+    run_qconv_int_ops()
     path = next((p for p in JSON_PATHS if os.path.exists(p)), None)
     if path is None:
         emit("roofline", "missing",
@@ -36,3 +84,22 @@ def run():
              mfu_at_roofline=f"{100 * f_['mfu_at_roofline']:.1f}%",
              hbm_gib=round(r["memory"]["total_bytes"] / 2**30, 1))
     emit("roofline", "summary", ok=ok, skipped_or_failed=skip)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--csv", default=None)
+    ap.add_argument("--json", default=None,
+                    help="write the emit rows as JSON (CI gate input)")
+    args = ap.parse_args(argv)
+    run()
+    if args.csv:
+        from benchmarks.common import dump_csv
+        dump_csv(args.csv)
+    if args.json:
+        from benchmarks.common import dump_json
+        dump_json(args.json)
+
+
+if __name__ == "__main__":
+    main()

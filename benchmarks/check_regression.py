@@ -35,8 +35,8 @@ import sys
 # Negative-return envs (pendulum) skip the check via the base > 0
 # guard — a ratio gate is meaningless across zero)
 RATE_FIELDS = ("steps_per_s", "adds_per_s", "samples_per_s",
-               "updates_per_s", "actions_per_s",
-               "fp32_return", "q8_return")
+               "updates_per_s", "actions_per_s", "convs_per_s",
+               "gmacs_per_s", "fp32_return", "q8_return")
 # lower is better, deterministic: packed payload bytes are machine-
 # independent, so growth is exact — sync_mib is the actor-fleet weight
 # sync, model_mib the served (int8/int4-packed) policy footprint

@@ -39,11 +39,16 @@ from repro.analysis.rules import (Finding, RULES, FileCtx, FuncInfo,
 class LintConfig:
     # QF101: quantized data-path modules that must route contractions
     # through the blessed entry points
+    # nn/conv.py is *scoped* (not blessed) since the Pallas/taps qconv
+    # became the fxp8 default: its only remaining raw contractions are
+    # the documented fp fallback + STE backward (see docs/kernels.md
+    # "When to fall back to XLA"), each carrying an allowlist entry.
     qf101_scope: Tuple[str, ...] = (
         "src/repro/rl/", "src/repro/serve/", "src/repro/nn/linear.py",
+        "src/repro/nn/conv.py",
     )
     qf101_blessed: Tuple[str, ...] = (
-        "src/repro/core/qmatmul.py", "src/repro/nn/conv.py",
+        "src/repro/core/qmatmul.py",
         "src/repro/core/vact.py", "src/repro/kernels/",
     )
     # QF501: modules implementing env wrappers

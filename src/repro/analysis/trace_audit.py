@@ -385,6 +385,9 @@ SHARDED_VALUE_COMBOS = (
     ("cartpole", "mlp", "dqn", "fxp8", "per"),
     ("cartpole", "mlp", "qrdqn", "fxp8", "uniform"),
     ("pendulum", "mlp", "ddpg", "fxp8", "uniform"),
+    # pixel stem at fxp8: the integer qconv path (custom-vjp over the
+    # taps/Pallas kernel) must keep donation + single-trace discipline
+    ("catch", "conv", "qrdqn", "fxp8", "uniform"),
 )
 
 

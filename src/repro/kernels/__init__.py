@@ -1,3 +1,26 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Custom Pallas TPU kernels for the paper's compute hot-spots.
+
+Each kernel lives in its own subpackage with three files:
+
+* ``<name>.py`` — the Pallas kernel (BlockSpecs, grid, VMEM scratch),
+* ``ops.py``    — jit'd public wrappers (shape padding, backend glue,
+  automatic interpreter mode off-TPU) — the only layer callers touch,
+* ``ref.py``    — a pure-jnp oracle the parity tests compare against.
+
+Shared dtype contract: int8 operand tiles in VMEM, int32 (or exactly
+fp32-embedded) MAC accumulation, fp32 results out of the fused dequant
+epilogue.  Authoring guide and validation recipe: docs/kernels.md.
+"""
+from repro.kernels.qconv.ops import qconv2d_i8
+from repro.kernels.qlstm.ops import qlstm_cell
+from repro.kernels.qmac.ops import qmac_i8, qmac_i8_deq
+from repro.kernels.vact.ops import vact, vact_q8
+
+__all__ = [
+    "qmac_i8",
+    "qmac_i8_deq",
+    "qconv2d_i8",
+    "vact",
+    "vact_q8",
+    "qlstm_cell",
+]

@@ -1,0 +1,9 @@
+"""Q-Conv: int8 im2col conv kernel for the stride-2 pixel stem.
+
+The conv is lowered as im2col patch extraction feeding the Q-MAC
+blocking scheme: the K*K filter taps become the innermost sequential
+grid axis, each tap contributing an int8 x int8 -> int32 tile product
+that is dequantized per-pixel and accumulated in an fp32 VMEM scratch,
+with the per-out-channel dequant + bias + activation epilogue fused
+into the final tap (see docs/kernels.md).
+"""

@@ -1,0 +1,102 @@
+"""Q-Conv: int8 tap-wise im2col conv Pallas TPU kernel.
+
+The stride-2 pixel stem (paper's Q-Conv block) is lowered onto the
+Q-MAC MAC-array adaptation the same way the matmul path is
+(kernels/qmac): int8 operand tiles in VMEM, MXU int8 contractions, and
+a fused dequant epilogue so the fp32 result never makes an extra HBM
+round trip.  The conv-specific part is the im2col layout: instead of
+materializing [M, K*K*C] patch rows (which would re-quantize every
+pixel K*K times and inflate the activation-scale grid), the patches
+are kept *blocked by filter tap* —
+
+    qxt: [T, M, C]   int8   tap-shifted activation views (T = KH*KW)
+    sxt: [T, M, 1]   fp32   per-pixel activation scales, same shift
+    qwt: [T, C, N]   int8   one [C, N] weight slice per tap
+
+and the tap axis T becomes the innermost sequential grid axis: each
+step contributes one int8 x int8 -> int32 tile contraction over C,
+dequantized by its per-pixel scale and accumulated into an fp32 VMEM
+scratch (classic K-innermost Pallas matmul blocking, with fp32 rather
+than int32 carry because the activation scale varies per tap).  The
+final tap applies the fused epilogue: per-out-channel weight scale,
+bias, and optionally ReLU.
+
+This keeps the activation quantization grid *identical* to the
+fake-quant reference path (one scale per input pixel over channels,
+``fake_quant_rowwise``) — the property the serve-vs-eval bit-parity
+guarantee depends on.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+
+
+def _conv_taps_kernel(x_ref, w_ref, sx_ref, sw_ref, b_ref, o_ref,
+                      acc_ref, *, fuse_relu):
+    """One (bm x bn) output tile; grid axis 2 walks the filter taps."""
+    @pl.when(pl.program_id(2) == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # int8 x int8 -> int32 contraction over the (padded) channel dim,
+    # dequantized by the per-pixel activation scale of this tap
+    d = jax.lax.dot_general(
+        x_ref[0], w_ref[0], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+    acc_ref[...] += d.astype(jnp.float32) * sx_ref[0]
+
+    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
+    def _flush():
+        out = acc_ref[...] * sw_ref[...] + b_ref[...]
+        if fuse_relu:
+            out = jnp.maximum(out, 0.0)
+        o_ref[...] = out
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bm", "bn", "fuse_relu", "interpret"))
+def qconv_i8_taps_kernel(qxt, sxt, qwt, sw, b, *, bm=DEFAULT_BM,
+                         bn=DEFAULT_BN, fuse_relu=False,
+                         interpret=False):
+    """Tap-blocked im2col Q-Conv: int8 in, int32 MACs, fp32 out.
+
+    Blocking parameters: ``bm`` (output-pixel tile rows) and ``bn``
+    (out-channel tile columns) must divide M and N; the (padded)
+    channel count C rides whole in each block, and the tap count T is
+    the sequential K-style grid axis.
+
+    Shapes / dtypes:
+      qxt [T, M, C] int8, sxt [T, M, 1] fp32, qwt [T, C, N] int8,
+      sw [1, N] fp32 (per-out-channel), b [1, N] fp32 -> [M, N] fp32.
+
+    M = B*H_out*W_out with zero-padded rows beyond the true pixel
+    count; C/N zero-pad the same way (callers slice the result).
+    """
+    t, m, c = qxt.shape
+    _, _, n = qwt.shape
+    assert qwt.shape[0] == t and sxt.shape == (t, m, 1), \
+        (qxt.shape, sxt.shape, qwt.shape)
+    grid = (m // bm, n // bn, t)
+    return pl.pallas_call(
+        functools.partial(_conv_taps_kernel, fuse_relu=fuse_relu),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bm, c), lambda i, j, tt: (tt, i, 0)),
+            pl.BlockSpec((1, c, bn), lambda i, j, tt: (tt, 0, j)),
+            pl.BlockSpec((1, bm, 1), lambda i, j, tt: (tt, i, 0)),
+            pl.BlockSpec((1, bn), lambda i, j, tt: (0, j)),
+            pl.BlockSpec((1, bn), lambda i, j, tt: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, tt: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(qxt, qwt, sxt, sw, b)

@@ -1,0 +1,64 @@
+"""Pure-jnp oracle for the Q-Conv kernel.
+
+Deliberately computes the per-tap contraction a *different* way
+(broadcast-multiply + sum instead of ``dot_general``): every int8
+product and every channel partial sum is an integer below 2^24, so
+fp32 holds them exactly and any contraction order gives the same
+bits.  Only the fp32 *tap* accumulation is order-sensitive, and the
+oracle walks taps in the same (kh-major, kw) order as the kernel, so
+eager-mode agreement with the XLA tap path is bitwise; compiled
+backends may regroup the fp accumulation into FMAs and land within
+1 ulp (asserted at rtol=1e-6, same bar as kernels/qmac).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def same_pads(size: int, k: int, stride: int):
+    """SAME output size and (lo, hi) pads for one spatial dim."""
+    out = -(-size // stride)
+    total = max((out - 1) * stride + k - size, 0)
+    return out, (total // 2, total - total // 2)
+
+
+def valid_out(size: int, k: int, stride: int) -> int:
+    return (size - k) // stride + 1
+
+
+def qconv2d_i8(qx: jax.Array, sx: jax.Array, qw: jax.Array,
+               sw: jax.Array, b: jax.Array, *, stride: int = 1,
+               padding: str = "SAME",
+               fuse_relu: bool = False) -> jax.Array:
+    """Integer Q-Conv oracle.
+
+    qx [B,H,W,C] int8, sx [B,H,W,1] fp32 per-pixel scales,
+    qw [KH,KW,C,N] int8, sw broadcastable-to-[N] fp32 per-out-channel
+    scales, b [N] fp32 -> [B,H',W',N] fp32.
+    """
+    bsz, h, w, c = qx.shape
+    kh, kw, _, n = qw.shape
+    if padding == "SAME":
+        ho, (pt, pb) = same_pads(h, kh, stride)
+        wo, (plf, prt) = same_pads(w, kw, stride)
+        qx = jnp.pad(qx, ((0, 0), (pt, pb), (plf, prt), (0, 0)))
+        sx = jnp.pad(sx, ((0, 0), (pt, pb), (plf, prt), (0, 0)))
+    elif padding == "VALID":
+        ho, wo = valid_out(h, kh, stride), valid_out(w, kw, stride)
+    else:
+        raise ValueError(f"unsupported padding {padding!r}")
+    acc = jnp.zeros((bsz, ho, wo, n), jnp.float32)
+    for di in range(kh):
+        for dj in range(kw):
+            xt = qx[:, di:di + (ho - 1) * stride + 1:stride,
+                    dj:dj + (wo - 1) * stride + 1:stride, :]
+            st = sx[:, di:di + (ho - 1) * stride + 1:stride,
+                    dj:dj + (wo - 1) * stride + 1:stride, :]
+            # integer contraction over C, embedded exactly in fp32
+            prod = (xt.astype(jnp.float32)[..., None]
+                    * qw[di, dj].astype(jnp.float32)).sum(axis=3)
+            acc = acc + prod * st.astype(jnp.float32)
+    out = acc * jnp.asarray(sw, jnp.float32).reshape(1, 1, 1, -1) \
+        + b.astype(jnp.float32)
+    return jnp.maximum(out, 0.0) if fuse_relu else out

@@ -20,7 +20,16 @@ def _interpret_default() -> bool:
 
 def qlstm_cell(qx, sx, qh, sh, qw, sw, qu, su, b, c, *,
                n_iters: int = 13, interpret: Optional[bool] = None):
-    """Fused quantized LSTM step; pads batch to a tile multiple."""
+    """Fused quantized LSTM cell step (one timestep, full stripe).
+
+    Dtype contract: int8 input/hidden (qx [B, Din], qh [B, H]) with
+    per-tensor fp32 scales, int8 gate weights (qw [Din, 4H],
+    qu [H, 4H]) with per-column fp32 scales, fp32 bias b [4H] and cell
+    state c [B, H]; int32 MACs, CORDIC gate nonlinearities
+    (``n_iters`` rounds), fp32 (h', c') out.  The whole [Din + H, 4H]
+    weight stripe must fit VMEM (checked; tile H or fall back to
+    qmac+vact otherwise); batch pads to a multiple of 8.
+    """
     if interpret is None:
         interpret = _interpret_default()
     B, Din = qx.shape

@@ -22,7 +22,15 @@ def _interpret_default() -> bool:
 
 def qmac_i8(qx: jax.Array, qw: jax.Array, *, bm=None, bn=None, bk=None,
             interpret=None) -> jax.Array:
-    """int8 [M,K] x int8 [K,N] -> int32 [M,N], any M/K/N (auto-padded)."""
+    """Q-MAC int8 matmul: int8 [M,K] x int8 [K,N] -> int32 [M,N].
+
+    Dtype contract: int8 operands, int32 accumulation, int32 out (no
+    epilogue).  ``bm``/``bn``/``bk`` are the M/N/K tile sizes (default:
+    largest power of two <= min(dim, 128)); any M/K/N is accepted —
+    operands are zero-padded to tile multiples and the result sliced
+    back.  |acc| <= K*127*128 must fit int32, i.e. K <= 131072.
+    ``interpret=None`` runs the Pallas interpreter off-TPU.
+    """
     if interpret is None:
         interpret = _interpret_default()
     m, k = qx.shape
@@ -39,7 +47,14 @@ def qmac_i8(qx: jax.Array, qw: jax.Array, *, bm=None, bn=None, bk=None,
 
 def qmac_i8_deq(qx, sx, qw, sw, *, bm=None, bn=None, bk=None,
                 interpret=None) -> jax.Array:
-    """Fused dequantizing int8 matmul -> fp32."""
+    """Fused dequantizing Q-MAC matmul: (qx . qw) * sx * sw -> fp32.
+
+    Dtype contract: int8 operands, int32 MAC accumulation, fp32 out of
+    the fused per-row x per-channel dequant epilogue.  Shapes:
+    qx [M, K] int8, sx [M, 1] fp32 per-row (per-token) scales,
+    qw [K, N] int8, sw [1, N] fp32 per-out-channel scales -> [M, N].
+    Blocking and padding as in :func:`qmac_i8`.
+    """
     if interpret is None:
         interpret = _interpret_default()
     m, k = qx.shape

@@ -37,7 +37,15 @@ def _blk(dim, cap):
 
 def vact(x: jax.Array, kind: str, n_iters: int,
          interpret: Optional[bool] = None) -> jax.Array:
-    """CORDIC activation on any-shaped input (last axis = features)."""
+    """V-ACT CORDIC activation on any-shaped fp input.
+
+    ``kind`` is one of the CORDIC-approximated nonlinearities (tanh,
+    sigmoid, softmax, ...) evaluated in ``n_iters`` shift-add rounds.
+    The input is flattened to [rows, features] (last axis = features);
+    rows tile at <= 128 (and features too, except softmax whose row
+    reduction must see the whole feature axis in one block).  fp32
+    compute, fp32 out, original shape restored.
+    """
     if interpret is None:
         interpret = _interpret_default()
     x2, shape = _as2d(x.astype(jnp.float32))
@@ -58,7 +66,13 @@ def vact(x: jax.Array, kind: str, n_iters: int,
 
 def vact_q8(qx: jax.Array, sx: jax.Array, kind: str, n_iters: int,
             interpret: Optional[bool] = None) -> jax.Array:
-    """Fused int8->int8 activation (output scale 1/127)."""
+    """Fused int8 -> int8 V-ACT activation (requantizing).
+
+    Dtype contract: qx int8 with per-tensor scale ``sx`` (fp32 scalar),
+    dequant + CORDIC ``kind`` + requant all inside the kernel; output
+    is int8 on the fixed 1/127 grid (activations land in [-1, 1]).
+    Same [rows <= 128, features <= 128] tiling as :func:`vact`.
+    """
     if interpret is None:
         interpret = _interpret_default()
     x2, shape = _as2d(qx)

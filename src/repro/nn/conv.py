@@ -2,21 +2,31 @@
 and causal depthwise 1D conv (mamba2 / recurrentgemma stems).
 
 Q-Conv follows the paper: stride-2 replaces max-pooling, ReLU after.
-Weights/activations are fake-quantized per policy (im2col+Q-MAC would
-be the TPU kernel; XLA already lowers conv to MXU convolutions, so we
-quantize operands and let XLA fuse — documented adaptation).
+At int8 weights *and* activations the conv runs as a true integer
+program — per-pixel int8 activations against per-out-channel int8
+filters, tap-wise Q-MAC contractions with a fused dequant + bias
+(+ ReLU) epilogue (``repro.kernels.qconv``; Pallas kernel when
+``policy.backend == "pallas"``, tap-wise ``dot_general`` otherwise;
+see docs/kernels.md).  The quantization grids are exactly the ones the
+fake-quant path uses (``fake_quant_rowwise`` per pixel,
+``fake_quant(..., channel_axis=3)`` per out-channel), so the packed
+serving path stays bit-compatible with training-time eval.  Wider
+policies fall back to fake-quantized operands on the XLA conv.
 """
 from __future__ import annotations
 
+import functools
 from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.fxp import fake_quant, fake_quant_rowwise
-from repro.core.fxp import QTensor, as_dense
+from repro.core.fxp import dequantize, fake_quant, fake_quant_rowwise
+from repro.core.fxp import quantize, QTensor, as_dense
 from repro.core.policy import QuantPolicy
+from repro.core.qmatmul import quantize_rowwise
 from repro.core.vact import activation
+from repro.kernels.qconv import ops as qconv_ops
 from repro.nn.module import KeySeq, he_init, param, zeros_init
 
 
@@ -30,27 +40,110 @@ def conv2d_init(key, c_in: int, c_out: int, kernel: int,
     }
 
 
+def _raw_conv(x, w, stride: int, padding: str):
+    """fp NHWC/HWIO conv — fallback + the integer path's STE backward."""
+    dn = jax.lax.conv_dimension_numbers(x.shape, w.shape,
+                                        ("NHWC", "HWIO", "NHWC"))
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), padding, dimension_numbers=dn)
+
+
+def _use_integer_conv(policy: Optional[QuantPolicy], w) -> bool:
+    """True when the conv can run as a real int8 program: quantized
+    activations at <= 8 bits against int8-representable weights, on a
+    backend with an integer lowering (the ref backend keeps the
+    fake-quant ops visible for inspection)."""
+    if policy is None or not policy.quantized_a or policy.a_bits > 8:
+        return False
+    if policy.backend not in ("xla", "pallas"):
+        return False
+    if isinstance(w, QTensor):
+        return w.bits <= 8
+    return policy.quantized_w and policy.w_bits <= 8
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3))
+def _qconv(policy, stride, padding, fuse_relu, x, w, b):
+    out, _ = _qconv_fwd(policy, stride, padding, fuse_relu, x, w, b)
+    return out
+
+
+def _qconv_fwd(policy, stride, padding, fuse_relu, x, w, b):
+    qw, sw = quantize(w, policy.w_bits, channel_axis=3)
+    qx, sx = quantize_rowwise(x, policy.a_bits)
+    out = qconv_ops.qconv2d_i8(
+        qx, sx, qw, sw.reshape(-1), b.astype(jnp.float32),
+        stride=stride, padding=padding, fuse_relu=fuse_relu,
+        kernel=policy.backend == "pallas")
+    # STE residuals: the dequantized operands the integer program saw
+    return out, (dequantize(qx, sx, x.dtype), dequantize(qw, sw, w.dtype),
+                 b)
+
+
+def _qconv_bwd(policy, stride, padding, fuse_relu, res, g):
+    x_dq, w_dq, b = res
+
+    def fp_ref(x, w, b):
+        out = _raw_conv(x.astype(jnp.float32), w.astype(jnp.float32),
+                        stride, padding) + b.astype(jnp.float32)
+        return jnp.maximum(out, 0.0) if fuse_relu else out
+
+    _, vjp = jax.vjp(fp_ref, x_dq, w_dq, b)
+    return vjp(g)
+
+
+_qconv.defvjp(_qconv_fwd, _qconv_bwd)
+
+
 def conv2d_apply(p, x, *, stride: int = 1, padding: str = "SAME",
-                 policy: Optional[QuantPolicy] = None):
-    """x: [B, H, W, C] -> [B, H', W', C']."""
+                 policy: Optional[QuantPolicy] = None,
+                 fuse_relu: bool = False):
+    """x: [B, H, W, C] -> [B, H', W', C'].
+
+    With an int8-capable ``policy`` (quantized activations and weights
+    at <= 8 bits, xla/pallas backend) this dispatches to the integer
+    Q-Conv program — packed ``QTensor`` weights go straight to the
+    kernel, fp weights go through the straight-through-estimator
+    wrapper so training still differentiates.  Otherwise operands are
+    fake-quantized (when the policy asks) and fed to the XLA conv.
+    """
+    if _use_integer_conv(policy, p["w"]):
+        if isinstance(p["w"], QTensor):
+            qx, sx = quantize_rowwise(x, policy.a_bits)
+            return qconv_ops.qconv2d_i8(
+                qx, sx, p["w"].qvalue, p["w"].scale.reshape(-1),
+                p["b"].astype(jnp.float32), stride=stride,
+                padding=padding, fuse_relu=fuse_relu,
+                kernel=policy.backend == "pallas")
+        return _qconv(policy, stride, padding, fuse_relu,
+                      x, as_dense(p["w"]), p["b"])
     w = as_dense(p["w"])
     if policy is not None and policy.quantized_w \
             and not isinstance(p["w"], QTensor):
         w = fake_quant(w, policy.w_bits, channel_axis=3)
     if policy is not None and policy.quantized_a:
         x = fake_quant_rowwise(x, policy.a_bits)
-    dn = jax.lax.conv_dimension_numbers(x.shape, w.shape,
-                                        ("NHWC", "HWIO", "NHWC"))
-    out = jax.lax.conv_general_dilated(
+    out = _raw_conv(
         x.astype(policy.compute_dtype if policy else jnp.float32),
         w.astype(policy.compute_dtype if policy else jnp.float32),
-        (stride, stride), padding, dimension_numbers=dn)
-    return out + p["b"].astype(out.dtype)
+        stride, padding)
+    out = out + p["b"].astype(out.dtype)
+    return jnp.maximum(out, 0.0) if fuse_relu else out
 
 
 def qconv_block(p, x, *, stride: int = 2,
                 policy: Optional[QuantPolicy] = None):
-    """Paper's Q-Conv block: stride-2 conv (replaces pooling) + ReLU."""
+    """Paper's Q-Conv block: stride-2 conv (replaces pooling) + ReLU.
+
+    On the integer path the ReLU rides in the kernel epilogue and only
+    the V-ACT requantization step runs outside; elsewhere the ReLU goes
+    through ``activation`` as before.  Both orders are equivalent
+    (ReLU-then-requant == fused-ReLU-then-requant, elementwise).
+    """
+    if _use_integer_conv(policy, p["w"]):
+        out = conv2d_apply(p, x, stride=stride, policy=policy,
+                           fuse_relu=True)
+        return activation(out, "identity", policy)
     return activation(conv2d_apply(p, x, stride=stride, policy=policy),
                       "relu", policy)
 

@@ -1,0 +1,75 @@
+"""Markdown link checker for the repo docs.
+
+Walks the given markdown files (default: README.md + docs/*.md),
+extracts inline links/images, and verifies that every *local* target
+exists relative to the linking file (external http(s)/mailto links are
+skipped — CI must not depend on the network).  Anchors are stripped;
+a `#fragment`-only link is checked against the file's own headings.
+
+    python tools/check_md_links.py [files...]
+
+Exit 0 when every local target resolves, 1 otherwise (one line per
+broken link).  `tests/test_docs.py` runs the same check in tier-1.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+# inline [text](target) links and images; reference-style links are
+# not used in this repo's docs
+_LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_HEADING = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+_CODE_FENCE = re.compile(r"```.*?```", re.DOTALL)
+
+
+def _slug(heading: str) -> str:
+    """GitHub-style anchor slug."""
+    h = re.sub(r"[`*_]", "", heading.strip().lower())
+    h = re.sub(r"[^\w\- ]", "", h)
+    return h.replace(" ", "-")
+
+
+def default_files():
+    files = [REPO / "README.md"]
+    files += sorted((REPO / "docs").glob("*.md"))
+    return [f for f in files if f.exists()]
+
+
+def check_file(path: Path) -> list[str]:
+    text = path.read_text()
+    anchors = {_slug(h) for h in _HEADING.findall(text)}
+    errors = []
+    for target in _LINK.findall(_CODE_FENCE.sub("", text)):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        base, _, frag = target.partition("#")
+        if not base:
+            if frag and _slug(frag) not in anchors:
+                errors.append(f"{path.relative_to(REPO)}: broken "
+                              f"anchor #{frag}")
+            continue
+        resolved = (path.parent / base).resolve()
+        if not resolved.exists():
+            errors.append(f"{path.relative_to(REPO)}: broken link "
+                          f"{target} -> {resolved}")
+    return errors
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    files = [Path(a).resolve() for a in argv] or default_files()
+    errors = []
+    for f in files:
+        errors += check_file(f)
+    for e in errors:
+        print(f"FAIL  {e}")
+    if not errors:
+        print(f"markdown link check: {len(files)} file(s) OK")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
