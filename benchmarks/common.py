@@ -48,10 +48,16 @@ def dump_json(path: str):
     against the committed baseline (benchmarks/check_regression.py)."""
     import json
     import platform
+    import jaxlib
     out = {
         "meta": {
             "python": platform.python_version(),
             "machine": platform.machine(),
+            # terse and hostname-free, so baselines diff cleanly
+            # across machines of the same class
+            "platform": platform.platform(terse=True),
+            "jax": jax.__version__,
+            "jaxlib": jaxlib.__version__,
             "devices": len(jax.devices()),
             "backend": jax.default_backend(),
         },

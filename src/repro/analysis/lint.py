@@ -55,6 +55,12 @@ class LintConfig:
     qf501_scope: Tuple[str, ...] = (
         "src/repro/rl/envs/wrappers.py",
     )
+    # QF601: driver CLIs exempt from the no-print rule — they are the
+    # human-facing surface; everything else routes through repro.obs
+    # (analysis/ is outside the lint universe already)
+    qf601_exempt: Tuple[str, ...] = (
+        "src/repro/launch/",
+    )
     # library modules: naming conventions + attribute name-matching
     # may mark functions here as jit-reachable
     library: Tuple[str, ...] = (

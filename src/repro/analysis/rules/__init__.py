@@ -192,10 +192,11 @@ def walk_body(func: ast.AST, *, into_nested: bool = False):
 # ---------------------------------------------------------------------------
 
 def _load_rules():
-    from repro.analysis.rules import (determinism, donation, raw_matmul,
-                                      tracer_control, wrapper_protocol)
+    from repro.analysis.rules import (determinism, donation, no_print,
+                                      raw_matmul, tracer_control,
+                                      wrapper_protocol)
     mods = [raw_matmul, tracer_control, determinism, donation,
-            wrapper_protocol]
+            wrapper_protocol, no_print]
     return {m.RULE_ID: m for m in mods}
 
 

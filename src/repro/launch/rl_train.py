@@ -107,6 +107,16 @@ def main(argv=None):
     ap.add_argument("--learn-start", type=int, default=None,
                     help="min replay size before updates (default: the "
                          "algo config's, 256)")
+    # observability (docs/observability.md)
+    ap.add_argument("--metrics-dir", default=None,
+                    help="write obs/v1 JSONL telemetry (train.jsonl) "
+                         "here; training stays bitwise identical")
+    ap.add_argument("--profile-dir", default=None,
+                    help="capture a jax.profiler trace into this dir")
+    ap.add_argument("--profile-start", type=int, default=0,
+                    help="global step the profiler window opens at")
+    ap.add_argument("--profile-steps", type=int, default=1,
+                    help="iterations the profiler window spans")
     args = ap.parse_args(argv)
     actor_policy = None if args.fp32_actors else args.actor_policy
     if args.algo not in VALUE_ALGOS and (args.replay != "uniform"
@@ -153,7 +163,11 @@ def main(argv=None):
                     per_beta_iters=args.per_beta_iters,
                     tqc_drop=args.tqc_drop, mesh_kind=args.mesh,
                     mesh_devices=args.mesh_devices, sync=sync,
-                    max_lag=args.max_lag)
+                    max_lag=args.max_lag,
+                    metrics_dir=args.metrics_dir,
+                    profile_dir=args.profile_dir,
+                    profile_start=args.profile_start,
+                    profile_steps=args.profile_steps)
     else:
         rl_train(args.env, args.agent,
                  args.iters if args.iters is not None else 40,
@@ -169,7 +183,11 @@ def main(argv=None):
                  mesh_kind=args.mesh or "host",
                  mesh_devices=args.mesh_devices,
                  algo=args.algo, net=args.net,
-                 frame_stack_k=args.frame_stack)
+                 frame_stack_k=args.frame_stack,
+                 metrics_dir=args.metrics_dir,
+                 profile_dir=args.profile_dir,
+                 profile_start=args.profile_start,
+                 profile_steps=args.profile_steps)
 
 
 if __name__ == "__main__":

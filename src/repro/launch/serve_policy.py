@@ -15,8 +15,11 @@ bit-identical to the evaluation path (guaranteed at w8).
 from __future__ import annotations
 
 import argparse
+import os
+import time
 from typing import Optional
 
+from repro.obs import SCHEMA, JsonlSink
 from repro.serve import (PRECISIONS, PolicyServer, check_parity,
                          load_policy, serve_episodes)
 
@@ -29,7 +32,10 @@ def serve_policy(ckpt_dir: str, algo: Optional[str] = None,
                  temperature: float = 1.0, episodes: int = 100,
                  n_slots: int = 64, max_bucket: int = 32,
                  seed: int = 0, do_check_parity: bool = False,
-                 verbose: bool = True):
+                 verbose: bool = True,
+                 metrics_dir: Optional[str] = None,
+                 metrics_every: int = 50,
+                 profile_dir: Optional[str] = None):
     policy = load_policy(ckpt_dir, algo=algo, net=net,
                          env_name=env_name, step=step)
     if verbose:
@@ -53,7 +59,33 @@ def serve_policy(ckpt_dir: str, algo: Optional[str] = None,
     server = PolicyServer(policy, precision=precision, mode=mode,
                           temperature=temperature,
                           max_bucket=max_bucket, seed=seed)
-    stats = serve_episodes(server, episodes, n_slots=n_slots, seed=seed)
+    sink = None
+    if metrics_dir:
+        sink = JsonlSink(
+            os.path.join(metrics_dir, "serve.jsonl"),
+            run={"driver": "serve_policy", "algo": policy.algo,
+                 "env": policy.env_name, "net": policy.net,
+                 "precision": precision, "mode": mode,
+                 "n_slots": n_slots, "max_bucket": max_bucket,
+                 "seed": seed})
+    if profile_dir:
+        import jax
+        os.makedirs(profile_dir, exist_ok=True)
+        jax.profiler.start_trace(profile_dir)
+    try:
+        stats = serve_episodes(server, episodes, n_slots=n_slots,
+                               seed=seed, telemetry=sink,
+                               flush_every=metrics_every)
+    finally:
+        if profile_dir:
+            import jax
+            jax.profiler.stop_trace()
+            if sink:
+                sink.write({"schema": SCHEMA, "kind": "profile",
+                            "t_wall": time.time(), "dir": profile_dir,
+                            "window": [0, int(server._requests)]})
+        if sink:
+            sink.close()
     s = stats.server
     if verbose:
         mib = 1024 * 1024
@@ -99,13 +131,26 @@ def main(argv=None):
     ap.add_argument("--check-parity", action="store_true",
                     help="assert served greedy actions match the "
                          "evaluation path before serving")
+    # observability (docs/observability.md)
+    ap.add_argument("--metrics-dir", default=None,
+                    help="write obs/v1 JSONL telemetry (serve.jsonl) "
+                         "here")
+    ap.add_argument("--metrics-every", type=int, default=50,
+                    help="loop steps per serve record (0: one record "
+                         "for the whole run)")
+    ap.add_argument("--profile-dir", default=None,
+                    help="capture a jax.profiler trace of the serving "
+                         "loop into this dir")
     args = ap.parse_args(argv)
     serve_policy(args.ckpt, algo=args.algo, net=args.net,
                  env_name=args.env, step=args.step,
                  precision=args.policy, mode=args.mode,
                  temperature=args.temperature, episodes=args.episodes,
                  n_slots=args.slots, max_bucket=args.batch_bucket,
-                 seed=args.seed, do_check_parity=args.check_parity)
+                 seed=args.seed, do_check_parity=args.check_parity,
+                 metrics_dir=args.metrics_dir,
+                 metrics_every=args.metrics_every,
+                 profile_dir=args.profile_dir)
 
 
 if __name__ == "__main__":

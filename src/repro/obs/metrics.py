@@ -1,0 +1,119 @@
+"""Jit-safe metric state: the ``MetricBuffer`` pytree.
+
+The buffer is a plain nested dict of small device arrays — counters
+(int32, reset on every flush), gauges (float32, last-write-wins) and
+fixed-bucket histograms (int32 counts over static edges) — built from
+a :class:`MetricSpec` that is frozen for the run.  It is threaded
+through the jitted training iteration *exactly like replay state*:
+passed in, donated, and returned updated, so instrumentation adds no
+host sync and no per-iteration copies.  Reads happen only at host
+sync points (:func:`flush`), which is what keeps the
+metrics-don't-perturb-training contract (docs/observability.md) cheap
+to honour: the update ops consume already-computed traced values and
+feed nothing back into the training math.
+
+Everything here is 32-bit by construction — the trace audit's QF901
+(no 64-bit dtypes in a traced step) applies to the instrumented
+programs too.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class MetricSpec:
+    """The static shape of a run's metric buffer.
+
+    ``hists`` maps a name to its (static) bucket edges; a value ``v``
+    lands in bucket ``i`` when ``edges[i-1] <= v < edges[i]`` with the
+    two open ends included, so counts has ``len(edges) + 1`` slots.
+    """
+
+    counters: Tuple[str, ...] = ()
+    gauges: Tuple[str, ...] = ()
+    hists: Tuple[Tuple[str, Tuple[float, ...]], ...] = ()
+
+    def __post_init__(self):
+        names = (list(self.counters) + list(self.gauges)
+                 + [n for n, _ in self.hists])
+        dupes = {n for n in names if names.count(n) > 1}
+        if dupes:
+            raise ValueError(f"duplicate metric names: {sorted(dupes)}")
+        for name, edges in self.hists:
+            if len(edges) < 1:
+                raise ValueError(f"histogram {name!r} needs >= 1 edge")
+            if list(edges) != sorted(edges):
+                raise ValueError(f"histogram {name!r} edges must be "
+                                 "sorted ascending")
+
+    def edges(self, name: str) -> Tuple[float, ...]:
+        for n, e in self.hists:
+            if n == name:
+                return e
+        raise KeyError(f"no histogram named {name!r} in this spec")
+
+    def init(self) -> Dict:
+        """A zeroed :data:`MetricBuffer` for this spec."""
+        return {
+            "counters": {n: jnp.zeros((), jnp.int32)
+                         for n in self.counters},
+            "gauges": {n: jnp.zeros((), jnp.float32)
+                       for n in self.gauges},
+            "hists": {n: jnp.zeros((len(e) + 1,), jnp.int32)
+                      for n, e in self.hists},
+        }
+
+
+def counter_add(buf: Dict, name: str, value) -> Dict:
+    """Increment a window counter (reset to zero on flush)."""
+    c = dict(buf["counters"])
+    c[name] = c[name] + jnp.asarray(value, jnp.int32)
+    return {**buf, "counters": c}
+
+
+def gauge_set(buf: Dict, name: str, value) -> Dict:
+    """Record a gauge (last write in the window wins)."""
+    g = dict(buf["gauges"])
+    g[name] = jnp.asarray(value, jnp.float32)
+    return {**buf, "gauges": g}
+
+
+def gauge_max(buf: Dict, name: str, value) -> Dict:
+    """Record the running window maximum of a gauge."""
+    g = dict(buf["gauges"])
+    g[name] = jnp.maximum(g[name], jnp.asarray(value, jnp.float32))
+    return {**buf, "gauges": g}
+
+
+def hist_observe(spec: MetricSpec, buf: Dict, name: str,
+                 values) -> Dict:
+    """Scatter ``values`` (any shape) into the named histogram."""
+    edges = jnp.asarray(spec.edges(name), jnp.float32)
+    idx = jnp.searchsorted(edges, jnp.ravel(
+        jnp.asarray(values, jnp.float32)), side="right")
+    h = dict(buf["hists"])
+    h[name] = h[name].at[idx].add(1)
+    return {**buf, "hists": h}
+
+
+def flush(spec: MetricSpec, buf: Dict) -> Tuple[Dict, Dict, Dict]:
+    """Host sync point: pull the buffer to host and return
+    ``(metrics, hists, zeroed_buffer)``.
+
+    ``metrics`` is a flat name -> python number dict (counters and
+    gauges); ``hists`` maps name -> ``{"edges": [...], "counts":
+    [...]}`` — the JSONL-ready shapes.  The returned buffer is a fresh
+    zero tree, so the caller keeps donating without aliasing the read.
+    """
+    host = jax.device_get(buf)
+    metrics = {n: int(host["counters"][n]) for n in spec.counters}
+    metrics.update({n: float(host["gauges"][n]) for n in spec.gauges})
+    hists = {n: {"edges": [float(x) for x in e],
+                 "counts": [int(c) for c in host["hists"][n]]}
+             for n, e in spec.hists}
+    return metrics, hists, spec.init()

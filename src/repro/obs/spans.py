@@ -1,0 +1,52 @@
+"""Wall-clock phase spans, accumulated per step window.
+
+``SpanClock`` is a context-manager stopwatch: entering
+``clock("sync")`` starts the phase, leaving it adds the elapsed wall
+seconds (and one call) to that phase's window bucket; ``drain()``
+hands the accumulated ``{phase: seconds}`` map to the step record and
+resets the window.  Phases nest freely and the set of names is open —
+the trainer uses ``step`` (the fused collect+learn jitted program —
+the two cannot be timed apart without a host barrier that would break
+the double-buffered overlap, see docs/observability.md), ``sync``,
+``checkpoint`` and ``eval``; the serve loop uses ``infer`` and
+``env``.
+
+Host-side only: never enter a span inside traced code (QF301 — the
+clock read would bake into the program).
+"""
+from __future__ import annotations
+
+import time
+from contextlib import contextmanager
+from typing import Dict
+
+# the trainer/serve taxonomy, for docs and the summary renderer; the
+# clock itself accepts any name
+TRAIN_PHASES = ("step", "sync", "eval", "checkpoint")
+SERVE_PHASES = ("infer", "env")
+
+
+class SpanClock:
+    def __init__(self):
+        self._s: Dict[str, float] = {}
+        self._n: Dict[str, int] = {}
+
+    @contextmanager
+    def __call__(self, phase: str):
+        t0 = time.perf_counter()
+        try:
+            yield
+        finally:
+            dt = time.perf_counter() - t0
+            self._s[phase] = self._s.get(phase, 0.0) + dt
+            self._n[phase] = self._n.get(phase, 0) + 1
+
+    def seconds(self, phase: str) -> float:
+        return self._s.get(phase, 0.0)
+
+    def drain(self) -> Dict[str, float]:
+        """Window flush: ``{phase: seconds}`` since the last drain."""
+        out = dict(self._s)
+        self._s.clear()
+        self._n.clear()
+        return out

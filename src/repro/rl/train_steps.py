@@ -28,6 +28,17 @@ Donation contracts (QF401):
 * the sharded value step (``make_sharded_value_iteration``) appends a
   per-slot ``alive`` arg but keeps the identical donation contract —
   the audit asserts donation survives the shard_map'd lowering too.
+
+Telemetry (``metrics=...``): each factory optionally threads a
+:mod:`repro.obs.metrics` buffer through the jitted step — appended as
+the LAST argument, donated, and returned last, exactly like replay
+state.  The metric updates consume already-computed traced values
+(``ret``/``n_ep``/replay fill) and feed nothing back into the training
+math, so the instrumented step stays bitwise identical to the
+uninstrumented one (docs/observability.md contract; test-asserted).
+With ``metrics=None`` (the default, and what the trace audit lowers)
+signatures and donation contracts are exactly the historical ones
+above.
 """
 from __future__ import annotations
 
@@ -39,6 +50,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.distributed.sharding import data_axes, shard_map
+from repro.obs.metrics import counter_add, gauge_max, gauge_set
 from repro.optim import adamw_update
 from repro.rl.actor_learner import (collect_sharded, collect_value,
                                     collect_value_sharded, fleet_mask,
@@ -53,12 +65,11 @@ from repro.rl.value import (ddpg_actor_loss, ddpg_critic_loss_td,
 
 def make_onpolicy_iteration(env, apply_fn, a_policy, mesh, dist, pcfg,
                             loss_fn, sched, ocfg, *, rollout_len: int,
-                            n_envs: int, n_slots: int):
+                            n_envs: int, n_slots: int, metrics=None):
     """One sharded-collect + minibatch-update step (ppo / a2c)."""
     learner_apply = lambda p, o: apply_fn(p, o, None)  # noqa: E731
 
-    @partial(jax.jit, donate_argnums=(1, 2, 3))
-    def iteration(params, opt, est, obs, packed, key, gmask, alive):
+    def body(params, opt, est, obs, packed, key, gmask, alive):
         k1, k2 = jax.random.split(key)
         res = collect_sharded(packed, env, apply_fn, a_policy, k1, est,
                               obs, rollout_len, mesh, dist)
@@ -79,20 +90,48 @@ def make_onpolicy_iteration(env, apply_fn, a_policy, mesh, dist, pcfg,
         ret, n_ep = episode_returns(res.traj)
         return params, opt, res.final_env, res.final_obs, ret, n_ep
 
+    if metrics is None:
+        return jax.jit(body, donate_argnums=(1, 2, 3))
+
+    @partial(jax.jit, donate_argnums=(1, 2, 3, 8))
+    def iteration(params, opt, est, obs, packed, key, gmask, alive,
+                  mbuf):
+        params, opt, est, obs, ret, n_ep = body(
+            params, opt, est, obs, packed, key, gmask, alive)
+        mbuf = counter_add(mbuf, "env_steps", rollout_len * n_envs)
+        mbuf = counter_add(mbuf, "episodes", n_ep)
+        mbuf = gauge_set(mbuf, "return_mean", ret)
+        mbuf = gauge_set(mbuf, "alive_frac",
+                         jnp.mean(alive.astype(jnp.float32)))
+        return params, opt, est, obs, ret, n_ep, mbuf
+
     return iteration
+
+
+def _value_metric_updates(mbuf, rb, *, env_steps, n_ep, ret, eps, buf):
+    """The value-family metric writes, shared by the single-device and
+    sharded steps (replay_size already sums a slot-leading state)."""
+    mbuf = counter_add(mbuf, "env_steps", env_steps)
+    mbuf = counter_add(mbuf, "episodes", n_ep)
+    mbuf = gauge_set(mbuf, "return_mean", ret)
+    mbuf = gauge_set(mbuf, "epsilon", eps)
+    mbuf = gauge_set(mbuf, "replay_size", replay_size(buf))
+    if rb.prioritized:
+        mbuf = gauge_max(mbuf, "replay_max_priority",
+                         jnp.max(buf.max_p))
+    return mbuf
 
 
 def make_value_iteration(env, agent, rb, a_policy, sched, ocfg, *,
                          algo: str, rollout_len: int,
                          updates_per_iter: int, per_beta0: float,
-                         beta_iters: int):
+                         beta_iters: int, metrics=None):
     """One collect-into-replay + sampled-updates step (dqn / qrdqn /
     ddpg)."""
     cfg = agent.cfg
     discrete = agent.discrete
 
-    @partial(jax.jit, donate_argnums=(1, 2, 3, 5, 6))
-    def iteration(params, target, opt, buf, packed, est, obs, key, it):
+    def body(params, target, opt, buf, packed, est, obs, key, it):
         k_collect, k_update = jax.random.split(key)
         eps = (epsilon(it * rollout_len, cfg) if discrete
                else jnp.zeros(()))
@@ -145,13 +184,29 @@ def make_value_iteration(env, agent, rb, a_policy, sched, ocfg, *,
         ret, n_ep = episode_returns_from(R, D | Tr)
         return params, target, opt, buf, est, obs, ret, n_ep
 
+    if metrics is None:
+        return jax.jit(body, donate_argnums=(1, 2, 3, 5, 6))
+
+    @partial(jax.jit, donate_argnums=(1, 2, 3, 5, 6, 9))
+    def iteration(params, target, opt, buf, packed, est, obs, key, it,
+                  mbuf):
+        n_envs = obs.shape[0]
+        eps = (epsilon(it * rollout_len, cfg) if discrete
+               else jnp.zeros(()))
+        params, target, opt, buf, est, obs, ret, n_ep = body(
+            params, target, opt, buf, packed, est, obs, key, it)
+        mbuf = _value_metric_updates(
+            mbuf, rb, env_steps=rollout_len * n_envs, n_ep=n_ep,
+            ret=ret, eps=eps, buf=buf)
+        return params, target, opt, buf, est, obs, ret, n_ep, mbuf
+
     return iteration
 
 
 def make_sharded_value_iteration(env, agent, srb, a_policy, sched, ocfg,
                                  mesh, *, algo: str, rollout_len: int,
                                  updates_per_iter: int, per_beta0: float,
-                                 beta_iters: int):
+                                 beta_iters: int, metrics=None):
     """The value-family step shard_mapped over the mesh's data axes.
 
     Device ``d`` collects its envs under its own behaviour stream,
@@ -267,9 +322,8 @@ def make_sharded_value_iteration(env, agent, srb, a_policy, sched, ocfg,
         out_specs=(P(), P(), P(), batch_spec),
         check_replication=False)
 
-    @partial(jax.jit, donate_argnums=(1, 2, 3, 5, 6))
-    def iteration(params, target, opt, buf, packed, est, obs, key, it,
-                  alive):
+    def body(params, target, opt, buf, packed, est, obs, key, it,
+             alive):
         k_collect, k_update = jax.random.split(key)
         eps = (epsilon(it * rollout_len, cfg) if discrete
                else jnp.zeros(()))
@@ -294,5 +348,23 @@ def make_sharded_value_iteration(env, agent, srb, a_policy, sched, ocfg,
                                              trans, k_update, it, alive)
         ret, n_ep = episode_returns_from(R, D | Tr)
         return params, target, opt, buf, est, obs, ret, n_ep
+
+    if metrics is None:
+        return jax.jit(body, donate_argnums=(1, 2, 3, 5, 6))
+
+    @partial(jax.jit, donate_argnums=(1, 2, 3, 5, 6, 10))
+    def iteration(params, target, opt, buf, packed, est, obs, key, it,
+                  alive, mbuf):
+        n_envs = obs.shape[0]
+        eps = (epsilon(it * rollout_len, cfg) if discrete
+               else jnp.zeros(()))
+        params, target, opt, buf, est, obs, ret, n_ep = body(
+            params, target, opt, buf, packed, est, obs, key, it, alive)
+        mbuf = _value_metric_updates(
+            mbuf, srb, env_steps=rollout_len * n_envs, n_ep=n_ep,
+            ret=ret, eps=eps, buf=buf)
+        mbuf = gauge_set(mbuf, "alive_frac",
+                         jnp.mean(alive.astype(jnp.float32)))
+        return params, target, opt, buf, est, obs, ret, n_ep, mbuf
 
     return iteration

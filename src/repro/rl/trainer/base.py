@@ -40,6 +40,8 @@ from repro.checkpoint import CheckpointManager
 from repro.distributed.sharding import data_axis_size
 from repro.launch.mesh import (describe, make_host_mesh,
                                make_production_mesh)
+from repro.obs import (Console, MetricSpec, ProfileWindow,
+                       RunTelemetry, SpanClock, flush)
 from repro.rl.actor_learner import FleetSync, sync_bytes
 from repro.rl.trainer.state import STATE_SCHEMA, TrainState
 
@@ -73,9 +75,8 @@ def resolve_mesh(mesh_kind: str, mesh_devices: Optional[int],
     if n_envs % n_slots != 0:
         raise ValueError(f"--n-envs {n_envs} must be divisible by the "
                          f"mesh's {n_slots} data slot(s)")
-    if verbose:
-        print(f"{describe(mesh)}: {n_slots} actor slot(s) x "
-              f"{n_envs // n_slots} envs")
+    Console(verbose).info(f"{describe(mesh)}: {n_slots} actor slot(s) "
+                          f"x {n_envs // n_slots} envs")
     return mesh, n_slots
 
 
@@ -100,7 +101,10 @@ class Trainer:
                  ckpt_dir: Optional[str], save_every: int,
                  log_every: int, verbose: bool, n_slots: int = 1,
                  max_lag: int = 1, fetch_lag: int = 0,
-                 barrier: bool = False):
+                 barrier: bool = False,
+                 metrics_dir: Optional[str] = None,
+                 profile_dir: Optional[str] = None,
+                 profile_start: int = 0, profile_steps: int = 1):
         self.iters = iters
         self.seed = seed
         self.key = jax.random.PRNGKey(seed)
@@ -108,10 +112,18 @@ class Trainer:
         self.save_every = save_every
         self.log_every = log_every
         self.verbose = verbose
+        self.console = Console(verbose)
         self.n_slots = n_slots
         self.max_lag = max_lag
         self.fetch_lag = fetch_lag
         self.barrier = barrier
+        self.metrics_dir = metrics_dir
+        self.profile_dir = profile_dir
+        self.profile_start = profile_start
+        self.profile_steps = profile_steps
+        # the family metric spec, resolved in train() when telemetry
+        # is on; None keeps the historical (uninstrumented) programs
+        self.metrics: Optional[MetricSpec] = None
         self.stage_list = [None]
         self.stage_names = ["all"]
 
@@ -123,8 +135,9 @@ class Trainer:
         raise NotImplementedError
 
     def step(self, iteration, state, packed, key, g: int, stage_ctx,
-             alive):
-        """Run one jitted iteration; returns (state, ret, n_ep)."""
+             alive, mbuf=None):
+        """Run one jitted iteration; returns ``(state, ret, n_ep)``,
+        plus the updated metric buffer when ``mbuf`` is threaded."""
         raise NotImplementedError
 
     def pack(self, state):
@@ -159,8 +172,25 @@ class Trainer:
     def header(self, state) -> Optional[str]:
         return None
 
-    def log_line(self, it, ret, n_ep, payload, fp32_eq, state,
-                 stage) -> str:
+    def metric_spec(self) -> Optional[MetricSpec]:
+        """The family's jit-threaded metric shape (None: no threaded
+        buffer even with telemetry on)."""
+        return None
+
+    def run_meta(self) -> dict:
+        """The ``meta`` record's ``run`` block."""
+        return {"family": self.family, "seed": self.seed,
+                "iters": self.iters, "n_slots": self.n_slots}
+
+    def host_metrics(self, state, metrics: dict) -> dict:
+        """Host-side gauges merged into each window record (families
+        add what the jit buffer does not carry, e.g. replay fill when
+        metrics are not threaded)."""
+        return {}
+
+    def log_line(self, it, ret, n_ep, metrics: dict, stage) -> str:
+        """Render the console line from the window's structured
+        metrics record."""
         raise NotImplementedError
 
     def export_state(self, state, state_out: Optional[dict]) -> None:
@@ -188,6 +218,7 @@ class Trainer:
         return self.state_from_legacy(legacy), md
 
     def train(self, state_out: Optional[dict] = None):
+        con = self.console
         state = self.init_state()
         start, mgr = 0, None
         if self.ckpt_dir:
@@ -196,49 +227,113 @@ class Trainer:
             if mgr.latest_step() is not None:
                 state, md = self.restore(mgr, state)
                 start = self.resume_start(md)
-                if self.verbose:
-                    print(self.resume_message(md, state, start))
+                con.info(self.resume_message(md, state, start))
+        tel = None
+        self.metrics = None
+        if self.metrics_dir:
+            # telemetry opens AFTER restore so the first window starts
+            # at the resume step — the sink appends, keeping windows
+            # contiguous across a restart
+            self.metrics = self.metric_spec()
+            tel = RunTelemetry(self.metrics_dir, run=self.run_meta(),
+                               start=start)
+        prof = (ProfileWindow(self.profile_dir, self.profile_start,
+                              self.profile_steps)
+                if self.profile_dir else None)
+        clock = tel.clock if tel else SpanClock()
         iteration = self.build_iteration()
+        mbuf = self.metrics.init() if self.metrics else None
         sync = FleetSync(self.n_slots, max_lag=self.max_lag)
-        if self.verbose:
-            head = self.header(state)
-            if head:
-                print(head)
+        head = self.header(state)
+        if head:
+            con.info(head)
         history = []
         total_payload = 0
+        w_payload = w_fp32 = 0
         t0 = time.time()
+        t_win = time.perf_counter()
         for si, stage in enumerate(self.stage_list):
             ctx = self.stage_setup(state, stage)
             for it in range(self.iters):
                 g = si * self.iters + it  # global step: stages never
                 if g < start:             # collide; resume lands
                     continue              # mid-stage, not at stage 1
-                sync.push(self.pack(state))
-                stale = sync.fetch(self.fetch_lag)
+                if prof:
+                    win = prof.tick(g)
+                    if win:
+                        if tel:
+                            tel.profile(prof.dir, win)
+                        con.info(f"profiler trace for steps "
+                                 f"[{win[0]}, {win[1]}] -> {prof.dir}")
+                with clock("sync"):
+                    sync.push(self.pack(state))
+                    stale = sync.fetch(self.fetch_lag)
                 payload, fp32_eq = sync_bytes(stale)
                 total_payload += payload
+                w_payload += payload
+                w_fp32 += fp32_eq
                 # key derived from the global step, not a running
                 # split: a resumed run at step g draws the same stream
                 # the uninterrupted run would have
                 sub = jax.random.fold_in(self.key, g)
-                state, ret, n_ep = self.step(iteration, state, stale,
-                                             sub, g, ctx, sync.alive())
-                if self.barrier:
-                    # lock-step: fence the dispatch stream so the next
-                    # collect cannot overlap this learner update (the
-                    # double-buffered mode omits exactly this)
-                    jax.block_until_ready((state, ret))
-                history.append(float(ret))
-                if self.verbose and (it % self.log_every == 0
-                                     or it == self.iters - 1):
-                    print(self.log_line(it, ret, n_ep, payload,
-                                        fp32_eq, state, stage))
+                with clock("step"):
+                    if mbuf is not None:
+                        state, ret, n_ep, mbuf = self.step(
+                            iteration, state, stale, sub, g, ctx,
+                            sync.alive(), mbuf)
+                    else:
+                        state, ret, n_ep = self.step(
+                            iteration, state, stale, sub, g, ctx,
+                            sync.alive())
+                    if self.barrier:
+                        # lock-step: fence the dispatch stream so the
+                        # next collect cannot overlap this learner
+                        # update (the double-buffered mode omits
+                        # exactly this)
+                        jax.block_until_ready((state, ret))
+                    # the host read of ret is the loop's pre-existing
+                    # per-iteration sync point — time it as the step
+                    ret_f = float(ret)
+                history.append(ret_f)
+                if it % self.log_every == 0 or it == self.iters - 1:
+                    metrics = {}
+                    hists = None
+                    if mbuf is not None:
+                        metrics, hists, mbuf = flush(self.metrics,
+                                                     mbuf)
+                    metrics.update(self.host_metrics(state, metrics))
+                    metrics["sync_payload_bytes"] = w_payload
+                    metrics["sync_fp32_bytes"] = w_fp32
+                    metrics["staleness_max"] = int(
+                        jax.device_get(sync.staleness()).max())
+                    metrics.setdefault(
+                        "alive_frac",
+                        float(jax.device_get(sync.alive()).mean()))
+                    wall = time.perf_counter() - t_win
+                    if "env_steps" in metrics and wall > 0:
+                        metrics["steps_per_s"] = round(
+                            metrics["env_steps"] / wall, 2)
+                    if tel:
+                        tel.step_flush(g, metrics, hists)
+                    con.info(self.log_line(it, ret_f, int(n_ep),
+                                           metrics, stage))
+                    w_payload = w_fp32 = 0
+                    t_win = time.perf_counter()
                 if mgr and mgr.should_save(g):
-                    mgr.save(g, state,
-                             metadata={**self.metadata(it, stage),
-                                       "schema": STATE_SCHEMA})
-        if self.verbose:
-            print(f"done in {time.time() - t0:.0f}s; "
-                  f"total sync payload {total_payload / 2**20:.1f} MiB")
+                    with clock("checkpoint"):
+                        mgr.save(g, state,
+                                 metadata={**self.metadata(it, stage),
+                                           "schema": STATE_SCHEMA})
+        if prof:
+            win = prof.stop()
+            if win:
+                if tel:
+                    tel.profile(prof.dir, win)
+                con.info(f"profiler trace for steps "
+                         f"[{win[0]}, {win[1]}] -> {prof.dir}")
+        if tel:
+            tel.close()
+        con.info(f"done in {time.time() - t0:.0f}s; "
+                 f"total sync payload {total_payload / 2**20:.1f} MiB")
         self.export_state(state, state_out)
         return state, history

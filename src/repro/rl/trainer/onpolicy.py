@@ -20,6 +20,7 @@ from repro.configs.e2hrl import HRLConfig
 from repro.core.policy import get_policy
 from repro.models import hrl
 from repro.nn.module import unbox
+from repro.obs import MetricSpec
 from repro.optim import AdamWConfig, adamw_init, constant
 from repro.rl import PPOConfig, init_envs
 from repro.rl.actor_learner import pack_weights
@@ -90,7 +91,10 @@ class OnPolicyTrainer(Trainer):
                  mesh_devices: Optional[int] = None,
                  log_every: int = 5, verbose: bool = True,
                  algo: str = "ppo", net: str = "mlp",
-                 frame_stack_k: int = 1):
+                 frame_stack_k: int = 1,
+                 metrics_dir: Optional[str] = None,
+                 profile_dir: Optional[str] = None,
+                 profile_start: int = 0, profile_steps: int = 1):
         if algo not in ON_POLICY_ALGOS:
             raise ValueError(f"rl_train drives the on-policy family "
                              f"{ON_POLICY_ALGOS}; use value_train for "
@@ -104,7 +108,11 @@ class OnPolicyTrainer(Trainer):
         super().__init__(iters=iters, seed=seed, ckpt_dir=ckpt_dir,
                          save_every=save_every, log_every=log_every,
                          verbose=verbose, max_lag=max_lag,
-                         fetch_lag=max_lag - 1, barrier=False)
+                         fetch_lag=max_lag - 1, barrier=False,
+                         metrics_dir=metrics_dir,
+                         profile_dir=profile_dir,
+                         profile_start=profile_start,
+                         profile_steps=profile_steps)
         if net == "conv":
             self.env = build_env(env_name, net, frame_stack_k)
         else:
@@ -115,6 +123,7 @@ class OnPolicyTrainer(Trainer):
                                  "knob and requires --net conv")
             self.env = make(env_name)
         self.env_name, self.n_envs = env_name, n_envs
+        self.algo = algo
         self.rollout_len = rollout_len
         self.dist = distribution_for(self.env.action_space)
         self._init_params, self.apply_fn = make_agent(
@@ -144,15 +153,31 @@ class OnPolicyTrainer(Trainer):
             self.env, self.apply_fn, self.a_policy, self.mesh,
             self.dist, self.pcfg, self.loss_fn, self.sched, self.ocfg,
             rollout_len=self.rollout_len, n_envs=self.n_envs,
-            n_slots=self.n_slots)
+            n_slots=self.n_slots, metrics=self.metrics)
+
+    def metric_spec(self) -> MetricSpec:
+        return MetricSpec(counters=("env_steps", "episodes"),
+                          gauges=("return_mean", "alive_frac"))
+
+    def run_meta(self) -> dict:
+        meta = super().run_meta()
+        meta.update(algo=self.algo, env=self.env_name,
+                    n_envs=self.n_envs, rollout_len=self.rollout_len)
+        return meta
 
     def pack(self, state):
         return pack_weights(state.params, self.comm)
 
-    def step(self, iteration, state, packed, key, g, stage_ctx, alive):
-        params, opt, est, obs, ret, n_ep = iteration(
-            state.params, state.opt, state.est, state.obs, packed, key,
-            stage_ctx, alive)
+    def step(self, iteration, state, packed, key, g, stage_ctx, alive,
+             mbuf=None):
+        args = (state.params, state.opt, state.est, state.obs, packed,
+                key, stage_ctx, alive)
+        if mbuf is not None:
+            params, opt, est, obs, ret, n_ep, mbuf = iteration(*args,
+                                                               mbuf)
+            return onpolicy_state(params, opt, est, obs), ret, n_ep, \
+                mbuf
+        params, opt, est, obs, ret, n_ep = iteration(*args)
         return onpolicy_state(params, opt, est, obs), ret, n_ep
 
     def stage_setup(self, state, stage):
@@ -212,12 +237,12 @@ class OnPolicyTrainer(Trainer):
         return (f"resumed at global iter {start} "
                 f"(stage {md_stage}, iter {it} done)")
 
-    def log_line(self, it, ret, n_ep, payload, fp32_eq, state, stage):
+    def log_line(self, it, ret, n_ep, metrics: dict, stage):
         sfx = f" [stage={stage}]" if stage else ""
         return (f"iter {it:4d}  return {float(ret):8.2f}  "
                 f"episodes {int(n_ep):4d}  "
-                f"sync {payload / 2**20:.2f} MiB "
-                f"(fp32 {fp32_eq / 2**20:.2f}){sfx}")
+                f"sync {metrics['sync_payload_bytes'] / 2**20:.2f} MiB "
+                f"(fp32 {metrics['sync_fp32_bytes'] / 2**20:.2f}){sfx}")
 
     def export_state(self, state, state_out) -> None:
         if state_out is not None:
@@ -234,7 +259,10 @@ def rl_train(env_name: str = "cartpole", agent: str = "mlp",
              log_every: int = 5, verbose: bool = True,
              algo: str = "ppo", net: str = "mlp",
              frame_stack_k: int = 1,
-             state_out: Optional[dict] = None):
+             state_out: Optional[dict] = None,
+             metrics_dir: Optional[str] = None,
+             profile_dir: Optional[str] = None,
+             profile_start: int = 0, profile_steps: int = 1):
     """On-policy training (paper Fig. 2 split over a device mesh) —
     see :class:`OnPolicyTrainer`.  Returns (params, history)."""
     trainer = OnPolicyTrainer(
@@ -244,6 +272,8 @@ def rl_train(env_name: str = "cartpole", agent: str = "mlp",
         two_stage=two_stage, ckpt_dir=ckpt_dir, save_every=save_every,
         mesh_kind=mesh_kind, mesh_devices=mesh_devices,
         log_every=log_every, verbose=verbose, algo=algo, net=net,
-        frame_stack_k=frame_stack_k)
+        frame_stack_k=frame_stack_k, metrics_dir=metrics_dir,
+        profile_dir=profile_dir, profile_start=profile_start,
+        profile_steps=profile_steps)
     state, history = trainer.train(state_out=state_out)
     return state.params, history

@@ -24,6 +24,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.policy import get_policy
+from repro.obs import MetricSpec
 from repro.optim import AdamWConfig, adamw_init, constant
 from repro.rl.actor_learner import pack_weights
 from repro.rl.envs import make
@@ -89,7 +90,10 @@ class ValueTrainer(Trainer):
                  tqc_drop: int = 0,
                  mesh_kind: Optional[str] = None,
                  mesh_devices: Optional[int] = None,
-                 sync: str = "lockstep", max_lag: int = 1):
+                 sync: str = "lockstep", max_lag: int = 1,
+                 metrics_dir: Optional[str] = None,
+                 profile_dir: Optional[str] = None,
+                 profile_start: int = 0, profile_steps: int = 1):
         if algo not in VALUE_ALGOS:
             raise ValueError(f"value_train drives {VALUE_ALGOS}, got "
                              f"{algo!r}; use rl_train for "
@@ -106,7 +110,11 @@ class ValueTrainer(Trainer):
                          verbose=verbose, max_lag=max_lag,
                          fetch_lag=1 if sync == "doublebuf" else 0,
                          barrier=(sync == "lockstep"
-                                  and mesh_kind is not None))
+                                  and mesh_kind is not None),
+                         metrics_dir=metrics_dir,
+                         profile_dir=profile_dir,
+                         profile_start=profile_start,
+                         profile_steps=profile_steps)
         self.algo, self.env_name, self.net = algo, env_name, net
         self.n_envs, self.rollout_len = n_envs, rollout_len
         self.frame_stack_k = frame_stack_k
@@ -171,12 +179,30 @@ class ValueTrainer(Trainer):
                 self.sched, self.ocfg, self.mesh, algo=self.algo,
                 rollout_len=self.rollout_len,
                 updates_per_iter=self.updates_per_iter,
-                per_beta0=self.per_beta0, beta_iters=self.beta_iters)
+                per_beta0=self.per_beta0, beta_iters=self.beta_iters,
+                metrics=self.metrics)
         return make_value_iteration(
             self.env, self.agent, self.rb, self.a_policy, self.sched,
             self.ocfg, algo=self.algo, rollout_len=self.rollout_len,
             updates_per_iter=self.updates_per_iter,
-            per_beta0=self.per_beta0, beta_iters=self.beta_iters)
+            per_beta0=self.per_beta0, beta_iters=self.beta_iters,
+            metrics=self.metrics)
+
+    def metric_spec(self) -> MetricSpec:
+        gauges = ["return_mean", "epsilon", "replay_size"]
+        if self.rb.prioritized:
+            gauges.append("replay_max_priority")
+        if self.mesh is not None:
+            gauges.append("alive_frac")
+        return MetricSpec(counters=("env_steps", "episodes"),
+                          gauges=tuple(gauges))
+
+    def run_meta(self) -> dict:
+        meta = super().run_meta()
+        meta.update(algo=self.algo, env=self.env_name, net=self.net,
+                    n_envs=self.n_envs, rollout_len=self.rollout_len,
+                    replay=self.replay, sync=self.sync_mode)
+        return meta
 
     def pack(self, state):
         # only the behaviour net ships to the fleet (ddpg: the actor
@@ -184,13 +210,19 @@ class ValueTrainer(Trainer):
         return pack_weights(self.agent.behaviour_subtree(state.params),
                             self.comm)
 
-    def step(self, iteration, state, packed, key, g, stage_ctx, alive):
+    def step(self, iteration, state, packed, key, g, stage_ctx, alive,
+             mbuf=None):
         args = (state.params, state.target, state.opt, state.replay,
                 packed, state.est, state.obs, key, jnp.asarray(g))
-        out = (iteration(*args, alive) if self.mesh is not None
-               else iteration(*args))
-        p, t, o, b, est, obs, ret, n_ep = out
-        return TrainState(p, t, o, b, est, obs), ret, n_ep
+        if self.mesh is not None:
+            args = args + (alive,)
+        if mbuf is not None:
+            args = args + (mbuf,)
+        out = iteration(*args)
+        p, t, o, b, est, obs, ret, n_ep = out[:8]
+        new = TrainState(p, t, o, b, est, obs)
+        return ((new, ret, n_ep) if mbuf is None
+                else (new, ret, n_ep, out[8]))
 
     def eval_policy(self, params, n_envs: int = 16,
                     n_steps: Optional[int] = None,
@@ -300,10 +332,18 @@ class ValueTrainer(Trainer):
                 f"n_step={self.agent.cfg.n_step}, {pol} behaviour "
                 f"actor, {rep} replay")
 
-    def log_line(self, it, ret, n_ep, payload, fp32_eq, state, stage):
+    def host_metrics(self, state, metrics: dict) -> dict:
+        # without the jit-threaded buffer the window record still
+        # carries the replay fill (one scalar host read, same value
+        # the gauge reports)
+        if "replay_size" in metrics:
+            return {}
+        return {"replay_size": int(replay_size(state.replay))}
+
+    def log_line(self, it, ret, n_ep, metrics: dict, stage):
         return (f"iter {it:4d}  return {float(ret):8.2f}  "
                 f"episodes {int(n_ep):4d}  "
-                f"replay {int(replay_size(state.replay)):6d}")
+                f"replay {int(metrics['replay_size']):6d}")
 
     def export_state(self, state, state_out) -> None:
         if state_out is not None:
@@ -328,7 +368,10 @@ def value_train(algo: str = "dqn", env_name: str = "cartpole",
                 state_out: Optional[dict] = None,
                 mesh_kind: Optional[str] = None,
                 mesh_devices: Optional[int] = None,
-                sync: str = "lockstep", max_lag: int = 1):
+                sync: str = "lockstep", max_lag: int = 1,
+                metrics_dir: Optional[str] = None,
+                profile_dir: Optional[str] = None,
+                profile_start: int = 0, profile_steps: int = 1):
     """Off-policy value-based training (paper Fig. 2 split, replay
     flavour) — see :class:`ValueTrainer`.  Returns (params, history);
     ``state_out`` (optional dict) receives the final
@@ -344,6 +387,8 @@ def value_train(algo: str = "dqn", env_name: str = "cartpole",
         per_alpha=per_alpha, per_beta0=per_beta0,
         per_beta_iters=per_beta_iters, tqc_drop=tqc_drop,
         mesh_kind=mesh_kind, mesh_devices=mesh_devices, sync=sync,
-        max_lag=max_lag)
+        max_lag=max_lag, metrics_dir=metrics_dir,
+        profile_dir=profile_dir, profile_start=profile_start,
+        profile_steps=profile_steps)
     state, history = trainer.train(state_out=state_out)
     return state.params, history

@@ -7,8 +7,10 @@ into power-of-two *buckets* (pad-to-bucket) so XLA compiles one program
 per bucket size instead of one per request count — the same trick the
 LM serving path uses for sequence lengths.  The engine records a wall
 latency per request (each request in a micro-batch pays that batch's
-inference wall) and reports actions/s, p50/p99 and the packed model
-footprint.
+inference wall) into a fixed-bucket histogram — bounded memory under
+production traffic, p50/p99 within one bucket's resolution — plus a
+per-bucket-size request counter, and reports actions/s, p50/p99 and
+the packed model footprint.
 """
 from __future__ import annotations
 
@@ -21,6 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.quantizer import quantized_nbytes
+from repro.obs import SCHEMA, FixedHistogram, JsonlSink, SpanClock
 from repro.rl.rollout import init_envs
 from repro.serve.loader import PRECISIONS, ServedPolicy
 
@@ -80,7 +83,10 @@ class PolicyServer:
         self.apply_policy = apply_policy
         self._key = jax.random.PRNGKey(seed)
         self._jit_cache: Dict[int, object] = {}
-        self._latencies_s: List[float] = []
+        # bounded telemetry state: O(buckets) forever, never a list
+        # that grows with traffic
+        self._latency = FixedHistogram()
+        self._bucket_requests: Dict[int, int] = {}
         self._requests = 0
         self._infer_s = 0.0
 
@@ -146,7 +152,9 @@ class PolicyServer:
             acts = jax.block_until_ready(
                 fn(self.served_params, block, sub))
             dt = time.perf_counter() - t0
-            self._latencies_s.extend([dt] * chunk)
+            self._latency.observe(dt, n=chunk)
+            self._bucket_requests[bucket] = (
+                self._bucket_requests.get(bucket, 0) + chunk)
             self._requests += chunk
             self._infer_s += dt
             outs.append(acts[:chunk])
@@ -161,17 +169,14 @@ class PolicyServer:
             self.policy.agent.behaviour_subtree(self.served_params))
 
     def stats(self) -> Dict[str, float]:
-        lat = np.asarray(self._latencies_s, np.float64)
         stored, fp32 = self.model_bytes()
         out = {
             "requests": float(self._requests),
             "infer_s": self._infer_s,
             "actions_per_s": (self._requests / self._infer_s
                               if self._infer_s > 0 else 0.0),
-            "p50_ms": float(np.percentile(lat, 50) * 1e3) if lat.size
-            else 0.0,
-            "p99_ms": float(np.percentile(lat, 99) * 1e3) if lat.size
-            else 0.0,
+            "p50_ms": self._latency.percentile(50) * 1e3,
+            "p99_ms": self._latency.percentile(99) * 1e3,
             "model_bytes": float(stored),
             "model_fp32_bytes": float(fp32),
             "compression": stored / fp32 if fp32 else 1.0,
@@ -179,8 +184,17 @@ class PolicyServer:
         }
         return out
 
+    def bucket_requests(self) -> Dict[int, int]:
+        """Requests answered per padded micro-batch bucket size."""
+        return dict(self._bucket_requests)
+
+    def latency_hist(self) -> Dict:
+        """The latency histogram's ``{edges, counts}`` (seconds)."""
+        return self._latency.to_dict()
+
     def reset_stats(self):
-        self._latencies_s = []
+        self._latency.reset()
+        self._bucket_requests = {}
         self._requests = 0
         self._infer_s = 0.0
 
@@ -198,12 +212,20 @@ class EpisodeStats:
 
 def serve_episodes(server: PolicyServer, episodes: int,
                    n_slots: int = 64, seed: int = 0,
-                   max_env_steps: Optional[int] = None) -> EpisodeStats:
+                   max_env_steps: Optional[int] = None,
+                   telemetry: Optional[JsonlSink] = None,
+                   flush_every: int = 0) -> EpisodeStats:
     """Run ``n_slots`` concurrent episode slots until ``episodes``
     episodes complete, every action answered through the server's
     micro-batching path.  Slots auto-reset (the envs reset internally
     on done/truncation), so a bank of 64 slots serves thousands of
     episodes back-to-back — the production-traffic shape.
+
+    With ``telemetry`` (a :class:`~repro.obs.sink.JsonlSink`) the loop
+    writes ``serve`` records: one per ``flush_every`` loop steps (0:
+    one record for the whole run), each carrying the window's request
+    count, latency histogram delta, per-bucket request counts and
+    ``infer``/``env`` phase spans.
     """
     if n_slots < 1:
         raise ValueError(f"n_slots must be >= 1, got {n_slots}")
@@ -219,22 +241,64 @@ def serve_episodes(server: PolicyServer, episodes: int,
     jax.block_until_ready(step_fn(est, server.act(obs)))
     server.reset_stats()
 
+    clock = SpanClock()
+    prev_r = 0
+    prev_inf = 0.0
+    prev_counts = np.array(server._latency.counts)
+    prev_buckets: Dict[int, int] = {}
+    prev_steps = prev_eps = 0
+
+    def flush_window(env_steps: int, done_episodes: int):
+        nonlocal prev_r, prev_inf, prev_counts, prev_buckets
+        nonlocal prev_steps, prev_eps
+        r1 = server._requests
+        if telemetry is None or r1 == prev_r:
+            return
+        counts = np.array(server._latency.counts)
+        buckets = server.bucket_requests()
+        telemetry.write({
+            "schema": SCHEMA, "kind": "serve", "t_wall": time.time(),
+            "window": [prev_r, r1],
+            "metrics": {"requests": r1 - prev_r,
+                        "infer_s": server._infer_s - prev_inf,
+                        "env_steps": env_steps - prev_steps,
+                        "episodes": done_episodes - prev_eps},
+            "hists": {"latency_s": {
+                "edges": [float(e) for e in server._latency.edges],
+                "counts": [int(c) for c in counts - prev_counts]}},
+            "buckets": {str(b): n - prev_buckets.get(b, 0)
+                        for b, n in buckets.items()
+                        if n - prev_buckets.get(b, 0)},
+            "spans": clock.drain(),
+        })
+        prev_r, prev_inf, prev_counts = r1, server._infer_s, counts
+        prev_buckets = buckets
+        prev_steps, prev_eps = env_steps, done_episodes
+
     done_episodes = 0
     env_steps = 0
+    loop_steps = 0
     acc = np.zeros(n_slots, np.float64)       # running per-slot return
     returns: List[float] = []
     t0 = time.perf_counter()
     while done_episodes < episodes and env_steps < cap:
-        acts = server.act(obs)
-        est, obs, r, d, tr, _ = step_fn(est, acts)
+        with clock("infer"):
+            acts = server.act(obs)
+        with clock("env"):
+            est, obs, r, d, tr, _ = step_fn(est, acts)
+            d, tr = np.asarray(d), np.asarray(tr)
         env_steps += n_slots
-        fin = np.asarray(d | tr)
+        loop_steps += 1
+        fin = d | tr
         acc += np.asarray(r, np.float64)
         if fin.any():
             returns.extend(acc[fin].tolist())
             done_episodes += int(fin.sum())
             acc[fin] = 0.0
+        if flush_every and loop_steps % flush_every == 0:
+            flush_window(env_steps, done_episodes)
     wall = time.perf_counter() - t0
+    flush_window(env_steps, done_episodes)
     mean_ret = float(np.mean(returns)) if returns else float("nan")
     return EpisodeStats(episodes=done_episodes, env_steps=env_steps,
                         mean_return=mean_ret, wall_s=wall,

@@ -113,6 +113,27 @@ def test_qf501_untagged_wrapper_fires_outside_wrap():
     assert got == [fixture_line("fx_qf501.py", "# QF501 positive")]
 
 
+def test_qf601_bare_print_fires_in_library_code():
+    findings = lint_fixtures("fx_qf601.py")
+    assert {f.rule for f in findings} == {"QF601"}
+    got = lines_of(findings, "QF601")
+    assert fixture_line("fx_qf601.py", "QF601 module positive") in got
+    assert fixture_line("fx_qf601.py", "QF601 positive") in got
+    assert fixture_line("fx_qf601.py", "QF601 method positive") in got
+    # negatives: Console / stream APIs are the sanctioned outputs
+    for needle in ("console.info", "stream.write"):
+        assert fixture_line("fx_qf601.py", needle) not in got
+    # method findings carry the class-qualified name for allowlisting
+    assert "Reporter.dump" in {f.qualname for f in findings}
+
+
+def test_qf601_exempt_paths_are_skipped():
+    findings = lint_fixtures(
+        "fx_qf601.py",
+        qf601_exempt=(FIXDIR + "/fx_qf601.py",))
+    assert not findings
+
+
 def test_rules_filter_restricts_the_run():
     findings = lint_fixtures("fx_qf101.py", "fx_qf301.py",
                              rules=("QF301",))

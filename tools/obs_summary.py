@@ -1,0 +1,54 @@
+"""Render obs/v1 JSONL telemetry runs as benchmark-style tables.
+
+    PYTHONPATH=src python tools/obs_summary.py /tmp/run/train.jsonl \
+        /tmp/run/serve.jsonl [--name dqn/cartpole] [--validate]
+
+Each file is folded into ``[table] name: k=v`` rows — the exact format
+:func:`benchmarks.common.emit` prints — so a live training/serving run
+reads the same way as a bench script:
+
+    [obs/train] dqn/cartpole: iters=40 env_steps=10240 steps_per_s=...
+    [obs/spans] dqn/cartpole: checkpoint=0.11 step=1.23 sync=0.04
+    [obs/serve] dqn/cartpole: requests=6400 actions_per_s=... p50_ms=...
+
+``--validate`` only checks every record against the schema (no
+rendering) — the CI gate for telemetry produced by the smoke runs.
+Exit 1 on any invalid record or unreadable file in either mode.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="summarize obs/v1 JSONL telemetry files")
+    ap.add_argument("files", nargs="+", help="JSONL files to render")
+    ap.add_argument("--name", default="",
+                    help="row name (default: from the meta record)")
+    ap.add_argument("--validate", action="store_true",
+                    help="schema-check only, render nothing")
+    args = ap.parse_args(argv)
+
+    from repro.obs import read_records, render, summarize
+
+    status = 0
+    for path in args.files:
+        try:
+            records = read_records(path)
+        except (OSError, ValueError) as e:
+            print(f"{path}: INVALID: {e}", file=sys.stderr)
+            status = 1
+            continue
+        if args.validate:
+            print(f"{path}: {len(records)} valid records")
+            continue
+        out = render(summarize(records, name=args.name))
+        if out:
+            print(out)
+    return status
+
+
+if __name__ == "__main__":
+    sys.exit(main())
